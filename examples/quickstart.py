@@ -1,0 +1,63 @@
+"""Quickstart: 3-client federated training with message quantization and
+
+container streaming, end to end through the real stack — Controller,
+Executors, the four filter points, SFM chunked wire — in ~1 minute on CPU.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.core.filters import two_way_quantization
+from repro.data import dirichlet_partition
+from repro.fl import FedAvgAggregator, FLSimulator, SimulationConfig, TrainExecutor
+from repro.models import create_model
+from repro.optim import adamw_init, adamw_update
+from repro.utils.trees import flatten_state_dict, unflatten_state_dict
+
+ROUNDS, LOCAL_STEPS, BATCH, SEQ = 5, 4, 8, 64
+
+
+def main() -> None:
+    cfg = get_smoke_config("llama3.2-1b").with_overrides(vocab_size=256, d_model=128, d_ff=256)
+    model = create_model(cfg)
+    datasets = dirichlet_partition(cfg.vocab_size, SEQ, num_clients=3, alpha=0.5)
+
+    @jax.jit
+    def local_step(params, opt, batch):
+        (loss, _), grads = jax.value_and_grad(model.loss, has_aux=True)(params, batch)
+        params, opt, _ = adamw_update(params, grads, opt, jnp.float32(3e-3))
+        return params, opt, loss
+
+    def make_client(name, data):
+        def train_fn(flat_params, rnd):
+            params = unflatten_state_dict({k: jnp.asarray(np.asarray(v)) for k, v in flat_params.items()})
+            opt = adamw_init(params)
+            loss = None
+            for _ in range(LOCAL_STEPS):
+                batch = {k: jnp.asarray(v) for k, v in data.sample(BATCH).items()}
+                params, opt, loss = local_step(params, opt, batch)
+            print(f"    {name}: round {rnd} local loss {float(loss):.4f}")
+            return flatten_state_dict(params), BATCH * LOCAL_STEPS, {"loss": float(loss)}
+
+        return TrainExecutor(name, train_fn)
+
+    filters = two_way_quantization("blockwise8")  # the paper's §II-C scheme
+    sim = FLSimulator(
+        [make_client(f"site-{i}", ds) for i, ds in enumerate(datasets)],
+        FedAvgAggregator(),
+        SimulationConfig(num_rounds=ROUNDS, transmission="container"),
+        server_filters=filters,
+        client_filters=filters,
+    )
+    init = flatten_state_dict(model.init(jax.random.PRNGKey(0)))
+    final = sim.run(init)
+    print(f"\nrounds: {ROUNDS} | messages: {sim.stats.messages} "
+          f"| wire bytes: {sim.stats.bytes_sent/1e6:.1f} MB (int8 wire)")
+    print(f"final global weights: {len(final)} tensors")
+
+
+if __name__ == "__main__":
+    main()

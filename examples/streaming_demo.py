@@ -1,0 +1,80 @@
+"""Paper §III / Table III demo: one global-weight transmission under the
+
+three streaming settings, with byte-exact peak transmission memory — plus
+the pull-mode ObjectRetriever and a real-TCP driver round trip.
+
+    PYTHONPATH=src python examples/streaming_demo.py
+"""
+import os
+import tempfile
+import time
+
+import numpy as np
+
+from repro.core import serialization as ser
+from repro.core import streaming as sm
+from repro.checkpoint import save_checkpoint
+from repro.checkpoint.streaming_ckpt import iter_checkpoint
+from repro.utils.mem import MemoryMeter
+
+
+def main() -> None:
+    rng = np.random.default_rng(0)
+    # embed-dominated model dict, like Llama's Table I layout
+    sd = {"embed_tokens": rng.standard_normal((16384, 512)).astype(np.float32)}
+    for i in range(8):
+        sd[f"layers.{i}.w"] = rng.standard_normal((512, 2048)).astype(np.float32)
+    total = sum(v.nbytes for v in sd.values())
+    print(f"model: {len(sd)} tensors, {total/1e6:.1f} MB "
+          f"(largest item {max(v.nbytes for v in sd.values())/1e6:.1f} MB)\n")
+
+    tmp = tempfile.mkdtemp()
+    src = os.path.join(tmp, "model.bin")
+    open(src, "wb").write(ser.serialize_container(sd))
+
+    for mode in ("regular", "container", "file"):
+        meter = MemoryMeter()
+        t0 = time.time()
+        with meter.activate():
+            driver = sm.LoopbackDriver()
+            if mode == "regular":
+                recv = sm.BlobReceiver(); driver.connect(recv.on_chunk)
+                sm.ObjectStreamer(driver).send_container(sd)
+            elif mode == "container":
+                recv = sm.ContainerReceiver(consume=lambda n, v: None)
+                driver.connect(recv.on_chunk)
+                sm.ContainerStreamer(driver).send_container(sd)
+            else:
+                recv = sm.FileReceiver(os.path.join(tmp, "out.bin"))
+                driver.connect(recv.on_chunk)
+                sm.FileStreamer(driver).send_file(src)
+        print(f"{mode:10s} peak transmission memory {meter.peak/1e6:8.2f} MB "
+              f"({time.time()-t0:.2f}s)")
+
+    # pull-mode retrieval (paper contribution 2: ObjectRetriever)
+    retr = sm.ObjectRetriever()
+    retr.register_container("global_weights", sd)
+    got = retr.retrieve("global_weights", mode="container")
+    assert set(got) == set(sd)
+    print("\nObjectRetriever: container pulled OK")
+
+    # streaming checkpoint: written item-by-item, servable by FileStreamer
+    ck = os.path.join(tmp, "ckpt.stream")
+    nbytes = save_checkpoint(ck, sd, fmt="nf4")  # 4-bit at rest
+    back = dict(iter_checkpoint(ck))  # streamed item-by-item off disk
+    err = max(float(np.max(np.abs(back[k] - sd[k]))) for k in sd)
+    print(f"streaming checkpoint: {nbytes/1e6:.1f} MB on disk (nf4), "
+          f"max dequant err {err:.3f}")
+
+    # driver swap: same streamer over real TCP
+    driver = sm.TCPDriver()
+    recv = sm.ContainerReceiver()
+    driver.connect(recv.on_chunk)
+    sm.ContainerStreamer(driver).send_container(sd)
+    driver.close()
+    assert set(recv.result) == set(sd)
+    print("TCP driver: container streamed over localhost OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,7 @@
+from repro.checkpoint.streaming_ckpt import (
+    load_checkpoint,
+    load_checkpoint_streaming,
+    save_checkpoint,
+)
+
+__all__ = ["save_checkpoint", "load_checkpoint", "load_checkpoint_streaming"]

@@ -1,0 +1,94 @@
+"""Streaming checkpointing — the paper's file/container streaming applied
+
+to persistence: the checkpoint is written **one state-dict item at a
+time** using the same framed item format as the wire (so a checkpoint
+file can be served directly by ``FileStreamer`` and consumed incrementally
+by ``ContainerReceiver`` — checkpoint transfer and message transfer are
+the same code path). Peak writer memory = one serialized item, never the
+whole model.
+
+Layout:  item_count (u32) | serialized items (see repro.core.serialization)
+Optionally each item is quantized on disk (4-bit checkpoints = the wire
+format at rest).
+"""
+from __future__ import annotations
+
+import os
+import struct
+from typing import Any, Callable, Dict, Iterator, Optional, Tuple
+
+import numpy as np
+
+from repro.core import serialization as ser
+from repro.core.quantization import QuantizedTensor, dequantize, quantize
+from repro.utils import mem
+from repro.utils.trees import flatten_state_dict, unflatten_state_dict
+
+_U32 = struct.Struct("<I")
+
+
+def save_checkpoint(path: str, tree: Any, *, fmt: Optional[str] = None) -> int:
+    """Write ``tree`` (nested pytree of arrays) item-by-item. Returns bytes.
+
+    ``fmt``: optional quantization format for at-rest compression.
+    """
+    flat = flatten_state_dict(tree)
+    total = 0
+    with open(path, "wb") as fh:
+        fh.write(_U32.pack(len(flat)))
+        for name, arr in flat.items():
+            value: Any = np.asarray(arr)
+            if fmt is not None and np.issubdtype(value.dtype, np.floating):
+                value = quantize(value, fmt)
+            item = ser.serialize_item(name, value)
+            with mem.record_hold(len(item)):
+                fh.write(item)
+            total += len(item)
+    return total + 4
+
+
+def iter_checkpoint(path: str) -> Iterator[Tuple[str, Any]]:
+    """Stream items off disk one at a time (peak memory = one item)."""
+    size = os.path.getsize(path)
+    with open(path, "rb") as fh:
+        (n,) = _U32.unpack(fh.read(4))
+        for _ in range(n):
+            (hlen,) = _U32.unpack(fh.read(4))
+            header = fh.read(hlen)
+            # re-parse via deserialize_item on a reconstructed buffer; body
+            # length is derivable from the header
+            import json
+
+            h = json.loads(header.decode("utf-8"))
+            if h["kind"] == "qtensor":
+                pshape = tuple(h["payload_shape"])
+                pdtype = np.dtype(h["payload_dtype"])
+                body_len = int(np.prod(pshape)) * pdtype.itemsize + h["absmax_len"]
+            else:
+                shape = tuple(h["shape"])
+                body_len = int(np.prod(shape)) * np.dtype(h["dtype"]).itemsize
+            body = fh.read(body_len)
+            buf = _U32.pack(hlen) + header + body
+            with mem.record_hold(len(buf)):
+                name, value, _ = ser.deserialize_item(buf)
+            if isinstance(value, QuantizedTensor):
+                value = np.asarray(dequantize(value))
+            yield name, value
+
+
+def load_checkpoint(path: str) -> Dict[str, Any]:
+    return unflatten_state_dict(dict(iter_checkpoint(path)))
+
+
+def load_checkpoint_streaming(
+    path: str, consume: Callable[[str, Any], None]
+) -> int:
+    """Incremental load: hand each item to ``consume`` without ever
+
+    materializing the whole dict (e.g. assigning into a pre-allocated
+    sharded param tree)."""
+    count = 0
+    for name, value in iter_checkpoint(path):
+        consume(name, value)
+        count += 1
+    return count

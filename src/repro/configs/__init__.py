@@ -1,0 +1,3 @@
+from repro.configs.base import ARCH_IDS, all_configs, get_config, get_smoke_config
+
+__all__ = ["ARCH_IDS", "all_configs", "get_config", "get_smoke_config"]

@@ -1,0 +1,49 @@
+"""Architecture config registry.
+
+Every assigned architecture has one module in this package defining
+``CONFIG`` (the exact full-scale spec, citing its source in
+``ModelConfig.source``) and ``SMOKE_OVERRIDES`` (the reduced variant used
+by CPU smoke tests: <=2-ish layers, d_model<=512, <=4 experts). Full
+configs are exercised only via the dry-run (ShapeDtypeStruct — no
+allocation).
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.models.base import ModelConfig
+
+ARCH_IDS: List[str] = [
+    "xlstm-125m",
+    "stablelm-1.6b",
+    "dbrx-132b",
+    "whisper-small",
+    "llama4-scout-17b-a16e",
+    "qwen1.5-0.5b",
+    "recurrentgemma-2b",
+    "granite-8b",
+    "phi-3-vision-4.2b",
+    "qwen2.5-32b",
+    # the paper's own experiment model
+    "llama3.2-1b",
+]
+
+_MOD = {a: a.replace("-", "_").replace(".", "_") for a in ARCH_IDS}
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    if arch_id not in _MOD:
+        raise KeyError(f"unknown arch {arch_id!r}; valid: {ARCH_IDS}")
+    mod = importlib.import_module(f"repro.configs.{_MOD[arch_id]}")
+    return mod.CONFIG
+
+
+def get_smoke_config(arch_id: str) -> ModelConfig:
+    """Reduced same-family variant for CPU smoke tests."""
+    mod = importlib.import_module(f"repro.configs.{_MOD[arch_id]}")
+    return mod.CONFIG.with_overrides(**mod.SMOKE_OVERRIDES)
+
+
+def all_configs() -> Dict[str, ModelConfig]:
+    return {a: get_config(a) for a in ARCH_IDS}

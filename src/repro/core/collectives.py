@@ -1,0 +1,120 @@
+"""Quantized / bucketed cross-pod collectives — the paper's two techniques
+
+mapped onto the TPU mesh (DESIGN.md §3):
+
+* **message quantization -> low-precision collectives**: model updates are
+  blockwise-int8 quantized *before* crossing the ``pod`` (federation)
+  axis; each pod dequantizes and aggregates at fp32 — exactly the paper's
+  two-way scheme (quantize on egress, dequantize on ingress, aggregate at
+  original precision). For P pods, the ICI wire cost of the round drops
+  from 2*4*N*(P-1)/P bytes/device (fp32 ring all-reduce) to
+  ~N*(P-1) bytes/device (int8 all-gather + local reduce): 4x at P=2,
+  plus a 1/1024 absmax overhead.
+
+* **streaming -> bucketed collectives**: the flattened update is processed
+  in fixed-size buckets so the live communication buffer is bounded by
+  the bucket size, not the model size — the container-streaming analogue.
+
+These run inside ``jax.shard_map`` over the ``pod`` axis; the inner
+(data/model) axes stay under GSPMD via ``auto``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ref as KREF
+
+BLOCK = KREF.BLOCK8
+
+
+def _flatten_tree(tree: Any) -> Tuple[jnp.ndarray, Any, list]:
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    sizes = [int(np.prod(l.shape)) for l in leaves]
+    flat = jnp.concatenate([l.reshape(-1).astype(jnp.float32) for l in leaves])
+    return flat, (treedef, [l.shape for l in leaves], [l.dtype for l in leaves]), sizes
+
+
+def _unflatten_tree(flat: jnp.ndarray, meta: Any, sizes: list) -> Any:
+    treedef, shapes, dtypes = meta
+    leaves = []
+    off = 0
+    for shape, dtype, size in zip(shapes, dtypes, sizes):
+        leaves.append(flat[off : off + size].reshape(shape).astype(dtype))
+        off += size
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def _quantize_flat(flat: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    n = flat.shape[0]
+    padded = int(np.ceil(n / BLOCK)) * BLOCK
+    if padded != n:
+        flat = jnp.pad(flat, (0, padded - n))
+    return KREF.quantize_blockwise8(flat.reshape(-1, BLOCK))
+
+
+def quantized_pod_mean(flat: jnp.ndarray, axis_name: str = "pod") -> jnp.ndarray:
+    """Mean of a flat fp32 vector across the pod axis with int8 wire format.
+
+    Egress: blockwise-int8 quantize. Wire: all_gather of (codes, absmax).
+    Ingress: dequantize each pod's payload and average at fp32 (paper's
+    aggregation-at-original-precision).
+    """
+    n = flat.shape[0]
+    q, absmax = _quantize_flat(flat)
+    q_all = jax.lax.all_gather(q, axis_name)            # (P, nblocks, BLOCK) int8
+    am_all = jax.lax.all_gather(absmax, axis_name)      # (P, nblocks)
+    P = q_all.shape[0]
+    w = jnp.full((P,), 1.0 / P, jnp.float32)
+    out = KREF.dequant_accumulate8(q_all, am_all, w)    # fused dequant+avg
+    return out.reshape(-1)[:n]
+
+
+def bucketed_quantized_pod_mean(
+    flat: jnp.ndarray, *, bucket_bytes: int = 64 << 20, axis_name: str = "pod"
+) -> jnp.ndarray:
+    """Streaming variant: quantize+gather+reduce one bucket at a time, so
+
+    the live int8 gather buffer is bounded by bucket_bytes * P (the
+    container-streaming analogue of paper §III). Uses lax.scan over equal
+    buckets -> one compiled bucket program regardless of model size.
+    """
+    n = flat.shape[0]
+    bucket_elems = max(BLOCK, (bucket_bytes // 4) // BLOCK * BLOCK)
+    padded = int(np.ceil(n / bucket_elems)) * bucket_elems
+    if padded != n:
+        flat = jnp.pad(flat, (0, padded - n))
+    nb = padded // bucket_elems
+    buckets = flat.reshape(nb, bucket_elems)
+
+    def one(carry, bucket):
+        return carry, quantized_pod_mean(bucket, axis_name)
+
+    _, out = jax.lax.scan(one, 0, buckets)
+    return out.reshape(-1)[:n]
+
+
+def quantized_fedavg_tree(
+    tree: Any,
+    *,
+    axis_name: str = "pod",
+    bucket_bytes: Optional[int] = None,
+) -> Any:
+    """FedAvg a pytree of updates across the pod axis (int8 wire)."""
+    flat, meta, sizes = _flatten_tree(tree)
+    if bucket_bytes:
+        out = bucketed_quantized_pod_mean(flat, bucket_bytes=bucket_bytes, axis_name=axis_name)
+    else:
+        out = quantized_pod_mean(flat, axis_name)
+    return _unflatten_tree(out, meta, sizes)
+
+
+def fp32_fedavg_tree(tree: Any, *, axis_name: str = "pod") -> Any:
+    """Paper-faithful fp32 baseline: plain pmean across pods."""
+    return jax.tree_util.tree_map(
+        lambda x: jax.lax.pmean(x.astype(jnp.float32), axis_name).astype(x.dtype), tree
+    )

@@ -1,0 +1,39 @@
+"""FL message types: 'Task Data' (server -> clients) and 'Task Result'
+
+(clients -> server), the two payloads of one federated round (paper §II-A).
+A message's ``payload`` is a flat state dict of arrays — or of
+:class:`~repro.core.quantization.QuantizedTensor` once a quantize filter
+has run. ``headers`` carry workflow metadata (round number, client name,
+sample counts, timing) and are never quantized.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Any, Dict, Mapping
+
+from repro.utils.trees import tree_bytes
+
+
+class MessageKind(enum.Enum):
+    TASK_DATA = "task_data"       # server -> client (global weights)
+    TASK_RESULT = "task_result"   # client -> server (local update)
+
+
+@dataclasses.dataclass
+class Message:
+    kind: MessageKind
+    payload: Dict[str, Any]
+    headers: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    def payload_bytes(self) -> int:
+        total = 0
+        for v in self.payload.values():
+            if hasattr(v, "total_bytes"):
+                total += v.total_bytes  # QuantizedTensor
+            else:
+                total += tree_bytes(v)
+        return total
+
+    def replace_payload(self, payload: Mapping[str, Any]) -> "Message":
+        return Message(self.kind, dict(payload), dict(self.headers))

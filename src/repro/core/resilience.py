@@ -1,0 +1,168 @@
+"""Operational resilience for the streaming layer (paper §I: "potential
+
+job disruptions due to network interruptions"; §V: "evaluation of
+operational resilience for the streaming mechanism").
+
+Components:
+
+* :class:`LossyDriver` — fault-injection wrapper for any driver: seeded
+  random chunk drop / duplication / reordering (the WAN misbehaviours an
+  FL deployment sees).
+* :class:`OrderedDeliveryBuffer` — receiver-side sequencer: deduplicates
+  and releases chunks to the real receiver strictly in ``seq`` order, and
+  reports the missing-seq set.
+* :class:`ReliableTransfer` — sender-side repair loop: records framed
+  chunks, transmits through the (possibly lossy) driver, then
+  retransmits whatever the receiver reports missing until the stream
+  completes (NVFlare's resend-on-gap, pull-based) or retries exhaust.
+
+Works with every streamer/receiver pair unchanged — resilience is a
+transport concern, invisible to the container/file layers above
+(the SFM layering claim of the paper).
+"""
+from __future__ import annotations
+
+import random
+from typing import Callable, Dict, List, Optional, Set
+
+from repro.core import streaming as sm
+
+
+class LossyDriver(sm.Driver):
+    """Randomly drops, duplicates and reorders chunks (seeded)."""
+
+    def __init__(
+        self,
+        inner: sm.Driver,
+        *,
+        drop_prob: float = 0.0,
+        dup_prob: float = 0.0,
+        reorder_window: int = 0,
+        seed: int = 0,
+    ) -> None:
+        self.inner = inner
+        self.drop_prob = drop_prob
+        self.dup_prob = dup_prob
+        self.reorder_window = reorder_window
+        self._rng = random.Random(seed)
+        self._pending: List[sm.Chunk] = []
+
+    def connect(self, on_chunk: Callable[[sm.Chunk], None]) -> None:
+        self.inner.connect(on_chunk)
+
+    def _emit(self, chunk: sm.Chunk) -> None:
+        if self._rng.random() < self.drop_prob:
+            return
+        self.inner.send(chunk)
+        if self._rng.random() < self.dup_prob:
+            self.inner.send(chunk)
+
+    def send(self, chunk: sm.Chunk) -> None:
+        if self.reorder_window > 0:
+            self._pending.append(chunk)
+            if len(self._pending) >= self.reorder_window:
+                self._rng.shuffle(self._pending)
+                for c in self._pending:
+                    self._emit(c)
+                self._pending.clear()
+        else:
+            self._emit(chunk)
+
+    def flush(self) -> None:
+        for c in self._pending:
+            self._emit(c)
+        self._pending.clear()
+        if hasattr(self.inner, "flush"):
+            self.inner.flush()
+
+    def close(self) -> None:
+        self.flush()
+        self.inner.close()
+
+
+class OrderedDeliveryBuffer:
+    """Dedup + in-order release to the wrapped receiver callback."""
+
+    def __init__(self, on_chunk: Callable[[sm.Chunk], None]) -> None:
+        self._on_chunk = on_chunk
+        self._buffer: Dict[int, sm.Chunk] = {}
+        self._next_seq = 0
+        self._eof_seq: Optional[int] = None
+        self.complete = False
+
+    def on_chunk(self, chunk: sm.Chunk) -> None:
+        if chunk.seq < self._next_seq or chunk.seq in self._buffer:
+            return  # duplicate
+        self._buffer[chunk.seq] = chunk
+        if chunk.eof:
+            self._eof_seq = chunk.seq
+        while self._next_seq in self._buffer:
+            c = self._buffer.pop(self._next_seq)
+            self._on_chunk(c)
+            self._next_seq += 1
+        if self._eof_seq is not None and self._next_seq > self._eof_seq:
+            self.complete = True
+
+    def missing(self) -> Set[int]:
+        """Known gaps below the highest seq seen (or below eof)."""
+        high = self._eof_seq if self._eof_seq is not None else (
+            max(self._buffer) if self._buffer else self._next_seq - 1
+        )
+        return {
+            s for s in range(self._next_seq, high + 1) if s not in self._buffer
+        }
+
+
+class ReliableTransfer:
+    """Record-and-repair send of one container/file stream."""
+
+    def __init__(self, driver: sm.Driver, chunk_size: int = sm.DEFAULT_CHUNK_SIZE) -> None:
+        self.driver = driver
+        self.chunk_size = chunk_size
+        self.retransmits = 0
+
+    def send_container(
+        self,
+        sd,
+        receiver,
+        *,
+        mode: str = "container",
+        max_rounds: int = 20,
+    ) -> bool:
+        """Returns True when the receiver's stream completed."""
+        sent: Dict[int, sm.Chunk] = {}
+        buffer = OrderedDeliveryBuffer(receiver.on_chunk)
+
+        class _Recording(sm.Driver):
+            def __init__(self, inner: sm.Driver) -> None:
+                self.inner = inner
+
+            def connect(self, cb):  # pragma: no cover - wired below
+                self.inner.connect(cb)
+
+            def send(self, chunk: sm.Chunk) -> None:
+                sent[chunk.seq] = chunk
+                self.inner.send(chunk)
+
+        self.driver.connect(buffer.on_chunk)
+        recording = _Recording(self.driver)
+        if mode == "container":
+            sm.ContainerStreamer(recording, self.chunk_size).send_container(sd)
+        else:
+            sm.ObjectStreamer(recording, self.chunk_size).send_container(sd)
+        if hasattr(self.driver, "flush"):
+            self.driver.flush()
+
+        rounds = 0
+        while not buffer.complete and rounds < max_rounds:
+            gaps = buffer.missing()
+            if not gaps and buffer._eof_seq is None:
+                # eof itself was lost: resend the tail
+                gaps = {max(sent)}
+            for seq in sorted(gaps):
+                self.driver.send(sent[seq])
+                self.retransmits += 1
+            if hasattr(self.driver, "flush"):
+                self.driver.flush()
+            rounds += 1
+        return buffer.complete

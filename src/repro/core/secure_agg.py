@@ -1,0 +1,121 @@
+"""Secure aggregation (paper §V: "explicitly demonstrate compatibility
+
+with other privacy-preserving mechanisms").
+
+Pairwise additive masking on an integer grid (Bonawitz et al. style, the
+crypto exchanged out-of-band): each ordered client pair (i, j) derives a
+shared mask stream from a common seed; client i adds it, client j
+subtracts it, all arithmetic in int64 mod 2**32 over a fixed-point grid.
+Individual Task Results are indistinguishable from noise at the server;
+the *sum* telescopes exactly, so FedAvg over the unmasked grid values is
+recovered bit-exactly.
+
+Composition with the paper's stack: masking runs at TASK_RESULT_OUT
+*after* any DP filter and *instead of* float quantization (SecAgg's grid
+is itself an int representation — the wire carries int32, a 4x reduction
+vs fp32, same as blockwise8). The server-side unmask+aggregate consumes
+masked messages via :class:`SecureAggregator`.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Sequence
+
+import numpy as np
+
+from repro.core.filters import Filter
+from repro.core.messages import Message
+
+MOD = np.int64(1) << 32
+SCALE = float(1 << 16)  # fixed-point: ~1.5e-5 resolution, +-32k range
+
+
+def _pair_seed(base_seed: int, i: int, j: int, name: str, rnd: int) -> np.random.Generator:
+    lo, hi = (i, j) if i < j else (j, i)
+    return np.random.default_rng(
+        abs(hash((base_seed, lo, hi, name, rnd))) % (2**63)
+    )
+
+
+def _to_grid(x: np.ndarray) -> np.ndarray:
+    return np.round(np.asarray(x, np.float64) * SCALE).astype(np.int64) % MOD
+
+
+def _from_grid(g: np.ndarray) -> np.ndarray:
+    g = np.asarray(g, np.int64) % MOD
+    g = np.where(g >= MOD // 2, g - MOD, g)  # recentre
+    return (g.astype(np.float64) / SCALE).astype(np.float32)
+
+
+class SecureMaskFilter(Filter):
+    """Client-side: fixed-point encode + pairwise masks (mod 2^32)."""
+
+    def __init__(self, client_index: int, all_clients: Sequence[int], base_seed: int = 0) -> None:
+        self.client_index = client_index
+        self.all_clients = list(all_clients)
+        self.base_seed = base_seed
+
+    def process(self, message: Message) -> Message:
+        rnd = int(message.headers.get("round", 0))
+        out: Dict[str, Any] = {}
+        for name, value in message.payload.items():
+            arr = np.asarray(value)
+            if not np.issubdtype(arr.dtype, np.floating):
+                out[name] = value
+                continue
+            g = _to_grid(arr)
+            for other in self.all_clients:
+                if other == self.client_index:
+                    continue
+                mask = _pair_seed(self.base_seed, self.client_index, other, name, rnd).integers(
+                    0, int(MOD), size=arr.shape, dtype=np.int64
+                )
+                if self.client_index < other:
+                    g = (g + mask) % MOD
+                else:
+                    g = (g - mask) % MOD
+            out[name] = g.astype(np.uint32)  # int32 wire (4 B/param)
+        msg = message.replace_payload(out)
+        msg.headers["secure_masked"] = True
+        return msg
+
+
+class SecureAggregator:
+    """Server-side: sums masked grids (masks telescope to zero) and
+
+    decodes the mean. Requires every configured client to report —
+    the standard SecAgg liveness assumption."""
+
+    def __init__(self, num_clients: int) -> None:
+        self.num_clients = num_clients
+        self._sum: Dict[str, np.ndarray] = {}
+        self._weights: List[float] = []
+        self._extra: Dict[str, Any] = {}
+
+    def accept(self, result: Message) -> None:
+        assert result.headers.get("secure_masked"), "SecureAggregator needs masked results"
+        for name, value in result.payload.items():
+            arr = np.asarray(value)
+            if arr.dtype == np.uint32:
+                g = arr.astype(np.int64)
+                if name in self._sum:
+                    self._sum[name] = (self._sum[name] + g) % MOD
+                else:
+                    self._sum[name] = g % MOD
+            else:
+                self._extra[name] = value
+        self._weights.append(float(result.headers.get("num_samples", 1)))
+
+    def finish(self) -> Dict[str, np.ndarray]:
+        if len(self._weights) != self.num_clients:
+            raise RuntimeError(
+                f"SecAgg needs all {self.num_clients} clients, got {len(self._weights)}"
+            )
+        out = {
+            name: _from_grid(total) / self.num_clients
+            for name, total in self._sum.items()
+        }
+        out.update(self._extra)
+        self._sum = {}
+        self._weights = []
+        self._extra = {}
+        return out

@@ -1,0 +1,118 @@
+"""Framed binary serialization for FL messages (FOBS analogue).
+
+NVFlare serializes messages with FOBS; we implement a small deterministic
+framed format so that message sizes are byte-exact and auditable:
+
+    item  := header_len (u32 LE) | header (utf-8 JSON) | payload bytes
+    blob  := n_items (u32 LE) | item*
+
+The header carries name/shape/dtype plus quantization metadata for
+:class:`~repro.core.quantization.QuantizedTensor` items. Payload bytes are
+the raw array buffer (C-order). No pickling — wire format is portable and
+safe to parse from untrusted peers.
+"""
+from __future__ import annotations
+
+import json
+import struct
+from typing import Any, Dict, Iterator, Mapping, Tuple
+
+import numpy as np
+
+from repro.core.quantization import QuantizedTensor
+from repro.utils import mem
+
+_U32 = struct.Struct("<I")
+
+
+def _arr_bytes(a: Any) -> bytes:
+    return np.ascontiguousarray(np.asarray(a)).tobytes()
+
+
+def serialize_item(name: str, value: Any) -> bytes:
+    """Serialize one state-dict item (array or QuantizedTensor)."""
+    if isinstance(value, QuantizedTensor):
+        payload = _arr_bytes(value.payload)
+        absmax = _arr_bytes(value.absmax) if value.absmax is not None else b""
+        header = {
+            "kind": "qtensor",
+            "name": name,
+            "fmt": value.fmt,
+            "payload_shape": list(value.payload.shape),
+            "payload_dtype": str(np.asarray(value.payload).dtype),
+            "absmax_len": len(absmax),
+            "absmax_shape": list(value.absmax.shape) if value.absmax is not None else [],
+            "orig_shape": list(value.orig_shape),
+            "orig_dtype": str(np.dtype(value.orig_dtype)),
+        }
+        body = payload + absmax
+    else:
+        arr = np.asarray(value)
+        header = {
+            "kind": "array",
+            "name": name,
+            "shape": list(arr.shape),
+            "dtype": str(arr.dtype),
+        }
+        body = _arr_bytes(arr)
+    hbytes = json.dumps(header, sort_keys=True).encode("utf-8")
+    return _U32.pack(len(hbytes)) + hbytes + body
+
+
+def deserialize_item(buf: bytes) -> Tuple[str, Any, int]:
+    """Parse one item from the head of ``buf``; returns (name, value, consumed)."""
+    (hlen,) = _U32.unpack_from(buf, 0)
+    header = json.loads(buf[4 : 4 + hlen].decode("utf-8"))
+    off = 4 + hlen
+    if header["kind"] == "qtensor":
+        pshape = tuple(header["payload_shape"])
+        pdtype = np.dtype(header["payload_dtype"])
+        pbytes = int(np.prod(pshape)) * pdtype.itemsize if pshape else pdtype.itemsize
+        payload = np.frombuffer(buf, pdtype, count=int(np.prod(pshape)), offset=off).reshape(pshape)
+        off += pbytes
+        absmax = None
+        if header["absmax_len"]:
+            ashape = tuple(header["absmax_shape"])
+            absmax = np.frombuffer(buf, np.float32, count=int(np.prod(ashape)), offset=off).reshape(ashape)
+            off += header["absmax_len"]
+        value: Any = QuantizedTensor(
+            payload, absmax, header["fmt"], tuple(header["orig_shape"]), np.dtype(header["orig_dtype"])
+        )
+        return header["name"], value, off
+    shape = tuple(header["shape"])
+    dtype = np.dtype(header["dtype"])
+    count = int(np.prod(shape)) if shape else 1
+    arr = np.frombuffer(buf, dtype, count=count, offset=off).reshape(shape)
+    return header["name"], arr, off + count * dtype.itemsize
+
+
+def serialize_container(sd: Mapping[str, Any]) -> bytes:
+    """Whole-message serialization (the *regular transmission* path —
+
+    materializes the full blob; registers it with the MemoryMeter)."""
+    parts = [_U32.pack(len(sd))]
+    parts.extend(serialize_item(name, value) for name, value in sd.items())
+    blob = b"".join(parts)
+    mem.record_alloc(len(blob))
+    return blob
+
+
+def deserialize_container(blob: bytes) -> Dict[str, Any]:
+    (n,) = _U32.unpack_from(blob, 0)
+    out: Dict[str, Any] = {}
+    off = 4
+    for _ in range(n):
+        name, value, consumed = deserialize_item(blob[off:])
+        out[name] = value
+        off += consumed
+    return out
+
+
+def iter_serialized_items(sd: Mapping[str, Any]) -> Iterator[Tuple[str, bytes]]:
+    """Container-streaming producer: yields one serialized item at a time
+
+    (peak live bytes = largest single item, the paper's §III claim)."""
+    for name, value in sd.items():
+        item = serialize_item(name, value)
+        with mem.record_hold(len(item)):
+            yield name, item

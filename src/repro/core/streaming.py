@@ -1,0 +1,378 @@
+"""SFM-style streaming layer (paper §I Fig. 1 and §III).
+
+Layering (mirrors NVFlare):
+
+* **Frames** — :class:`Chunk`: fixed-size (default 1 MiB) framed slices of
+  a logical stream, carrying (stream_id, seq, eof) headers.
+* **Drivers** — transport plugins. Upper layers never see the transport
+  (paper: "switch between gRPC, TCP, HTTP ... without any changes"):
+  :class:`LoopbackDriver` (in-process queue), :class:`FileSpoolDriver`
+  (spools frames to disk — models a store-and-forward relay),
+  :class:`TCPDriver` (real localhost sockets).
+* **Streamers** — three transmission modes with distinct peak-memory
+  envelopes (paper Fig. 3):
+
+  - :class:`ObjectStreamer` (*regular*): serialize whole dict -> one blob
+    lives in memory (peak ~ model size).
+  - :class:`ContainerStreamer`: serialize one dict item at a time (peak ~
+    largest item).
+  - :class:`FileStreamer`: stream a file chunk-by-chunk (peak ~ chunk).
+
+* **ObjectRetriever** — pull-mode API: the holder registers an object, the
+  peer retrieves it over any streamer; eases integration with existing
+  workflows (paper contribution 2).
+
+Every buffer the layer holds live registers with the active
+:class:`~repro.utils.mem.MemoryMeter`, which is how the Table III
+benchmark measures the three envelopes deterministically.
+"""
+from __future__ import annotations
+
+import dataclasses
+import io
+import os
+import queue
+import socket
+import struct
+import threading
+import uuid
+from typing import Any, Callable, Dict, Iterator, Mapping, Optional, Tuple
+
+from repro.core import serialization as ser
+from repro.utils import mem
+
+DEFAULT_CHUNK_SIZE = 1 << 20  # 1 MiB, the paper's default
+
+_HDR = struct.Struct("<16sIIB")  # stream_id, seq, payload_len, flags
+FLAG_EOF = 1
+FLAG_ITEM_END = 2  # container streaming: item boundary marker
+
+
+@dataclasses.dataclass(frozen=True)
+class Chunk:
+    stream_id: bytes          # 16-byte uuid
+    seq: int
+    payload: bytes
+    flags: int = 0
+
+    def encode(self) -> bytes:
+        return _HDR.pack(self.stream_id, self.seq, len(self.payload), self.flags) + self.payload
+
+    @classmethod
+    def decode(cls, buf: bytes) -> "Chunk":
+        sid, seq, plen, flags = _HDR.unpack_from(buf, 0)
+        return cls(sid, seq, buf[_HDR.size : _HDR.size + plen], flags)
+
+    @property
+    def eof(self) -> bool:
+        return bool(self.flags & FLAG_EOF)
+
+    @property
+    def item_end(self) -> bool:
+        return bool(self.flags & FLAG_ITEM_END)
+
+
+# ---------------------------------------------------------------------------
+# Drivers (SFM transport plugins)
+# ---------------------------------------------------------------------------
+
+class Driver:
+    """Transport interface: push chunks, deliver to a registered callback."""
+
+    def connect(self, on_chunk: Callable[[Chunk], None]) -> None:
+        self._on_chunk = on_chunk
+
+    def send(self, chunk: Chunk) -> None:
+        raise NotImplementedError
+
+    def close(self) -> None:  # pragma: no cover - default no-op
+        pass
+
+
+class LoopbackDriver(Driver):
+    """Synchronous in-process delivery (the simulator default)."""
+
+    def send(self, chunk: Chunk) -> None:
+        self._on_chunk(chunk)
+
+
+class FileSpoolDriver(Driver):
+    """Spools every frame to a directory, then replays on ``flush()``.
+
+    Models a store-and-forward relay; also exercises frame encode/decode.
+    """
+
+    def __init__(self, spool_dir: str) -> None:
+        self.spool_dir = spool_dir
+        os.makedirs(spool_dir, exist_ok=True)
+        self._count = 0
+
+    def send(self, chunk: Chunk) -> None:
+        path = os.path.join(self.spool_dir, f"{self._count:08d}.frame")
+        with open(path, "wb") as fh:
+            fh.write(chunk.encode())
+        self._count += 1
+
+    def flush(self) -> None:
+        for i in range(self._count):
+            path = os.path.join(self.spool_dir, f"{i:08d}.frame")
+            with open(path, "rb") as fh:
+                self._on_chunk(Chunk.decode(fh.read()))
+            os.unlink(path)
+        self._count = 0
+
+
+class TCPDriver(Driver):
+    """Real localhost sockets: sender connects to a receiver thread.
+
+    Demonstrates SFM's driver-swap claim — the streamers run unchanged
+    over TCP instead of loopback.
+    """
+
+    def __init__(self, host: str = "127.0.0.1", port: int = 0) -> None:
+        self._srv = socket.create_server((host, port))
+        self.address = self._srv.getsockname()
+        self._sock: Optional[socket.socket] = None
+        self._thread: Optional[threading.Thread] = None
+        self._done = threading.Event()
+
+    def connect(self, on_chunk: Callable[[Chunk], None]) -> None:
+        super().connect(on_chunk)
+
+        def serve() -> None:
+            conn, _ = self._srv.accept()
+            with conn:
+                fh = conn.makefile("rb")
+                while True:
+                    hdr = fh.read(_HDR.size)
+                    if len(hdr) < _HDR.size:
+                        break
+                    sid, seq, plen, flags = _HDR.unpack(hdr)
+                    payload = fh.read(plen)
+                    chunk = Chunk(sid, seq, payload, flags)
+                    self._on_chunk(chunk)
+                    if chunk.eof:
+                        break
+            self._done.set()
+
+        self._thread = threading.Thread(target=serve, daemon=True)
+        self._thread.start()
+
+    def send(self, chunk: Chunk) -> None:
+        if self._sock is None:
+            self._sock = socket.create_connection(self.address)
+        self._sock.sendall(chunk.encode())
+
+    def close(self) -> None:
+        if self._sock is not None:
+            self._sock.close()
+        self._done.wait(timeout=30)
+        self._srv.close()
+
+
+# ---------------------------------------------------------------------------
+# Receivers (re-assembly with mode-specific memory envelopes)
+# ---------------------------------------------------------------------------
+
+class BlobReceiver:
+    """Regular transmission receiver: accumulates the whole blob."""
+
+    def __init__(self) -> None:
+        self._parts: list[bytes] = []
+        self._size = 0
+        self.result: Optional[Dict[str, Any]] = None
+
+    def on_chunk(self, chunk: Chunk) -> None:
+        self._parts.append(chunk.payload)
+        mem.record_alloc(len(chunk.payload))
+        self._size += len(chunk.payload)
+        if chunk.eof:
+            blob = b"".join(self._parts)
+            mem.record_alloc(len(blob))  # join materializes a second copy
+            self.result = ser.deserialize_container(blob)
+            mem.record_free(len(blob) + self._size)
+            self._parts.clear()
+
+
+class ContainerReceiver:
+    """Container-streaming receiver: holds at most one item's bytes.
+
+    ``consume`` receives each (name, value) as soon as its item completes
+    — enabling *incremental* downstream processing (e.g. streaming FedAvg)
+    without ever materializing the full dict. If ``consume`` is omitted the
+    items are collected into ``result`` (arrays themselves must live
+    somewhere; the *transmission* overhead stays one item).
+    """
+
+    def __init__(self, consume: Optional[Callable[[str, Any], None]] = None) -> None:
+        self._parts: list[bytes] = []
+        self._size = 0
+        self._consume = consume
+        self.result: Dict[str, Any] = {}
+        self.done = False
+
+    def on_chunk(self, chunk: Chunk) -> None:
+        self._parts.append(chunk.payload)
+        mem.record_alloc(len(chunk.payload))
+        self._size += len(chunk.payload)
+        if chunk.item_end:
+            buf = b"".join(self._parts)
+            name, value, _ = ser.deserialize_item(buf)
+            mem.record_free(self._size)
+            self._parts.clear()
+            self._size = 0
+            if self._consume is not None:
+                self._consume(name, value)
+            else:
+                self.result[name] = value
+        if chunk.eof:
+            self.done = True
+
+
+class FileReceiver:
+    """File-streaming receiver: writes each chunk straight to disk."""
+
+    def __init__(self, out_path: str) -> None:
+        self.out_path = out_path
+        self._fh = open(out_path, "wb")
+        self.done = False
+
+    def on_chunk(self, chunk: Chunk) -> None:
+        with mem.record_hold(len(chunk.payload)):
+            self._fh.write(chunk.payload)
+        if chunk.eof:
+            self._fh.close()
+            self.done = True
+
+
+# ---------------------------------------------------------------------------
+# Streamers (senders)
+# ---------------------------------------------------------------------------
+
+def _chunk_iter(blob: bytes, chunk_size: int) -> Iterator[Tuple[bytes, bool]]:
+    for off in range(0, len(blob), chunk_size):
+        part = blob[off : off + chunk_size]
+        yield part, off + chunk_size >= len(blob)
+    if not blob:
+        yield b"", True
+
+
+class ObjectStreamer:
+    """Regular transmission: whole container serialized, then chunked."""
+
+    def __init__(self, driver: Driver, chunk_size: int = DEFAULT_CHUNK_SIZE) -> None:
+        self.driver = driver
+        self.chunk_size = chunk_size
+
+    def send_container(self, sd: Mapping[str, Any]) -> bytes:
+        sid = uuid.uuid4().bytes
+        blob = ser.serialize_container(sd)  # registers full-blob alloc
+        seq = 0
+        for part, last in _chunk_iter(blob, self.chunk_size):
+            self.driver.send(Chunk(sid, seq, part, FLAG_EOF if last else 0))
+            seq += 1
+        mem.record_free(len(blob))
+        return sid
+
+
+class ContainerStreamer:
+    """Paper §III: serialize **one parameter-dict item at a time**."""
+
+    def __init__(self, driver: Driver, chunk_size: int = DEFAULT_CHUNK_SIZE) -> None:
+        self.driver = driver
+        self.chunk_size = chunk_size
+
+    def send_container(self, sd: Mapping[str, Any]) -> bytes:
+        sid = uuid.uuid4().bytes
+        seq = 0
+        names = list(sd.keys())
+        for i, (name, item) in enumerate(ser.iter_serialized_items(sd)):
+            last_item = i == len(names) - 1
+            for part, item_last in _chunk_iter(item, self.chunk_size):
+                flags = 0
+                if item_last:
+                    flags |= FLAG_ITEM_END
+                    if last_item:
+                        flags |= FLAG_EOF
+                self.driver.send(Chunk(sid, seq, part, flags))
+                seq += 1
+        return sid
+
+
+class FileStreamer:
+    """Paper §III: stream a file chunk-by-chunk (peak memory = chunk)."""
+
+    def __init__(self, driver: Driver, chunk_size: int = DEFAULT_CHUNK_SIZE) -> None:
+        self.driver = driver
+        self.chunk_size = chunk_size
+
+    def send_file(self, path: str) -> bytes:
+        sid = uuid.uuid4().bytes
+        size = os.path.getsize(path)
+        seq = 0
+        sent = 0
+        with open(path, "rb") as fh:
+            while True:
+                part = fh.read(self.chunk_size)
+                sent += len(part)
+                last = sent >= size or not part
+                with mem.record_hold(len(part)):
+                    self.driver.send(Chunk(sid, seq, part, FLAG_EOF if last else 0))
+                seq += 1
+                if last:
+                    break
+        return sid
+
+
+# ---------------------------------------------------------------------------
+# ObjectRetriever (pull-mode, paper contribution 2)
+# ---------------------------------------------------------------------------
+
+class ObjectRetriever:
+    """Holder registers objects; peers retrieve them by id over a chosen
+
+    streaming mode. This is the integration surface existing workflows use
+    without restructuring their code around push-streaming callbacks.
+    """
+
+    def __init__(self, chunk_size: int = DEFAULT_CHUNK_SIZE) -> None:
+        self.chunk_size = chunk_size
+        self._registry: Dict[str, Tuple[str, Any]] = {}
+
+    def register_container(self, obj_id: str, sd: Mapping[str, Any]) -> str:
+        self._registry[obj_id] = ("container", sd)
+        return obj_id
+
+    def register_file(self, obj_id: str, path: str) -> str:
+        self._registry[obj_id] = ("file", path)
+        return obj_id
+
+    def retrieve(
+        self,
+        obj_id: str,
+        driver: Optional[Driver] = None,
+        mode: str = "container",
+        out_path: Optional[str] = None,
+        consume: Optional[Callable[[str, Any], None]] = None,
+    ) -> Any:
+        kind, obj = self._registry[obj_id]
+        driver = driver or LoopbackDriver()
+        if kind == "file":
+            assert out_path is not None, "file retrieval needs out_path"
+            receiver: Any = FileReceiver(out_path)
+            driver.connect(receiver.on_chunk)
+            FileStreamer(driver, self.chunk_size).send_file(obj)
+            driver.close()
+            return out_path
+        if mode == "container":
+            receiver = ContainerReceiver(consume=consume)
+            driver.connect(receiver.on_chunk)
+            ContainerStreamer(driver, self.chunk_size).send_container(obj)
+            driver.close()
+            return receiver.result if consume is None else None
+        # regular one-shot
+        receiver = BlobReceiver()
+        driver.connect(receiver.on_chunk)
+        ObjectStreamer(driver, self.chunk_size).send_container(obj)
+        driver.close()
+        return receiver.result

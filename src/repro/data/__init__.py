@@ -1,0 +1,9 @@
+from repro.data.pipeline import SyntheticLMDataset, make_batch_iterator
+from repro.data.partition import dirichlet_partition, iid_partition
+
+__all__ = [
+    "SyntheticLMDataset",
+    "make_batch_iterator",
+    "iid_partition",
+    "dirichlet_partition",
+]

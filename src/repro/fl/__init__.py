@@ -1,0 +1,14 @@
+from repro.fl.aggregator import FedAvgAggregator, QuantizedFedAvgAggregator
+from repro.fl.controller import ScatterAndGather
+from repro.fl.executor import Executor, TrainExecutor
+from repro.fl.simulator import FLSimulator, SimulationConfig
+
+__all__ = [
+    "FedAvgAggregator",
+    "QuantizedFedAvgAggregator",
+    "ScatterAndGather",
+    "Executor",
+    "TrainExecutor",
+    "FLSimulator",
+    "SimulationConfig",
+]

@@ -1,0 +1,113 @@
+"""Server-side aggregation.
+
+:class:`FedAvgAggregator` is the paper-faithful path: Task Results arrive
+*already dequantized* (the TASK_RESULT_IN filter ran), and aggregation is
+a sample-weighted average at original precision. It accumulates
+**incrementally** — one client at a time, and within a client one item at
+a time — so it composes with container streaming without ever holding K
+full models (only the running sum + one incoming item).
+
+:class:`QuantizedFedAvgAggregator` is the beyond-paper path (DESIGN.md
+§3): the server skips the ingress dequantize filter, stacks the int8
+payloads and calls the fused dequant+accumulate kernel. The aggregate is
+bit-identical to dequantize-then-average (tests assert this).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.messages import Message
+from repro.core.quantization import QuantizedTensor
+from repro.kernels import ops
+
+
+class FedAvgAggregator:
+    """Sample-weighted incremental FedAvg at original precision."""
+
+    def __init__(self) -> None:
+        self._sum: Dict[str, np.ndarray] = {}
+        self._weight = 0.0
+        self.accepted = 0
+
+    def accept(self, result: Message) -> None:
+        w = float(result.headers.get("num_samples", 1))
+        for name, value in result.payload.items():
+            if isinstance(value, QuantizedTensor):
+                raise TypeError(
+                    f"FedAvgAggregator received a quantized item {name!r}; "
+                    "install a DequantizeFilter at TASK_RESULT_IN or use "
+                    "QuantizedFedAvgAggregator"
+                )
+            self.accept_item(name, value, w)
+        self._weight += w
+        self.accepted += 1
+
+    def accept_item(self, name: str, value: Any, weight: float) -> None:
+        """Streaming entry point: one item of one client's result."""
+        arr = np.asarray(value, dtype=np.float32) * weight
+        if name in self._sum:
+            self._sum[name] += arr
+        else:
+            self._sum[name] = arr
+
+    def finish(self) -> Dict[str, np.ndarray]:
+        if self._weight <= 0:
+            raise RuntimeError("no results accepted")
+        out = {name: (arr / self._weight).astype(np.float32) for name, arr in self._sum.items()}
+        self._sum = {}
+        self._weight = 0.0
+        self.accepted = 0
+        return out
+
+
+class QuantizedFedAvgAggregator:
+    """Aggregates blockwise8 Task Results directly from int8 payloads
+
+    via the fused Pallas kernel — the server never materializes K fp32
+    models. Non-quantized (small) items fall back to plain averaging.
+    """
+
+    def __init__(self) -> None:
+        self._q: Dict[str, List[Tuple[QuantizedTensor, float]]] = {}
+        self._plain = FedAvgAggregator()
+        self._plain_names: set[str] = set()
+        self._weight = 0.0
+        self.accepted = 0
+
+    def accept(self, result: Message) -> None:
+        w = float(result.headers.get("num_samples", 1))
+        for name, value in result.payload.items():
+            if isinstance(value, QuantizedTensor):
+                if value.fmt != "blockwise8":
+                    raise TypeError(
+                        f"QuantizedFedAvgAggregator supports blockwise8; {name!r} is {value.fmt}"
+                    )
+                self._q.setdefault(name, []).append((value, w))
+            else:
+                self._plain.accept_item(name, value, w)
+                self._plain_names.add(name)
+        self._weight += w
+        self.accepted += 1
+
+    def finish(self) -> Dict[str, np.ndarray]:
+        out: Dict[str, np.ndarray] = {}
+        for name, contribs in self._q.items():
+            qs = jnp.stack([np.asarray(qt.payload) for qt, _ in contribs])
+            ams = jnp.stack([np.asarray(qt.absmax) for qt, _ in contribs])
+            ws = jnp.asarray([w for _, w in contribs], jnp.float32) / self._weight
+            agg2d = ops.dequant_accumulate8(qs, ams, ws)
+            qt0 = contribs[0][0]
+            n = int(np.prod(qt0.orig_shape))
+            out[name] = np.asarray(agg2d).reshape(-1)[:n].reshape(qt0.orig_shape).astype(np.float32)
+        if self._plain_names:
+            # reuse the plain aggregator's running sum (shares self._weight)
+            self._plain._weight = self._weight
+            out.update(self._plain.finish())
+        self._q = {}
+        self._plain_names = set()
+        self._weight = 0.0
+        self.accepted = 0
+        return out

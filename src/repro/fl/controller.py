@@ -1,0 +1,60 @@
+"""Server-side Controller (paper §II-A, Fig. 2).
+
+:class:`ScatterAndGather` implements the canonical FL workflow: its
+``run()`` loop broadcasts Task Data (global weights) to every client
+proxy, gathers Task Results (local updates), aggregates, and repeats.
+Transport, filtering and streaming live behind the :class:`ClientProxy`
+interface so the same controller runs over the in-process simulator, TCP
+drivers, or the mesh view.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, List, Optional, Sequence
+
+from repro.core.messages import Message, MessageKind
+
+
+class ClientProxy:
+    """What the Controller sees of one client site."""
+
+    name: str = "client"
+
+    def submit_task(self, task: Message) -> Message:
+        raise NotImplementedError
+
+
+class ScatterAndGather:
+    def __init__(
+        self,
+        clients: Sequence[ClientProxy],
+        aggregator: Any,
+        num_rounds: int,
+        on_round_end: Optional[Callable[[int, Dict[str, Any], List[Message]], None]] = None,
+    ) -> None:
+        if not clients:
+            raise ValueError("need at least one client")
+        self.clients = list(clients)
+        self.aggregator = aggregator
+        self.num_rounds = num_rounds
+        self.on_round_end = on_round_end
+
+    def run(self, initial_weights: Dict[str, Any]) -> Dict[str, Any]:
+        """The Controller's run() method (paper §II-A): task distribution
+
+        and aggregation of returns."""
+        global_weights = dict(initial_weights)
+        for rnd in range(self.num_rounds):
+            results: List[Message] = []
+            for client in self.clients:
+                task = Message(
+                    MessageKind.TASK_DATA,
+                    dict(global_weights),
+                    headers={"round": rnd, "task_name": "train"},
+                )
+                result = client.submit_task(task)
+                self.aggregator.accept(result)
+                results.append(result)
+            global_weights = self.aggregator.finish()
+            if self.on_round_end is not None:
+                self.on_round_end(rnd, global_weights, results)
+        return global_weights

@@ -1,0 +1,159 @@
+"""Declarative FL job system (NVFlare-style): one JSON/dict describes the
+
+whole federation — model, clients, data partitioning, the filter stack at
+each of the four points, transmission mode — and the runner builds and
+executes it. The paper's "no code change, just a configuration change"
+claim is this surface: switching quantization on/off/format or streaming
+mode touches only the job spec.
+
+    spec = {
+      "arch": "llama3.2-1b", "smoke": true,
+      "rounds": 5, "local_steps": 4, "batch": 8, "seq": 64, "lr": 3e-3,
+      "clients": 3, "partition": "dirichlet", "alpha": 0.5,
+      "quantization": {"fmt": "blockwise8", "error_feedback": false},
+      "dp_sigma": 0.0,
+      "transmission": "container", "driver": "loopback", "chunk_mb": 1
+    }
+    result = run_job(spec)
+"""
+from __future__ import annotations
+
+import json
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, get_smoke_config
+from repro.core.filters import (
+    DequantizeFilter,
+    DPGaussianNoiseFilter,
+    ErrorFeedbackQuantizeFilter,
+    FilterChain,
+    FilterPoint,
+    QuantizeFilter,
+    no_filters,
+)
+from repro.data import dirichlet_partition, iid_partition
+from repro.fl.aggregator import FedAvgAggregator, QuantizedFedAvgAggregator
+from repro.fl.executor import TrainExecutor
+from repro.fl.simulator import FLSimulator, SimulationConfig
+from repro.models import create_model
+from repro.optim import adamw_init, adamw_update
+from repro.utils.trees import flatten_state_dict, unflatten_state_dict
+
+DEFAULTS: Dict[str, Any] = {
+    "smoke": True,
+    "rounds": 5,
+    "local_steps": 4,
+    "batch": 8,
+    "seq": 64,
+    "lr": 3e-3,
+    "clients": 3,
+    "partition": "iid",
+    "alpha": 0.5,
+    "quantization": None,
+    "dp_sigma": 0.0,
+    "transmission": "container",
+    "driver": "loopback",
+    "chunk_mb": 1,
+    "server_quantized_aggregation": False,
+    "seed": 0,
+}
+
+
+def _build_filters(spec: Dict[str, Any]):
+    """Two-way scheme (+optional EF / DP) from the job spec."""
+    server = no_filters()
+    client = no_filters()
+    q = spec.get("quantization")
+    if q:
+        fmt = q["fmt"]
+        mk = (
+            (lambda: ErrorFeedbackQuantizeFilter(fmt))
+            if q.get("error_feedback")
+            else (lambda: QuantizeFilter(fmt))
+        )
+        server[FilterPoint.TASK_DATA_OUT] = FilterChain([mk()])
+        client[FilterPoint.TASK_DATA_IN] = FilterChain([DequantizeFilter()])
+        out_chain: List[Any] = []
+        if spec.get("dp_sigma"):
+            out_chain.append(DPGaussianNoiseFilter(spec["dp_sigma"], seed=spec["seed"]))
+        out_chain.append(mk())
+        client[FilterPoint.TASK_RESULT_OUT] = FilterChain(out_chain)
+        if not spec.get("server_quantized_aggregation"):
+            server[FilterPoint.TASK_RESULT_IN] = FilterChain([DequantizeFilter()])
+    elif spec.get("dp_sigma"):
+        client[FilterPoint.TASK_RESULT_OUT] = FilterChain(
+            [DPGaussianNoiseFilter(spec["dp_sigma"], seed=spec["seed"])]
+        )
+    return server, client
+
+
+def run_job(spec: Dict[str, Any]) -> Dict[str, Any]:
+    spec = {**DEFAULTS, **spec}
+    cfg = get_smoke_config(spec["arch"]) if spec["smoke"] else get_config(spec["arch"])
+    model = create_model(cfg)
+
+    if spec["partition"] == "dirichlet":
+        datasets = dirichlet_partition(
+            cfg.vocab_size, spec["seq"], spec["clients"], alpha=spec["alpha"], seed=spec["seed"]
+        )
+    else:
+        datasets = iid_partition(cfg.vocab_size, spec["seq"], spec["clients"], seed=spec["seed"])
+
+    @jax.jit
+    def local_step(params, opt, batch):
+        (loss, _), grads = jax.value_and_grad(model.loss, has_aux=True)(params, batch)
+        params, opt, _ = adamw_update(params, grads, opt, jnp.float32(spec["lr"]))
+        return params, opt, loss
+
+    history: List[float] = []
+
+    def make_client(name, data):
+        def train_fn(flat_params, rnd):
+            p = unflatten_state_dict(
+                {k: jnp.asarray(np.asarray(v)) for k, v in flat_params.items()}
+            )
+            opt = adamw_init(p)
+            loss = None
+            for _ in range(spec["local_steps"]):
+                batch = {k: jnp.asarray(v) for k, v in data.sample(spec["batch"]).items()}
+                p, opt, loss = local_step(p, opt, batch)
+            history.append(float(loss))
+            return flatten_state_dict(p), spec["batch"] * spec["local_steps"], {"loss": float(loss)}
+
+        return TrainExecutor(name, train_fn)
+
+    server_filters, client_filters = _build_filters(spec)
+    agg = (
+        QuantizedFedAvgAggregator()
+        if spec.get("server_quantized_aggregation") and spec.get("quantization")
+        else FedAvgAggregator()
+    )
+    sim = FLSimulator(
+        [make_client(f"site-{i}", d) for i, d in enumerate(datasets)],
+        agg,
+        SimulationConfig(
+            num_rounds=spec["rounds"],
+            transmission=spec["transmission"],
+            chunk_size=int(spec["chunk_mb"] * (1 << 20)),
+            driver=spec["driver"],
+        ),
+        server_filters=server_filters,
+        client_filters=client_filters,
+    )
+    init = flatten_state_dict(model.init(jax.random.PRNGKey(spec["seed"])))
+    final = sim.run(init)
+    return {
+        "final_weights": final,
+        "history": history,
+        "messages": sim.stats.messages,
+        "wire_bytes": sim.stats.bytes_sent,
+    }
+
+
+def run_job_file(path: str) -> Dict[str, Any]:
+    with open(path) as fh:
+        return run_job(json.load(fh))

@@ -1,0 +1,114 @@
+"""Flash-attention Pallas TPU kernel (perf iteration 2 of §Perf pair 1).
+
+The baseline HLO materializes the (S x S) fp32 score tensor through
+mask/softmax — the dominant HBM-traffic term for every attention arch in
+the dry-run roofline (EXPERIMENTS.md §Roofline). This kernel computes
+attention with **online softmax over K/V tiles held in VMEM**: HBM
+traffic drops from O(S^2) scores to O(S) q/k/v/out streams.
+
+TPU adaptation: one grid step = one (batch, q-head, q-block). The
+BlockSpec pins the q tile (block_q x hd) and the *whole* K/V stripe of
+the matching KV head (S x hd — 8 MiB at S=32k, hd=128, bf16; within the
+~16 MiB VMEM budget) and an inner ``fori_loop`` walks K/V in block_k
+chunks carrying (m, l, acc) — the standard flash recurrence, with MXU
+matmuls at (block_q x hd) x (hd x block_k). GQA maps q head h to KV head
+h * KV // H in the index map. Causal and sliding-window masks are index
+arithmetic, not materialized tensors.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_K = 128
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, *, block_k: int, causal: bool,
+            window: Optional[int], sq: int, sk: int, block_q: int):
+    qi = pl.program_id(2)
+    q = q_ref[0, 0].astype(jnp.float32)                    # (block_q, hd)
+    hd = q.shape[-1]
+    scale = 1.0 / np.sqrt(hd)
+    q_idx = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+
+    nk = sk // block_k
+
+    def body(j, carry):
+        m, l, acc = carry
+        k = jax.lax.dynamic_slice_in_dim(k_ref[0, 0], j * block_k, block_k).astype(jnp.float32)
+        v = jax.lax.dynamic_slice_in_dim(v_ref[0, 0], j * block_k, block_k).astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale                                           # (block_q, block_k)
+        k_idx = j * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+        mask = jnp.ones((block_q, block_k), jnp.bool_)
+        if causal:
+            mask = mask & (k_idx <= q_idx)
+        if window is not None:
+            mask = mask & (q_idx - k_idx < window)
+        s = jnp.where(mask, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_new = l * alpha + jnp.sum(p, axis=-1)
+        acc_new = acc * alpha[:, None] + jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        return m_new, l_new, acc_new
+
+    m0 = jnp.full((block_q,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((block_q,), jnp.float32)
+    acc0 = jnp.zeros((block_q, hd), jnp.float32)
+    m, l, acc = jax.lax.fori_loop(0, nk, body, (m0, l0, acc0))
+    o_ref[0, 0] = (acc / jnp.maximum(l, 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "block_q", "block_k", "interpret"),
+)
+def flash_attention_pallas(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    block_q: int = DEFAULT_BLOCK_Q,
+    block_k: int = DEFAULT_BLOCK_K,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """q: (B, H, Sq, hd); k, v: (B, KV, Sk, hd); H % KV == 0.
+
+    Returns (B, H, Sq, hd) in q.dtype. Sq % block_q == 0, Sk % block_k == 0.
+    """
+    Bsz, H, sq, hd = q.shape
+    KV, sk = k.shape[1], k.shape[2]
+    assert H % KV == 0 and sq % block_q == 0 and sk % block_k == 0, (q.shape, k.shape)
+    grid = (Bsz, H, sq // block_q)
+    group = H // KV
+
+    kernel = functools.partial(
+        _kernel, block_k=block_k, causal=causal, window=window,
+        sq=sq, sk=sk, block_q=block_q,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, hd), lambda b, h, i: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, sk, hd), lambda b, h, i: (b, h // group, 0, 0)),
+            pl.BlockSpec((1, 1, sk, hd), lambda b, h, i: (b, h // group, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, hd), lambda b, h, i: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((Bsz, H, sq, hd), q.dtype),
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,55 @@
+"""Fused dequantize + weighted-accumulate Pallas kernel (server FedAvg).
+
+Beyond-paper optimization (DESIGN.md §7): the paper dequantizes each
+client's Task Result to fp32 *before* aggregation, so the server briefly
+holds K fp32 copies. This kernel aggregates **directly from the int8
+payloads**: each grid step loads the (K, ROWS, 4096) int8 tile of all K
+clients (K * 32 KiB — tiny), folds the per-block absmax scales and FedAvg
+weights into a (K, ROWS) scale matrix and contracts over K on the MXU.
+Server-side peak memory drops from K x fp32-model to 1 x fp32-model, and
+the dequantize pass fuses with the reduce.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK8 = 4096
+ROWS = 8
+
+
+def _agg_kernel(q_ref, absmax_ref, w_ref, out_ref):
+    q = q_ref[...].astype(jnp.float32)                       # (K, R, B)
+    scale = absmax_ref[...].astype(jnp.float32) / 127.0      # (K, R)
+    scale = scale * w_ref[...].astype(jnp.float32)[:, None]  # fold FedAvg w_k
+    out_ref[...] = jnp.einsum(
+        "krb,kr->rb", q, scale, preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def dequant_accumulate8_pallas(
+    qs: jnp.ndarray, absmaxes: jnp.ndarray, weights: jnp.ndarray, *, interpret: bool = False
+):
+    """qs: (K, nblocks, 4096) int8; absmaxes: (K, nblocks); weights: (K,).
+
+    Returns (nblocks, 4096) fp32 = sum_k weights[k] * dequant(qs[k]).
+    """
+    K, nblocks, b = qs.shape
+    assert b == BLOCK8 and nblocks % ROWS == 0, qs.shape
+    grid = (nblocks // ROWS,)
+    return pl.pallas_call(
+        _agg_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((K, ROWS, BLOCK8), lambda i: (0, i, 0)),
+            pl.BlockSpec((K, ROWS), lambda i: (0, i)),
+            pl.BlockSpec((K,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((ROWS, BLOCK8), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nblocks, BLOCK8), jnp.float32),
+        interpret=interpret,
+    )(qs, absmaxes, weights)

@@ -1,0 +1,163 @@
+"""Public jit'd quantization ops: arbitrary-shape arrays in, blocked
+
+payloads out, with backend dispatch (Pallas on TPU, Pallas-interpret for
+kernel validation, pure-jnp ref elsewhere — same semantics everywhere,
+enforced by tests/test_kernels_*.py).
+"""
+from __future__ import annotations
+
+import functools
+import os
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ref
+
+# jitted ref-backend entry points (the ref functions build 15-compare /
+# 16-select networks — uncompiled tracing per call would dominate on CPU)
+_REF_Q8 = jax.jit(ref.quantize_blockwise8)
+_REF_D8 = jax.jit(ref.dequantize_blockwise8)
+_REF_AGG = jax.jit(ref.dequant_accumulate8)
+_REF_Q4 = {
+    fmt: jax.jit(functools.partial(ref.quantize_4bit, code=code))
+    for fmt, code in (("fp4", ref.FP4_CODE), ("nf4", ref.NF4_CODE))
+}
+_REF_D4 = {
+    fmt: jax.jit(functools.partial(ref.dequantize_4bit, code=code))
+    for fmt, code in (("fp4", ref.FP4_CODE), ("nf4", ref.NF4_CODE))
+}
+from repro.kernels.quant_blockwise8 import (
+    BLOCK8,
+    ROWS,
+    dequantize_blockwise8_pallas,
+    quantize_blockwise8_pallas,
+)
+from repro.kernels.quant_nf4 import (
+    BLOCK4,
+    ROWS4,
+    dequantize_4bit_pallas,
+    quantize_4bit_pallas,
+)
+from repro.kernels.fused_dequant_agg import dequant_accumulate8_pallas
+
+_BACKENDS = ("auto", "ref", "pallas", "pallas_interpret")
+_backend = os.environ.get("REPRO_KERNEL_BACKEND", "auto")
+
+
+def set_backend(name: str) -> None:
+    global _backend
+    if name not in _BACKENDS:
+        raise ValueError(f"backend must be one of {_BACKENDS}, got {name!r}")
+    _backend = name
+
+
+def get_backend() -> str:
+    if _backend != "auto":
+        return _backend
+    # Pallas compiled path on TPU; ref (identical semantics) on CPU hosts.
+    return "pallas" if jax.default_backend() == "tpu" else "ref"
+
+
+def _pad_to_blocks(flat: jnp.ndarray, block: int) -> Tuple[jnp.ndarray, int]:
+    """Pad a flat fp32 vector to a whole number of quant blocks.
+
+    Wire-format padding is one block max (<=16 KiB for int8, <=256 B for
+    4-bit); the Pallas wrappers pad *rows* to their grid granularity
+    internally and slice the result back, so grid alignment never inflates
+    the transmitted message.
+    """
+    n = flat.shape[0]
+    padded = int(np.ceil(n / block)) * block
+    if padded != n:
+        flat = jnp.pad(flat, (0, padded - n))
+    return flat.reshape(padded // block, block), n
+
+
+def _pad_rows(x2d: jnp.ndarray, row_multiple: int) -> Tuple[jnp.ndarray, int]:
+    nblocks = x2d.shape[0]
+    padded = int(np.ceil(nblocks / row_multiple)) * row_multiple
+    if padded != nblocks:
+        x2d = jnp.pad(x2d, ((0, padded - nblocks), (0, 0)))
+    return x2d, nblocks
+
+
+# ---------------------------------------------------------------------------
+# blockwise int8
+# ---------------------------------------------------------------------------
+
+def quantize_blockwise8(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Any-shape float array -> ((nblocks, 4096) int8, (nblocks,) absmax)."""
+    x2d, _ = _pad_to_blocks(x.reshape(-1).astype(jnp.float32), BLOCK8)
+    backend = get_backend()
+    if backend == "ref":
+        return _REF_Q8(x2d)
+    nblocks = x2d.shape[0]
+    x2d, _ = _pad_rows(x2d, ROWS)
+    q, am = quantize_blockwise8_pallas(x2d, interpret=(backend == "pallas_interpret"))
+    return q[:nblocks], am[:nblocks]
+
+
+def dequantize_blockwise8(q: jnp.ndarray, absmax: jnp.ndarray, shape, dtype=jnp.float32) -> jnp.ndarray:
+    backend = get_backend()
+    if backend == "ref":
+        out = _REF_D8(q, absmax)
+    else:
+        nblocks = q.shape[0]
+        q, _ = _pad_rows(q, ROWS)
+        absmax = jnp.pad(absmax, (0, q.shape[0] - nblocks))
+        out = dequantize_blockwise8_pallas(q, absmax, interpret=(backend == "pallas_interpret"))
+        out = out[:nblocks]
+    n = int(np.prod(shape))
+    return out.reshape(-1)[:n].reshape(shape).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# 4-bit (fp4 / nf4)
+# ---------------------------------------------------------------------------
+
+def quantize_4bit(x: jnp.ndarray, fmt: str) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Any-shape float array -> ((nblocks, 32) packed uint8, (nblocks,) absmax)."""
+    x2d, _ = _pad_to_blocks(x.reshape(-1).astype(jnp.float32), BLOCK4)
+    backend = get_backend()
+    if backend == "ref":
+        return _REF_Q4[fmt](x2d)
+    nblocks = x2d.shape[0]
+    x2d, _ = _pad_rows(x2d, ROWS4)
+    p, am = quantize_4bit_pallas(x2d, fmt=fmt, interpret=(backend == "pallas_interpret"))
+    return p[:nblocks], am[:nblocks]
+
+
+def dequantize_4bit(packed: jnp.ndarray, absmax: jnp.ndarray, fmt: str, shape, dtype=jnp.float32) -> jnp.ndarray:
+    backend = get_backend()
+    if backend == "ref":
+        out = _REF_D4[fmt](packed, absmax)
+    else:
+        nblocks = packed.shape[0]
+        packed, _ = _pad_rows(packed, ROWS4)
+        absmax = jnp.pad(absmax, (0, packed.shape[0] - nblocks))
+        out = dequantize_4bit_pallas(packed, absmax, fmt=fmt, interpret=(backend == "pallas_interpret"))
+        out = out[:nblocks]
+    n = int(np.prod(shape))
+    return out.reshape(-1)[:n].reshape(shape).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# fused server-side aggregation
+# ---------------------------------------------------------------------------
+
+def dequant_accumulate8(qs: jnp.ndarray, absmaxes: jnp.ndarray, weights: jnp.ndarray) -> jnp.ndarray:
+    backend = get_backend()
+    if backend == "ref":
+        return _REF_AGG(qs, absmaxes, weights)
+    nblocks = qs.shape[1]
+    padded = int(np.ceil(nblocks / ROWS)) * ROWS
+    if padded != nblocks:
+        qs = jnp.pad(qs, ((0, 0), (0, padded - nblocks), (0, 0)))
+        absmaxes = jnp.pad(absmaxes, ((0, 0), (0, padded - nblocks)))
+    out = dequant_accumulate8_pallas(
+        qs, absmaxes, weights, interpret=(backend == "pallas_interpret")
+    )
+    return out[:nblocks]

@@ -1,0 +1,76 @@
+"""Pallas TPU kernels for blockwise-int8 quantization (bitsandbytes style).
+
+TPU adaptation (see DESIGN.md §3): bitsandbytes' CUDA kernels assign one
+thread per element with a per-block reduction in shared memory. On TPU the
+natural mapping is one VMEM tile of whole blocks per grid step: the input
+is viewed as ``(nblocks, 4096)`` and each grid step loads a
+``(ROWS, 4096)`` fp32 tile (128 KiB — comfortably inside the ~16 MiB VMEM
+budget together with the int8 output tile), computes per-row absmax on the
+VPU and writes the int8 codes. Block size 4096 is a multiple of the VPU
+lane width (128), so rows map cleanly onto (8, 128) vregs.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK8 = 4096
+ROWS = 8  # blocks (rows) per grid step; (8, 4096) fp32 = 128 KiB VMEM
+
+
+def _quantize_kernel(x_ref, q_ref, absmax_ref):
+    x = x_ref[...].astype(jnp.float32)                      # (ROWS, BLOCK8)
+    absmax = jnp.max(jnp.abs(x), axis=-1)                   # (ROWS,)
+    scale = jnp.where(absmax > 0.0, 127.0 / absmax, 0.0)
+    q = jnp.clip(jnp.round(x * scale[:, None]), -127.0, 127.0)
+    q_ref[...] = q.astype(jnp.int8)
+    absmax_ref[...] = absmax.astype(jnp.float32)
+
+
+def _dequantize_kernel(q_ref, absmax_ref, out_ref):
+    q = q_ref[...].astype(jnp.float32)                      # (ROWS, BLOCK8)
+    scale = absmax_ref[...].astype(jnp.float32) / 127.0     # (ROWS,)
+    out_ref[...] = q * scale[:, None]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def quantize_blockwise8_pallas(x2d: jnp.ndarray, *, interpret: bool = False):
+    """x2d: (nblocks, BLOCK8) float; nblocks must be a multiple of ROWS."""
+    nblocks = x2d.shape[0]
+    assert x2d.shape[1] == BLOCK8 and nblocks % ROWS == 0, x2d.shape
+    grid = (nblocks // ROWS,)
+    return pl.pallas_call(
+        _quantize_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((ROWS, BLOCK8), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((ROWS, BLOCK8), lambda i: (i, 0)),
+            pl.BlockSpec((ROWS,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nblocks, BLOCK8), jnp.int8),
+            jax.ShapeDtypeStruct((nblocks,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x2d)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def dequantize_blockwise8_pallas(q: jnp.ndarray, absmax: jnp.ndarray, *, interpret: bool = False):
+    nblocks = q.shape[0]
+    assert q.shape[1] == BLOCK8 and nblocks % ROWS == 0, q.shape
+    grid = (nblocks // ROWS,)
+    return pl.pallas_call(
+        _dequantize_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((ROWS, BLOCK8), lambda i: (i, 0)),
+            pl.BlockSpec((ROWS,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((ROWS, BLOCK8), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nblocks, BLOCK8), jnp.float32),
+        interpret=interpret,
+    )(q, absmax)

@@ -1,0 +1,116 @@
+"""Pallas TPU kernels for 4-bit codebook quantization (fp4 / nf4).
+
+TPU adaptation (DESIGN.md §3): bitsandbytes' CUDA path binary-searches the
+codebook per element and packs nibbles with warp shuffles. TPU has neither
+fast per-element gathers in VREG nor warp shuffles, so:
+
+* binning is a **branchless comparison network** — rank = sum over the 15
+  sorted-codebook midpoints of (x > mid), then a 16-way select maps the
+  rank to the original code index. All compares are full-width VPU ops.
+* nibble packing uses an even/odd strided split of the code lane followed
+  by ``hi << 4 | lo`` — a layout-friendly shuffle within a tile.
+
+The input is viewed as ``(nblocks, 64)`` (4-bit block size 64). Each grid
+step processes ``ROWS4 = 256`` blocks: a (256, 64) fp32 tile = 64 KiB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from repro.kernels.ref import FP4_CODE, NF4_CODE, _sorted_code_and_perm
+
+BLOCK4 = 64
+ROWS4 = 256  # blocks per grid step
+
+
+def _make_quant_kernel(code: np.ndarray):
+    sorted_code, perm = _sorted_code_and_perm(code)
+    mids = ((sorted_code[1:] + sorted_code[:-1]) / 2.0).tolist()
+    perm_list = perm.tolist()
+
+    def kernel(x_ref, packed_ref, absmax_ref):
+        x = x_ref[...].astype(jnp.float32)                    # (R, 64)
+        absmax = jnp.max(jnp.abs(x), axis=-1)                 # (R,)
+        inv = jnp.where(absmax > 0.0, 1.0 / absmax, 0.0)
+        xn = x * inv[:, None]
+        rank = jnp.zeros(xn.shape, dtype=jnp.int32)
+        for m in mids:                                        # 15 VPU compares
+            rank = rank + (xn > m).astype(jnp.int32)
+        idx = jnp.zeros(xn.shape, dtype=jnp.int32)
+        for r, p in enumerate(perm_list):                     # 16-way select
+            idx = jnp.where(rank == r, p, idx)
+        hi = idx[:, 0::2].astype(jnp.uint8)
+        lo = idx[:, 1::2].astype(jnp.uint8)
+        packed_ref[...] = (hi << 4) | lo
+        absmax_ref[...] = absmax.astype(jnp.float32)
+
+    return kernel
+
+
+def _make_dequant_kernel(code: np.ndarray):
+    code_list = np.asarray(code, dtype=np.float32).tolist()
+
+    def kernel(packed_ref, absmax_ref, out_ref):
+        packed = packed_ref[...]                              # (R, 32) uint8
+        hi = (packed >> 4).astype(jnp.int32)
+        lo = (packed & 0xF).astype(jnp.int32)
+        idx = jnp.stack([hi, lo], axis=-1).reshape(packed.shape[0], BLOCK4)
+        vals = jnp.zeros(idx.shape, dtype=jnp.float32)
+        for i, v in enumerate(code_list):                     # 16-way select
+            vals = jnp.where(idx == i, jnp.float32(v), vals)
+        out_ref[...] = vals * absmax_ref[...].astype(jnp.float32)[:, None]
+
+    return kernel
+
+
+def _codebook(fmt: str) -> np.ndarray:
+    if fmt == "fp4":
+        return FP4_CODE
+    if fmt == "nf4":
+        return NF4_CODE
+    raise ValueError(f"unknown 4-bit format: {fmt}")
+
+
+@functools.partial(jax.jit, static_argnames=("fmt", "interpret"))
+def quantize_4bit_pallas(x2d: jnp.ndarray, *, fmt: str, interpret: bool = False):
+    """x2d: (nblocks, 64); nblocks must be a multiple of ROWS4."""
+    nblocks = x2d.shape[0]
+    assert x2d.shape[1] == BLOCK4 and nblocks % ROWS4 == 0, x2d.shape
+    grid = (nblocks // ROWS4,)
+    return pl.pallas_call(
+        _make_quant_kernel(_codebook(fmt)),
+        grid=grid,
+        in_specs=[pl.BlockSpec((ROWS4, BLOCK4), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((ROWS4, BLOCK4 // 2), lambda i: (i, 0)),
+            pl.BlockSpec((ROWS4,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nblocks, BLOCK4 // 2), jnp.uint8),
+            jax.ShapeDtypeStruct((nblocks,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x2d)
+
+
+@functools.partial(jax.jit, static_argnames=("fmt", "interpret"))
+def dequantize_4bit_pallas(packed: jnp.ndarray, absmax: jnp.ndarray, *, fmt: str, interpret: bool = False):
+    nblocks = packed.shape[0]
+    assert packed.shape[1] == BLOCK4 // 2 and nblocks % ROWS4 == 0, packed.shape
+    grid = (nblocks // ROWS4,)
+    return pl.pallas_call(
+        _make_dequant_kernel(_codebook(fmt)),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((ROWS4, BLOCK4 // 2), lambda i: (i, 0)),
+            pl.BlockSpec((ROWS4,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((ROWS4, BLOCK4), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nblocks, BLOCK4), jnp.float32),
+        interpret=interpret,
+    )(packed, absmax)

@@ -1,0 +1,239 @@
+"""Multi-pod dry-run: AOT lower + compile every (architecture x input
+shape) on the production meshes, with no device allocation
+(ShapeDtypeStruct stand-ins), and emit the roofline terms.
+
+Usage:
+    python -m repro.launch.dryrun --arch granite-8b --shape train_4k
+    python -m repro.launch.dryrun --all                      # 40-pair sweep
+    python -m repro.launch.dryrun --all --multi-pod          # 512-chip pass
+
+Results are appended as JSON lines to experiments/dryrun/*.json and
+consumed by benchmarks/roofline_report.py and EXPERIMENTS.md.
+"""
+# The dry-run (and ONLY the dry-run) fakes 512 host devices so
+# jax.make_mesh can build the production mesh. Must run before ANY other
+# import that could initialize jax.
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 " + os.environ.get("XLA_FLAGS", "")
+)
+
+import argparse  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+from typing import Any, Dict, Optional  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs import ARCH_IDS, get_config  # noqa: E402
+from repro.launch import roofline as RL  # noqa: E402
+from repro.launch import sharding as SH  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch.specs import (  # noqa: E402
+    INPUT_SHAPES,
+    apply_variant,
+    input_specs,
+    params_specs,
+    plan_for,
+)
+from repro.models import create_model  # noqa: E402
+from repro.optim import adamw_init, adamw_update  # noqa: E402
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..", "experiments", "dryrun")
+
+
+def _batch_shardings(mesh, batch_specs, rules):
+    return jax.tree_util.tree_map(
+        lambda s: SH.batch_sharding(mesh, s.shape, rules), batch_specs
+    )
+
+
+def build_step(cfg, plan, mesh, rules=None):
+    """Returns (step_fn, arg_specs, in_shardings, out_shardings, donate)."""
+    rules = rules or SH.DEFAULT_RULES
+    model = create_model(cfg)
+    p_specs = params_specs(cfg)
+    p_shard = SH.tree_shardings(p_specs, model.param_axes(), mesh, rules)
+    specs = input_specs(cfg, plan)
+
+    if plan.kind == "train":
+        opt_specs = jax.eval_shape(lambda: adamw_init(p_specs))
+        opt_shard = jax.tree_util.tree_map(
+            lambda leaf, sh: sh,
+            (opt_specs.m, opt_specs.v),
+            (p_shard, p_shard),
+        )
+        opt_shard_full = type(opt_specs)(SH.replicated(mesh), opt_shard[0], opt_shard[1])
+        b_shard = _batch_shardings(mesh, specs["batch"], rules)
+
+        def train_step(params, opt_state, batch):
+            (loss, metrics), grads = jax.value_and_grad(model.loss, has_aux=True)(
+                params, batch
+            )
+            params, opt_state, info = adamw_update(
+                params, grads, opt_state, jnp.float32(1e-4)
+            )
+            return params, opt_state, {**metrics, "loss": loss, **info}
+
+        args = (p_specs, opt_specs, specs["batch"])
+        in_sh = (p_shard, opt_shard_full, b_shard)
+        out_sh = (p_shard, opt_shard_full, None)
+        return train_step, args, in_sh, out_sh, (0, 1)
+
+    if plan.kind == "prefill":
+
+        def prefill_step(params, inputs):
+            extra = inputs.get("frames", inputs.get("patches"))
+            if extra is not None:
+                return model.prefill(params, inputs["tokens"], extra)
+            return model.prefill(params, inputs["tokens"])
+
+        b_shard = _batch_shardings(mesh, specs, rules)
+        args = (p_specs, specs)
+        return prefill_step, args, (p_shard, b_shard), None, ()
+
+    # decode
+    cache_shard = SH.tree_shardings(specs["cache"], model.cache_axes(), mesh, rules)
+
+    def serve_step(params, cache, tokens, pos):
+        return model.decode_step(params, cache, tokens, pos)
+
+    tok_shard = SH.batch_sharding(mesh, specs["tokens"].shape, rules)
+    args = (p_specs, specs["cache"], specs["tokens"], specs["pos"])
+    in_sh = (p_shard, cache_shard, tok_shard, SH.replicated(mesh))
+    out_sh = (None, cache_shard)
+    return serve_step, args, in_sh, out_sh, (1,)
+
+
+def run_one(
+    arch: str,
+    shape_name: str,
+    *,
+    multi_pod: bool = False,
+    rules=None,
+    variant_override: Optional[str] = None,
+    tag: str = "baseline",
+    save: bool = True,
+    mesh=None,
+) -> Dict[str, Any]:
+    cfg = get_config(arch).with_overrides(
+        param_dtype=jnp.bfloat16, activ_dtype=jnp.bfloat16
+    )
+    plan = plan_for(cfg, shape_name)
+    if variant_override:
+        plan = plan.__class__(**{**plan.__dict__, "variant": variant_override})
+    cfg = apply_variant(cfg, plan)
+    mesh = mesh if mesh is not None else make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "x".join(str(s) for s in mesh.devices.shape)
+    chips = mesh.devices.size
+
+    t0 = time.time()
+    from repro.models import layers as model_layers
+    from repro.launch import sharding as sharding_mod
+
+    step, args, in_sh, out_sh, donate = build_step(cfg, plan, mesh, rules)
+    model_layers.set_sharding_context(mesh, rules or sharding_mod.DEFAULT_RULES)
+    try:
+        with mesh:
+            jitted = jax.jit(
+                step,
+                in_shardings=in_sh,
+                out_shardings=out_sh,
+                donate_argnums=donate if donate else (),
+            )
+            lowered = jitted.lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+    finally:
+        model_layers.set_sharding_context(None, None)
+
+    cost_list = compiled.cost_analysis()
+    cost = cost_list[0] if isinstance(cost_list, (list, tuple)) else (cost_list or {})
+    try:
+        mem_an = compiled.memory_analysis()
+        memory = (
+            {
+                "argument_bytes": float(getattr(mem_an, "argument_size_in_bytes", 0)),
+                "output_bytes": float(getattr(mem_an, "output_size_in_bytes", 0)),
+                "temp_bytes": float(getattr(mem_an, "temp_size_in_bytes", 0)),
+                "peak_bytes": float(
+                    getattr(mem_an, "peak_memory_in_bytes", 0)
+                    or getattr(mem_an, "temp_size_in_bytes", 0)
+                ),
+            }
+            if mem_an is not None
+            else None
+        )
+    except Exception:
+        memory = None
+    hlo_text = compiled.as_text()
+
+    info = INPUT_SHAPES[shape_name]
+    report = RL.analyze(
+        arch=arch,
+        shape=shape_name,
+        mesh_name=mesh_name,
+        variant=plan.variant,
+        chips=chips,
+        cfg=cfg,
+        kind=plan.kind,
+        seq_len=info["seq_len"],
+        global_batch=info["global_batch"],
+        cost=cost,
+        hlo_text=hlo_text,
+        memory_per_device=memory,
+    )
+    out = report.to_dict()
+    out["tag"] = tag
+    out["lower_s"] = round(t_lower, 2)
+    out["compile_s"] = round(t_compile, 2)
+    if save:
+        os.makedirs(OUT_DIR, exist_ok=True)
+        fname = os.path.join(OUT_DIR, f"{arch}__{shape_name}__{mesh_name}__{tag}.json")
+        with open(fname, "w") as fh:
+            json.dump(out, fh, indent=2)
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=list(INPUT_SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--tag", default="baseline")
+    ap.add_argument("--variant", choices=["paper", "swa"], default=None)
+    args = ap.parse_args()
+
+    pairs = (
+        [(a, s) for a in ARCH_IDS if a != "llama3.2-1b" for s in INPUT_SHAPES]
+        if args.all
+        else [(args.arch, args.shape)]
+    )
+    mesh = make_production_mesh(multi_pod=args.multi_pod)
+    for arch, shape in pairs:
+        try:
+            out = run_one(
+                arch,
+                shape,
+                multi_pod=args.multi_pod,
+                variant_override=args.variant,
+                tag=args.tag,
+                mesh=mesh,
+            )
+            print(
+                f"[ok] {arch:24s} {shape:12s} mesh={out['mesh']:9s} "
+                f"variant={out['variant']:5s} flops={out['hlo_flops']:.3e} "
+                f"bytes={out['hlo_bytes']:.3e} wire={out['collective_wire_bytes']:.3e} "
+                f"bottleneck={out['bottleneck']} compile={out['compile_s']}s"
+            )
+        except Exception as e:  # noqa: BLE001 — sweep must report every pair
+            print(f"[FAIL] {arch} {shape}: {type(e).__name__}: {e}")
+            raise
+
+
+if __name__ == "__main__":
+    main()

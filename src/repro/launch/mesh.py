@@ -1,0 +1,30 @@
+"""Production meshes.
+
+Single pod: (data=16, model=16) = 256 chips (TPU v5e pod slice).
+Multi-pod:  (pod=2, data=16, model=16) = 512 chips; the ``pod`` axis is
+the **federation axis** (DESIGN.md §3): each pod holds one FL site's
+model replica; cross-pod collectives carry the (quantized) FL round.
+
+Functions, not module constants — importing this module must never touch
+jax device state (the dry-run sets XLA_FLAGS before first jax init).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def _auto(n):
+    return (jax.sharding.AxisType.Auto,) * n
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+
+
+def make_debug_mesh(data: int = 1, model: int = 1, pod: int = 0):
+    """Small mesh over however many devices exist (tests)."""
+    if pod:
+        return jax.make_mesh((pod, data, model), ("pod", "data", "model"), axis_types=_auto(3))
+    return jax.make_mesh((data, model), ("data", "model"), axis_types=_auto(2))

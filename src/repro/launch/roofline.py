@@ -1,0 +1,111 @@
+"""Roofline-term derivation from the compiled dry-run artifact.
+
+Per (arch x shape x mesh):
+
+    compute term    = HLO_FLOPs / (chips x peak_FLOP/s)
+    memory term     = HLO_bytes / (chips x HBM_bw)
+    collective term = collective_wire_bytes_per_device / link_bw
+
+Hardware constants (TPU v5e, from the brief): 197 TFLOP/s bf16 per chip,
+819 GB/s HBM, ~50 GB/s/link ICI. HLO_FLOPs / HLO_bytes come from
+``compiled.cost_analysis()``; collective bytes from parsing the optimized
+HLO (repro.utils.hlo). MODEL_FLOPS = 6*N*D (train) / 2*N*D (inference)
+with N = active params — the ratio MODEL_FLOPS/HLO_FLOPs exposes
+remat/dispatch/redundancy waste.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+from repro.models.base import ModelConfig, active_param_count
+from repro.utils import hlo as hlo_utils
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+ICI_BW = 50e9                # bytes/s / link
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    variant: str
+    chips: int
+    hlo_flops: float
+    hlo_bytes: float
+    collective_wire_bytes: float
+    model_flops: float
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    bottleneck: str
+    useful_flop_ratio: float
+    collective_detail: Dict[str, Dict[str, float]]
+    memory_per_device: Optional[Dict[str, float]] = None
+
+    def to_dict(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
+
+
+def model_flops(cfg: ModelConfig, kind: str, seq_len: int, global_batch: int) -> float:
+    n = active_param_count(cfg)
+    if kind == "train":
+        tokens = seq_len * global_batch
+        return 6.0 * n * tokens
+    if kind == "prefill":
+        tokens = seq_len * global_batch
+        return 2.0 * n * tokens
+    # decode: one token per sequence
+    return 2.0 * n * global_batch
+
+
+def analyze(
+    *,
+    arch: str,
+    shape: str,
+    mesh_name: str,
+    variant: str,
+    chips: int,
+    cfg: ModelConfig,
+    kind: str,
+    seq_len: int,
+    global_batch: int,
+    cost: Dict[str, float],
+    hlo_text: str,
+    memory_per_device: Optional[Dict[str, float]] = None,
+) -> RooflineReport:
+    # Loop-aware per-device quantities derived from the SPMD-partitioned
+    # module (XLA's cost_analysis counts while bodies once — see
+    # repro.utils.hlo). `cost` (cost_analysis) is kept for reference only.
+    del cost
+    flops = hlo_utils.module_flops(hlo_text)
+    bytes_accessed = hlo_utils.module_traffic_bytes(hlo_text)
+    coll = hlo_utils.collective_stats(hlo_text)
+    wire = sum(s["wire_bytes"] for s in coll.values())
+    mf = model_flops(cfg, kind, seq_len, global_batch)
+    # all three inputs are PER-DEVICE quantities
+    compute_s = flops / PEAK_FLOPS if flops else 0.0
+    memory_s = bytes_accessed / HBM_BW if bytes_accessed else 0.0
+    collective_s = wire / ICI_BW
+    terms = {"compute": compute_s, "memory": memory_s, "collective": collective_s}
+    bottleneck = max(terms, key=terms.get)
+    return RooflineReport(
+        arch=arch,
+        shape=shape,
+        mesh=mesh_name,
+        variant=variant,
+        chips=chips,
+        hlo_flops=flops,
+        hlo_bytes=bytes_accessed,
+        collective_wire_bytes=wire,
+        model_flops=mf,
+        compute_s=compute_s,
+        memory_s=memory_s,
+        collective_s=collective_s,
+        bottleneck=bottleneck,
+        useful_flop_ratio=(mf / (flops * chips)) if flops else 0.0,
+        collective_detail=coll,
+        memory_per_device=memory_per_device,
+    )

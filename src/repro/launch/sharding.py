@@ -1,0 +1,97 @@
+"""Logical-axis -> mesh-axis sharding rules (MaxText-style).
+
+Every model parameter carries a tuple of logical axis names (from its
+ParamDef); these rules map them to mesh axes with an automatic fallback:
+if a dim is not divisible by the product of its mapped mesh axes, the
+mapping is dropped (replicated) — so odd head counts (whisper 12H,
+recurrentgemma 10H) and batch=1 decode shapes lower cleanly everywhere.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models import base as B
+
+# rule set: logical axis -> mesh axes (tried in order, dropped if indivisible)
+DEFAULT_RULES: Dict[str, Tuple[str, ...]] = {
+    B.BATCH: ("pod", "data"),
+    B.VOCAB: ("model",),
+    B.EMBED: ("data",),      # FSDP: weights' d_model dim sharded over data
+    B.Q_FEAT: ("model",),
+    B.KV_FEAT: ("model",),
+    B.MLP: ("model",),
+    B.EXPERT: ("model",),
+    B.STATE: ("model",),
+    B.SEQ: (),
+    B.LAYER: (),
+    B.CONV: (),
+}
+
+# variant without FSDP (pure tensor-parallel; small models replicate embed)
+TP_ONLY_RULES = dict(DEFAULT_RULES, **{B.EMBED: ()})
+
+
+def spec_for(
+    shape: Sequence[int],
+    axes: Sequence[Optional[str]],
+    mesh: Mesh,
+    rules: Dict[str, Tuple[str, ...]],
+) -> P:
+    """Build a PartitionSpec for one array, honoring divisibility."""
+    used: set = set()
+    entries: List[Any] = []
+    for dim, ax in zip(shape, axes):
+        if ax is None or ax not in rules:
+            entries.append(None)
+            continue
+        mesh_axes = [
+            m for m in rules[ax] if m in mesh.axis_names and m not in used
+        ]
+        # drop axes until the dim divides the product
+        while mesh_axes:
+            prod = int(np.prod([mesh.shape[m] for m in mesh_axes]))
+            if dim % prod == 0:
+                break
+            mesh_axes = mesh_axes[:-1]
+        if mesh_axes:
+            used.update(mesh_axes)
+            entries.append(tuple(mesh_axes) if len(mesh_axes) > 1 else mesh_axes[0])
+        else:
+            entries.append(None)
+    return P(*entries)
+
+
+def tree_shardings(
+    shapes_tree: Any,
+    axes_tree: Any,
+    mesh: Mesh,
+    rules: Optional[Dict[str, Tuple[str, ...]]] = None,
+) -> Any:
+    """shapes_tree: pytree of ShapeDtypeStruct/arrays; axes_tree: same
+
+    structure of logical-axis tuples -> pytree of NamedSharding."""
+    rules = rules or DEFAULT_RULES
+
+    def one(leaf, axes):
+        return NamedSharding(mesh, spec_for(leaf.shape, axes, mesh, rules))
+
+    # axes_tree tuples sit at shapes_tree's leaf positions; tree_map's
+    # flatten-up-to keeps them whole
+    return jax.tree_util.tree_map(one, shapes_tree, axes_tree)
+
+
+def batch_sharding(mesh: Mesh, shape: Sequence[int], rules=None) -> NamedSharding:
+    """Standard activation sharding: dim0 = batch over (pod, data), with
+
+    divisibility fallback (batch=1 decode shapes replicate)."""
+    rules = rules or DEFAULT_RULES
+    axes = (B.BATCH,) + (None,) * (len(shape) - 1)
+    return NamedSharding(mesh, spec_for(shape, axes, mesh, rules))
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())

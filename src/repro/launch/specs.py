@@ -1,0 +1,112 @@
+"""Assigned input shapes and ShapeDtypeStruct stand-ins for the dry-run.
+
+The four shapes from the brief:
+
+=============  ==========  ============  ===================
+name           seq_len     global_batch  step lowered
+=============  ==========  ============  ===================
+train_4k       4,096       256           train_step
+prefill_32k    32,768      32            prefill
+decode_32k     32,768      128           serve_step (1 token)
+long_500k      524,288     1             serve_step (1 token)
+=============  ==========  ============  ===================
+
+``long_500k`` requires sub-quadratic attention: native for ssm/hybrid;
+dense-family archs run it under the sliding-window *variant*
+(``variant='swa'``, window 4096) — the paper-faithful full-attention
+config skips it (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import create_model
+from repro.models.base import ModelConfig
+
+SWA_WINDOW = 4096
+
+INPUT_SHAPES: Dict[str, Dict[str, Any]] = {
+    "train_4k": {"seq_len": 4096, "global_batch": 256, "kind": "train"},
+    "prefill_32k": {"seq_len": 32768, "global_batch": 32, "kind": "prefill"},
+    "decode_32k": {"seq_len": 32768, "global_batch": 128, "kind": "decode"},
+    "long_500k": {"seq_len": 524288, "global_batch": 1, "kind": "decode"},
+}
+
+# families whose serve path is O(1)/O(window) state natively
+SUBQUADRATIC_FAMILIES = ("ssm", "hybrid")
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapePlan:
+    shape_name: str
+    kind: str                    # train | prefill | decode
+    seq_len: int
+    global_batch: int
+    variant: str                 # "paper" | "swa"
+    skip_reason: Optional[str] = None
+
+
+def plan_for(cfg: ModelConfig, shape_name: str, *, allow_swa: bool = True) -> ShapePlan:
+    info = INPUT_SHAPES[shape_name]
+    variant = "paper"
+    skip = None
+    if shape_name == "long_500k" and cfg.family not in SUBQUADRATIC_FAMILIES:
+        if allow_swa:
+            variant = "swa"  # beyond-paper sliding-window variant
+        else:
+            skip = (
+                f"{cfg.arch_id} is full-attention; long_500k needs sub-quadratic "
+                "attention (run with --variant swa)"
+            )
+    return ShapePlan(shape_name, info["kind"], info["seq_len"], info["global_batch"], variant, skip)
+
+
+def apply_variant(cfg: ModelConfig, plan: ShapePlan) -> ModelConfig:
+    if plan.variant == "swa":
+        return cfg.with_overrides(sliding_window=SWA_WINDOW)
+    return cfg
+
+
+def _sds(shape, dtype) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def input_specs(cfg: ModelConfig, plan: ShapePlan) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of the lowered step
+
+    (weak-type-correct, shardable, no device allocation)."""
+    Bsz, S = plan.global_batch, plan.seq_len
+    if plan.kind == "train":
+        batch: Dict[str, Any] = {
+            "tokens": _sds((Bsz, S), jnp.int32),
+            "labels": _sds((Bsz, S), jnp.int32),
+        }
+        if cfg.family == "encdec":
+            batch["frames"] = _sds((Bsz, cfg.encoder_seq, cfg.d_model), cfg.activ_dtype)
+        if cfg.family == "vlm":
+            batch["patches"] = _sds((Bsz, cfg.num_patches, cfg.d_model), cfg.activ_dtype)
+        return {"batch": batch}
+    if plan.kind == "prefill":
+        out: Dict[str, Any] = {"tokens": _sds((Bsz, S), jnp.int32)}
+        if cfg.family == "encdec":
+            out["frames"] = _sds((Bsz, cfg.encoder_seq, cfg.d_model), cfg.activ_dtype)
+        if cfg.family == "vlm":
+            out["patches"] = _sds((Bsz, cfg.num_patches, cfg.d_model), cfg.activ_dtype)
+        return out
+    # decode: ONE new token against a seq_len-sized cache/state
+    model = create_model(cfg)
+    cache = jax.eval_shape(lambda: model.init_cache(Bsz, S))
+    return {
+        "cache": cache,
+        "tokens": _sds((Bsz, 1), jnp.int32),
+        "pos": _sds((), jnp.int32),
+    }
+
+
+def params_specs(cfg: ModelConfig) -> Any:
+    model = create_model(cfg)
+    return jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))

@@ -1,0 +1,34 @@
+from typing import Any
+
+from repro.models.base import ModelConfig, active_param_count, param_count
+from repro.models.encdec import EncDecModel
+from repro.models.rglru import GriffinModel
+from repro.models.ssm import XLSTMModel
+from repro.models.transformer import DecoderLM
+
+
+def create_model(cfg: ModelConfig) -> Any:
+    """Family dispatch. 'audio' backbones are enc-dec; 'vlm' backbones are
+
+    decoders with a patch-embedding prefix (frontends are stubs per brief)."""
+    if cfg.family in ("dense", "moe", "vlm"):
+        return DecoderLM(cfg)
+    if cfg.family == "ssm":
+        return XLSTMModel(cfg)
+    if cfg.family == "hybrid":
+        return GriffinModel(cfg)
+    if cfg.family == "encdec":
+        return EncDecModel(cfg)
+    raise ValueError(f"unknown family {cfg.family!r}")
+
+
+__all__ = [
+    "ModelConfig",
+    "create_model",
+    "param_count",
+    "active_param_count",
+    "DecoderLM",
+    "XLSTMModel",
+    "GriffinModel",
+    "EncDecModel",
+]

@@ -1,0 +1,208 @@
+"""Whisper-style encoder-decoder backbone [arXiv:2212.04356].
+
+Per the brief, the modality frontend (mel-spectrogram + conv feature
+extractor) is a STUB: ``input_specs`` provides precomputed frame
+embeddings of shape (batch, encoder_seq, d_model). We implement the
+transformer itself: a bidirectional encoder and a causal decoder with
+cross-attention. Positions are sinusoidal (deviation from Whisper's
+learned decoder positions — noted in DESIGN.md §8 — so that arbitrary
+assigned input shapes don't require giant learned tables).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import base as B
+from repro.models import layers as L
+from repro.models.layers import ParamDef
+
+
+def _enc_block_spec(cfg: B.ModelConfig) -> Dict[str, Any]:
+    return {
+        "attn_norm": L.norm_spec(cfg.d_model),
+        "attn": L.attention_spec(cfg),
+        "mlp_norm": L.norm_spec(cfg.d_model),
+        "mlp": L.mlp_spec(cfg),
+    }
+
+
+def _dec_block_spec(cfg: B.ModelConfig) -> Dict[str, Any]:
+    return {
+        "self_norm": L.norm_spec(cfg.d_model),
+        "self_attn": L.attention_spec(cfg),
+        "cross_norm": L.norm_spec(cfg.d_model),
+        "cross_attn": L.attention_spec(cfg),
+        "mlp_norm": L.norm_spec(cfg.d_model),
+        "mlp": L.mlp_spec(cfg),
+    }
+
+
+class EncDecModel:
+    def __init__(self, cfg: B.ModelConfig) -> None:
+        assert cfg.family == "encdec"
+        assert cfg.encoder_layers > 0 and cfg.encoder_seq > 0
+        self.cfg = cfg
+        self._spec = {
+            "embed": L.embed_spec(cfg),
+            "enc_blocks": L.stack_spec(_enc_block_spec(cfg), cfg.encoder_layers),
+            "enc_norm": L.norm_spec(cfg.d_model),
+            "dec_blocks": L.stack_spec(_dec_block_spec(cfg), cfg.num_layers),
+        }
+
+    def init(self, rng: jax.Array) -> Dict[str, Any]:
+        return L.build_params(rng, self._spec, self.cfg.param_dtype)
+
+    def param_axes(self) -> Dict[str, Any]:
+        return L.build_axes(self._spec)
+
+    # -- encoder ---------------------------------------------------------------
+    def encode(self, params: Dict[str, Any], frames: jnp.ndarray) -> jnp.ndarray:
+        """frames: (B, S_enc, d) stub embeddings -> encoder memory."""
+        cfg = self.cfg
+        x = frames.astype(cfg.activ_dtype)
+        x = x + L.sinusoidal_positions(x.shape[1], cfg.d_model, x.dtype)[None]
+
+        def body(x, bp):
+            h = L.attn_forward(L.rms_norm(x, bp["attn_norm"]), bp["attn"], cfg, causal=False)
+            x = x + h
+            x = x + L.mlp_forward(L.rms_norm(x, bp["mlp_norm"]), bp["mlp"])
+            return x, None
+
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        x, _ = jax.lax.scan(body, x, params["enc_blocks"])
+        return L.rms_norm(x, params["enc_norm"])
+
+    # -- decoder ---------------------------------------------------------------
+    def _dec_block(self, x, bp, memory, *, collect_cache: bool):
+        cfg = self.cfg
+        bsz, s, _ = x.shape
+        xin = L.rms_norm(x, bp["self_norm"])
+        positions = jnp.arange(s)[None, :]
+        q, k, v = L._project_qkv(xin, bp["self_attn"], cfg, positions)
+        out = L.sdpa_or_flash(q, k, v, cfg, causal=True, window=None)
+        x = x + jnp.einsum("bsf,fd->bsd", out, bp["self_attn"]["wo"].astype(x.dtype))
+        h, cross_kv = L.cross_attn_forward(
+            L.rms_norm(x, bp["cross_norm"]), memory, bp["cross_attn"], cfg
+        )
+        x = x + h
+        x = x + L.mlp_forward(L.rms_norm(x, bp["mlp_norm"]), bp["mlp"])
+        cache = None
+        if collect_cache:
+            kvf = cfg.kv_feat
+            cache = {
+                "self_k": k.reshape(bsz, s, kvf).astype(cfg.activ_dtype),
+                "self_v": v.reshape(bsz, s, kvf).astype(cfg.activ_dtype),
+                "cross_k": cross_kv[0].astype(cfg.activ_dtype),
+                "cross_v": cross_kv[1].astype(cfg.activ_dtype),
+            }
+        return x, cache
+
+    def forward(self, params, tokens, frames):
+        cfg = self.cfg
+        memory = self.encode(params, frames)
+        x = L.embed_tokens(tokens, params["embed"], cfg.activ_dtype)
+        x = x + L.sinusoidal_positions(x.shape[1], cfg.d_model, x.dtype)[None]
+
+        def body(x, bp):
+            x, _ = self._dec_block(x, bp, memory, collect_cache=False)
+            return x, None
+
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        x, _ = jax.lax.scan(body, x, params["dec_blocks"])
+        return L.lm_logits(x, params["embed"]), jnp.float32(0.0)
+
+    def loss(self, params, batch):
+        logits, _ = self.forward(params, batch["tokens"], batch["frames"])
+        lm = L.causal_lm_loss(logits[:, :-1], batch["labels"][:, 1:], self.cfg.z_loss)
+        return lm, {"lm_loss": lm, "aux_loss": jnp.float32(0.0)}
+
+    # -- serving ---------------------------------------------------------------
+    def init_cache(self, batch: int, max_len: int) -> Dict[str, Any]:
+        cfg = self.cfg
+        kvf = cfg.kv_feat
+        hd = cfg.resolved_head_dim
+        one = {
+            "self_k": jnp.zeros((batch, max_len, kvf), cfg.activ_dtype),
+            "self_v": jnp.zeros((batch, max_len, kvf), cfg.activ_dtype),
+            "cross_k": jnp.zeros((batch, cfg.encoder_seq, cfg.num_kv_heads, hd), cfg.activ_dtype),
+            "cross_v": jnp.zeros((batch, cfg.encoder_seq, cfg.num_kv_heads, hd), cfg.activ_dtype),
+        }
+        return jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs), *[one for _ in range(cfg.num_layers)]
+        )
+
+    def cache_axes(self) -> Dict[str, Any]:
+        Lx, Bx = B.LAYER, B.BATCH
+        return {
+            "self_k": (Lx, Bx, B.SEQ, B.KV_FEAT),
+            "self_v": (Lx, Bx, B.SEQ, B.KV_FEAT),
+            "cross_k": (Lx, Bx, B.SEQ, None, None),
+            "cross_v": (Lx, Bx, B.SEQ, None, None),
+        }
+
+    def prefill(self, params, tokens, frames):
+        """Encode + run the decoder prompt, returning (logits, cache)."""
+        cfg = self.cfg
+        memory = self.encode(params, frames)
+        x = L.embed_tokens(tokens, params["embed"], cfg.activ_dtype)
+        x = x + L.sinusoidal_positions(x.shape[1], cfg.d_model, x.dtype)[None]
+
+        def body(x, bp):
+            x, cache = self._dec_block(x, bp, memory, collect_cache=True)
+            # reshape cross kv to cache layout
+            return x, cache
+
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        x, caches = jax.lax.scan(body, x, params["dec_blocks"])
+        logits = L.lm_logits(x[:, -1:], params["embed"])
+        return logits, caches
+
+    def decode_step(self, params, cache, tokens, pos):
+        """tokens: (B,1); cache from init_cache/prefill; pos: scalar."""
+        cfg = self.cfg
+        x = L.embed_tokens(tokens, params["embed"], cfg.activ_dtype)
+        pos_enc = L.sinusoidal_positions(2, cfg.d_model, x.dtype)  # table lookup
+        # sinusoidal at absolute pos: compute directly
+        x = x + _sinusoid_at(pos, cfg.d_model, x.dtype)
+
+        def body(x, inp):
+            bp, cl = inp
+            self_cache = {"k": cl["self_k"], "v": cl["self_v"]}
+            h, new_self = L.attn_decode(
+                L.rms_norm(x, bp["self_norm"]), bp["self_attn"], self_cache, pos, cfg
+            )
+            x = x + h
+            h, _ = L.cross_attn_forward(
+                L.rms_norm(x, bp["cross_norm"]),
+                memory=None,
+                p=bp["cross_attn"],
+                cfg=cfg,
+                kv=(cl["cross_k"], cl["cross_v"]),
+            )
+            x = x + h
+            x = x + L.mlp_forward(L.rms_norm(x, bp["mlp_norm"]), bp["mlp"])
+            new_cache = {
+                "self_k": new_self["k"],
+                "self_v": new_self["v"],
+                "cross_k": cl["cross_k"],
+                "cross_v": cl["cross_v"],
+            }
+            return x, new_cache
+
+        x, new_caches = jax.lax.scan(body, x, (params["dec_blocks"], cache))
+        return L.lm_logits(x, params["embed"]), new_caches
+
+
+def _sinusoid_at(pos: jnp.ndarray, d: int, dtype) -> jnp.ndarray:
+    import numpy as np
+
+    half = d // 2
+    dim = jnp.arange(half, dtype=jnp.float32)
+    ang = pos.astype(jnp.float32) / jnp.power(10000.0, 2 * dim / d)
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)])[None, None, :].astype(dtype)

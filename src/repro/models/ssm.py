@@ -1,0 +1,500 @@
+"""xLSTM (sLSTM + mLSTM) blocks [arXiv:2405.04517].
+
+mLSTM — matrix-memory LSTM with exponential gating. Three formulations,
+all semantically identical (tests assert pairwise agreement):
+
+* ``mlstm_step``      — O(1)-state recurrent step (decode path).
+* ``mlstm_parallel``  — quadratic attention-like form (reference).
+* ``mlstm_chunkwise`` — chunked parallel form: intra-chunk quadratic +
+  inter-chunk recurrent state, the TPU-native training path (S x S never
+  materializes; (Tc x Tc) tiles fit VMEM). This is the standard
+  hardware-efficient mLSTM scheme adapted from the paper's CUDA kernels.
+
+sLSTM — scalar-memory LSTM with exponential gating and block-diagonal
+(per-head) recurrent weights; inherently sequential (paper §2.2), so both
+train and decode use ``lax.scan`` over time.
+
+All exponential gates are stabilized with a running max ``m`` as in the
+paper's appendix.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import base as B
+from repro.models import layers as L
+from repro.models.layers import ParamDef
+
+
+# ---------------------------------------------------------------------------
+# mLSTM core math (per batch x head; feature dim hd)
+# ---------------------------------------------------------------------------
+
+def mlstm_step(
+    state: Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray],
+    q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+    logi: jnp.ndarray, logf: jnp.ndarray,
+) -> Tuple[Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray], jnp.ndarray]:
+    """One decode step. state = (C (...,hd,hd), n (...,hd), m (...,)).
+
+    q,k,v: (..., hd); logi/logf: (...,) per-head scalars.
+    """
+    C, n, m = state
+    m_new = jnp.maximum(logf + m, logi)
+    a = jnp.exp(logf + m - m_new)[..., None, None]
+    b = jnp.exp(logi - m_new)[..., None, None]
+    C_new = a * C + b * (k[..., :, None] * v[..., None, :])
+    n_new = a[..., 0] * n + b[..., 0] * k
+    num = jnp.einsum("...h,...hv->...v", q, C_new)
+    den = jnp.abs(jnp.einsum("...h,...h->...", q, n_new))
+    den = jnp.maximum(den, jnp.exp(-m_new))[..., None]
+    return (C_new, n_new, m_new), num / den
+
+
+def mlstm_parallel(q, k, v, logi, logf):
+    """Reference quadratic form. q,k,v: (B,H,S,hd); logi/logf: (B,H,S)."""
+    S = q.shape[2]
+    F = jnp.cumsum(logf, axis=-1)                          # (B,H,S)
+    D = F[..., :, None] - F[..., None, :] + logi[..., None, :]
+    tri = jnp.tril(jnp.ones((S, S), bool))
+    D = jnp.where(tri, D, -jnp.inf)
+    m = jnp.max(D, axis=-1)                                # (B,H,S)
+    E = jnp.exp(D - m[..., None])
+    scores = jnp.einsum("bhsd,bhtd->bhst", q, k) * E
+    den = jnp.maximum(jnp.abs(jnp.sum(scores, axis=-1)), jnp.exp(-m))
+    return jnp.einsum("bhst,bhtd->bhsd", scores, v) / den[..., None]
+
+
+def mlstm_chunkwise(q, k, v, logi, logf, chunk: int = 256,
+                    state: Optional[Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]] = None):
+    """Chunked parallel mLSTM. q,k,v: (B,H,S,hd); logi/logf: (B,H,S).
+
+    Returns (h (B,H,S,hd), final_state). S must be a multiple of ``chunk``.
+    """
+    Bsz, H, S, hd = q.shape
+    assert S % chunk == 0, (S, chunk)
+    nc = S // chunk
+
+    def to_chunks(x):
+        return x.reshape(Bsz, H, nc, chunk, *x.shape[4:]) if x.ndim > 3 else x.reshape(Bsz, H, nc, chunk)
+
+    qc = q.reshape(Bsz, H, nc, chunk, hd).transpose(2, 0, 1, 3, 4)
+    kc = k.reshape(Bsz, H, nc, chunk, hd).transpose(2, 0, 1, 3, 4)
+    vc = v.reshape(Bsz, H, nc, chunk, hd).transpose(2, 0, 1, 3, 4)
+    lic = logi.reshape(Bsz, H, nc, chunk).transpose(2, 0, 1, 3)
+    lfc = logf.reshape(Bsz, H, nc, chunk).transpose(2, 0, 1, 3)
+
+    if state is None:
+        C0 = jnp.zeros((Bsz, H, hd, hd), jnp.float32)
+        n0 = jnp.zeros((Bsz, H, hd), jnp.float32)
+        m0 = jnp.full((Bsz, H), -jnp.inf)
+        state = (C0, n0, m0)
+
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+
+    def body(carry, xs):
+        C, n, m_prev = carry
+        qt, kt, vt, li, lf = xs                            # (B,H,Tc,...)
+        Lt = jnp.cumsum(lf, axis=-1)                       # (B,H,Tc) inclusive
+        b_tot = Lt[..., -1]                                # (B,H)
+        # intra-chunk decay matrix D_tj = L_t - L_j + logi_j  (t >= j)
+        D = Lt[..., :, None] - Lt[..., None, :] + li[..., None, :]
+        D = jnp.where(tri, D, -jnp.inf)
+        m_intra = jnp.max(D, axis=-1)                      # (B,H,Tc)
+        # inter contribution enters at weight L_t + m_prev
+        m_t = jnp.maximum(m_intra, Lt + m_prev[..., None])
+        w_inter = jnp.exp(Lt + m_prev[..., None] - m_t)    # (B,H,Tc)
+        E = jnp.exp(D - m_t[..., None])                    # (B,H,Tc,Tc)
+        scores = jnp.einsum("bhsd,bhtd->bhst", qt, kt) * E
+        num = (
+            jnp.einsum("bhst,bhtd->bhsd", scores, vt)
+            + w_inter[..., None] * jnp.einsum("bhsd,bhdv->bhsv", qt, C)
+        )
+        den = jnp.sum(scores, axis=-1) + w_inter * jnp.einsum("bhsd,bhd->bhs", qt, n)
+        den = jnp.maximum(jnp.abs(den), jnp.exp(-m_t))
+        h = num / den[..., None]
+        # state update to end of chunk
+        w_state = b_tot[..., None] - Lt + li               # (B,H,Tc): b - L_j + logi_j
+        m_new = jnp.maximum(b_tot + m_prev, jnp.max(w_state, axis=-1))
+        decay_C = jnp.exp(b_tot + m_prev - m_new)[..., None, None]
+        wk = jnp.exp(w_state - m_new[..., None])           # (B,H,Tc)
+        C_new = decay_C * C + jnp.einsum("bhtd,bht,bhtv->bhdv", kt, wk, vt)
+        n_new = decay_C[..., 0] * n + jnp.einsum("bhtd,bht->bhd", kt, wk)
+        return (C_new, n_new, m_new), h
+
+    final_state, hs = jax.lax.scan(body, state, (qc, kc, vc, lic, lfc))
+    h = hs.transpose(1, 2, 0, 3, 4).reshape(Bsz, H, S, hd)
+    return h, final_state
+
+
+# ---------------------------------------------------------------------------
+# mLSTM block (up-proj, causal conv, qkv, gates, out-gate, down-proj)
+# ---------------------------------------------------------------------------
+
+CONV_K = 4  # causal depthwise conv kernel width (paper's conv4)
+
+
+def _mlstm_dims(cfg: B.ModelConfig) -> Tuple[int, int, int]:
+    d_inner = 2 * cfg.d_model
+    H = cfg.num_heads
+    return d_inner, H, d_inner // H
+
+
+def mlstm_spec(cfg: B.ModelConfig) -> Dict[str, Any]:
+    d = cfg.d_model
+    d_inner, H, hd = _mlstm_dims(cfg)
+    return {
+        "norm": L.norm_spec(d),
+        "w_up": ParamDef((d, 2 * d_inner), (B.EMBED, B.MLP)),        # [x_m | z]
+        "conv_w": ParamDef((CONV_K, d_inner), (None, B.MLP)),
+        "wq": ParamDef((d_inner, d_inner), (B.MLP, B.Q_FEAT)),
+        "wk": ParamDef((d_inner, d_inner), (B.MLP, B.Q_FEAT)),
+        "wv": ParamDef((d_inner, d_inner), (B.MLP, B.Q_FEAT)),
+        "w_i": ParamDef((d_inner, H), (B.MLP, None)),
+        "b_i": ParamDef((H,), (None,), init="zeros"),
+        "w_f": ParamDef((d_inner, H), (B.MLP, None)),
+        "b_f": ParamDef((H,), (None,), init="zeros"),
+        "out_norm": ParamDef((d_inner,), (B.MLP,), init="zeros"),
+        "w_down": ParamDef((d_inner, d), (B.MLP, B.EMBED)),
+    }
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, prev: Optional[jnp.ndarray] = None):
+    """Depthwise causal conv. x: (B,S,D); w: (K,D); prev: (B,K-1,D) state.
+
+    Returns (y, new_prev)."""
+    K = w.shape[0]
+    if prev is None:
+        prev = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([prev, x], axis=1)
+    y = sum(xp[:, i : i + x.shape[1]] * w[i].astype(x.dtype) for i in range(K))
+    return y, xp[:, -(K - 1) :]
+
+
+def _mlstm_project(xm, p, cfg):
+    """Shared q/k/v/gate projections. xm: (B,S,d_inner) post-conv input."""
+    d_inner, H, hd = _mlstm_dims(cfg)
+    Bsz, S, _ = xm.shape
+    q = jnp.einsum("bsd,de->bse", xm, p["wq"].astype(xm.dtype)) / np.sqrt(hd)
+    k = jnp.einsum("bsd,de->bse", xm, p["wk"].astype(xm.dtype)) / np.sqrt(hd)
+    v = jnp.einsum("bsd,de->bse", xm, p["wv"].astype(xm.dtype))
+    heads = lambda t: t.reshape(Bsz, S, H, hd).transpose(0, 2, 1, 3)
+    logi = jnp.einsum("bsd,dh->bsh", xm, p["w_i"].astype(xm.dtype)) + p["b_i"].astype(xm.dtype)
+    logf = jax.nn.log_sigmoid(
+        jnp.einsum("bsd,dh->bsh", xm, p["w_f"].astype(xm.dtype)).astype(jnp.float32)
+        + p["b_f"].astype(jnp.float32)
+    )
+    return (
+        heads(q).astype(jnp.float32),
+        heads(k).astype(jnp.float32),
+        heads(v).astype(jnp.float32),
+        logi.transpose(0, 2, 1).astype(jnp.float32),
+        logf.transpose(0, 2, 1),
+    )
+
+
+def mlstm_block_forward(x: jnp.ndarray, p: Dict[str, Any], cfg: B.ModelConfig,
+                        chunk: int = 256) -> jnp.ndarray:
+    d_inner, H, hd = _mlstm_dims(cfg)
+    Bsz, S, _ = x.shape
+    xin = L.rms_norm(x, p["norm"])
+    up = jnp.einsum("bsd,de->bse", xin, p["w_up"].astype(x.dtype))
+    xm_raw, z = jnp.split(up, 2, axis=-1)
+    xm, _ = _causal_conv(xm_raw, p["conv_w"])
+    xm = jax.nn.silu(xm)
+    q, k, v, logi, logf = _mlstm_project(xm, p, cfg)
+    c = min(chunk, S)
+    if S % c != 0:
+        c = S  # tiny smoke shapes: single chunk
+    h, _ = mlstm_chunkwise(q, k, v, logi, logf, chunk=c)
+    h = h.transpose(0, 2, 1, 3).reshape(Bsz, S, d_inner).astype(x.dtype)
+    h = L.rms_norm(h, p["out_norm"])
+    h = h * jax.nn.silu(z)
+    return x + jnp.einsum("bse,ed->bsd", h, p["w_down"].astype(x.dtype))
+
+
+def mlstm_init_state(cfg: B.ModelConfig, batch: int) -> Dict[str, jnp.ndarray]:
+    d_inner, H, hd = _mlstm_dims(cfg)
+    return {
+        "C": jnp.zeros((batch, H, hd, hd), jnp.float32),
+        "n": jnp.zeros((batch, H, hd), jnp.float32),
+        "m": jnp.full((batch, H), -1e30, jnp.float32),
+        "conv": jnp.zeros((batch, CONV_K - 1, d_inner), cfg.activ_dtype),
+    }
+
+
+def mlstm_block_decode(x, p, state, cfg):
+    """x: (B,1,d)."""
+    d_inner, H, hd = _mlstm_dims(cfg)
+    Bsz = x.shape[0]
+    xin = L.rms_norm(x, p["norm"])
+    up = jnp.einsum("bsd,de->bse", xin, p["w_up"].astype(x.dtype))
+    xm_raw, z = jnp.split(up, 2, axis=-1)
+    xm, conv_new = _causal_conv(xm_raw, p["conv_w"], state["conv"])
+    xm = jax.nn.silu(xm)
+    q, k, v, logi, logf = _mlstm_project(xm, p, cfg)     # (B,H,1,hd)/(B,H,1)
+    sq, sk, sv = q[:, :, 0], k[:, :, 0], v[:, :, 0]
+    (C, n, m), h = mlstm_step(
+        (state["C"], state["n"], state["m"]), sq, sk, sv, logi[:, :, 0], logf[:, :, 0]
+    )
+    h = h.reshape(Bsz, 1, d_inner).astype(x.dtype)
+    h = L.rms_norm(h, p["out_norm"]) * jax.nn.silu(z)
+    out = x + jnp.einsum("bse,ed->bsd", h, p["w_down"].astype(x.dtype))
+    return out, {"C": C, "n": n, "m": m, "conv": conv_new}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM block (scalar memory, block-diagonal recurrence, post-FFN)
+# ---------------------------------------------------------------------------
+
+def _slstm_dims(cfg: B.ModelConfig) -> Tuple[int, int]:
+    H = cfg.num_heads
+    return H, cfg.d_model // H
+
+
+def slstm_spec(cfg: B.ModelConfig) -> Dict[str, Any]:
+    d = cfg.d_model
+    H, hd = _slstm_dims(cfg)
+    f_in = int(round(4 * d / 3 / 64)) * 64  # pf 4/3, rounded to lanes
+    # recurrent weights are deliberately REPLICATED (axes None): they are
+    # tiny (H x hd x hd) and sharding them forces a per-timestep
+    # reshard/psum inside the scan (perf iteration 2, EXPERIMENTS.md §Perf)
+    gates = {
+        name: {
+            "w": ParamDef((d, d), (B.EMBED, B.Q_FEAT)),
+            "r": ParamDef((H, hd, hd), (None, None, None)),
+            "b": ParamDef((d,), (B.Q_FEAT,), init="zeros"),
+        }
+        for name in ("z", "i", "f", "o")
+    }
+    return {
+        "norm": L.norm_spec(d),
+        **gates,
+        "out_norm": ParamDef((d,), (B.EMBED,), init="zeros"),
+        "ffn_norm": L.norm_spec(d),
+        "ffn": {
+            "w_gate": ParamDef((d, f_in), (B.EMBED, B.MLP)),
+            "w_up": ParamDef((d, f_in), (B.EMBED, B.MLP)),
+            "w_down": ParamDef((f_in, d), (B.MLP, B.EMBED)),
+        },
+    }
+
+
+def slstm_gate_x(xin: jnp.ndarray, p: Dict[str, Any], cfg: B.ModelConfig) -> Dict[str, jnp.ndarray]:
+    """Hoisted input projections: one GEMM per gate over the WHOLE
+
+    sequence, outside the time scan (cuDNN-LSTM-style; perf iteration 2).
+    xin: (B,S,d) -> {name: (B,S,H,hd)}."""
+    H, hd = _slstm_dims(cfg)
+    Bsz, S, _ = xin.shape
+    out = {}
+    for name in ("z", "i", "f", "o"):
+        g = jnp.einsum("bsd,de->bse", xin, p[name]["w"].astype(xin.dtype))
+        g = g + p[name]["b"].astype(xin.dtype)
+        out[name] = g.reshape(Bsz, S, H, hd)
+    return out
+
+
+def _slstm_cell(state, gx_t, p, cfg):
+    """state: dict(c,n,h,m) each (B,H,hd). gx_t: {name: (B,H,hd)} hoisted
+
+    input-projection slices; only the recurrent (h-dependent) part runs
+    inside the scan."""
+    h_prev = state["h"]                                   # (B,H,hd)
+    dtype = gx_t["z"].dtype
+
+    def gate(name):
+        r = p[name]["r"]
+        gh = jnp.einsum("bhk,hkl->bhl", h_prev.astype(dtype), r.astype(dtype))
+        return (gx_t[name] + gh).astype(jnp.float32)
+
+    z = jnp.tanh(gate("z"))
+    o = jax.nn.sigmoid(gate("o"))
+    logi = gate("i")
+    logf = jax.nn.log_sigmoid(gate("f"))
+    m_new = jnp.maximum(logf + state["m"], logi)
+    i_s = jnp.exp(logi - m_new)
+    f_s = jnp.exp(logf + state["m"] - m_new)
+    c = f_s * state["c"] + i_s * z
+    n = f_s * state["n"] + i_s
+    h = o * c / jnp.maximum(n, 1e-6)
+    # keep the per-step state (and hence the stacked scan residuals)
+    # batch-sharded — without this GSPMD shards (B,H,hd) on heads only and
+    # every device carries the FULL batch of residuals (§Perf pair 2)
+    cstr = lambda t: L.constrain(t, (B.BATCH, None, None))
+    return {"c": cstr(c), "n": cstr(n), "h": cstr(h), "m": cstr(m_new)}
+
+
+def slstm_init_state(cfg: B.ModelConfig, batch: int) -> Dict[str, jnp.ndarray]:
+    H, hd = _slstm_dims(cfg)
+    z = lambda: jnp.zeros((batch, H, hd), jnp.float32)
+    return {"c": z(), "n": z(), "h": z(), "m": jnp.full((batch, H, hd), -1e30)}
+
+
+def slstm_block_forward(x: jnp.ndarray, p: Dict[str, Any], cfg: B.ModelConfig) -> jnp.ndarray:
+    Bsz, S, d = x.shape
+    H, hd = _slstm_dims(cfg)
+    xin = L.rms_norm(x, p["norm"])
+    gx = slstm_gate_x(xin, p, cfg)  # hoisted GEMMs, (B,S,H,hd) per gate
+    gx_t = jax.tree_util.tree_map(lambda g: g.transpose(1, 0, 2, 3), gx)
+
+    def step(state, gx_slice):
+        new = _slstm_cell(state, gx_slice, p, cfg)
+        return new, new["h"]
+
+    _, hs = jax.lax.scan(step, slstm_init_state(cfg, Bsz), gx_t)
+    h = hs.transpose(1, 0, 2, 3).reshape(Bsz, S, d).astype(x.dtype)
+    x = x + L.rms_norm(h, p["out_norm"])
+    h = L.rms_norm(x, p["ffn_norm"])
+    g = jnp.einsum("bsd,df->bsf", h, p["ffn"]["w_gate"].astype(x.dtype))
+    u = jnp.einsum("bsd,df->bsf", h, p["ffn"]["w_up"].astype(x.dtype))
+    return x + jnp.einsum("bsf,fd->bsd", jax.nn.silu(g) * u, p["ffn"]["w_down"].astype(x.dtype))
+
+
+def slstm_block_decode(x, p, state, cfg):
+    Bsz, _, d = x.shape
+    xin = L.rms_norm(x, p["norm"])
+    gx = slstm_gate_x(xin, p, cfg)
+    new = _slstm_cell(state, {k: v[:, 0] for k, v in gx.items()}, p, cfg)
+    h = new["h"].reshape(Bsz, 1, d).astype(x.dtype)
+    x = x + L.rms_norm(h, p["out_norm"])
+    hh = L.rms_norm(x, p["ffn_norm"])
+    g = jnp.einsum("bsd,df->bsf", hh, p["ffn"]["w_gate"].astype(x.dtype))
+    u = jnp.einsum("bsd,df->bsf", hh, p["ffn"]["w_up"].astype(x.dtype))
+    out = x + jnp.einsum("bsf,fd->bsd", jax.nn.silu(g) * u, p["ffn"]["w_down"].astype(x.dtype))
+    return out, new
+
+
+# ---------------------------------------------------------------------------
+# xLSTM model: scan over (mLSTM, sLSTM) super-blocks
+# ---------------------------------------------------------------------------
+
+class XLSTMModel:
+    def __init__(self, cfg: B.ModelConfig) -> None:
+        assert cfg.family == "ssm"
+        assert cfg.num_layers % 2 == 0, "xLSTM super-block = (mLSTM, sLSTM)"
+        self.cfg = cfg
+        self.n_super = cfg.num_layers // 2
+        super_spec = {"mlstm": mlstm_spec(cfg), "slstm": slstm_spec(cfg)}
+        self._spec = {
+            "embed": L.embed_spec(cfg),
+            "blocks": L.stack_spec(super_spec, self.n_super),
+        }
+
+    def init(self, rng: jax.Array) -> Dict[str, Any]:
+        return L.build_params(rng, self._spec, self.cfg.param_dtype)
+
+    def param_axes(self) -> Dict[str, Any]:
+        return L.build_axes(self._spec)
+
+    def forward(self, params, tokens, patches=None):
+        cfg = self.cfg
+        x = L.embed_tokens(tokens, params["embed"], cfg.activ_dtype)
+
+        def body(x, bp):
+            x = mlstm_block_forward(x, bp["mlstm"], cfg)
+            x = slstm_block_forward(x, bp["slstm"], cfg)
+            return x, None
+
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        x, _ = jax.lax.scan(body, x, params["blocks"])
+        return L.lm_logits(x, params["embed"]), jnp.float32(0.0)
+
+    def loss(self, params, batch):
+        logits, _ = self.forward(params, batch["tokens"])
+        lm = L.causal_lm_loss(logits[:, :-1], batch["labels"][:, 1:], self.cfg.z_loss)
+        return lm, {"lm_loss": lm, "aux_loss": jnp.float32(0.0)}
+
+    # -- serving (O(1) state; no KV cache — the long_500k native path) ------
+    def init_cache(self, batch: int, max_len: int) -> Dict[str, Any]:
+        del max_len
+        cfg = self.cfg
+        one = {
+            "mlstm": mlstm_init_state(cfg, batch),
+            "slstm": slstm_init_state(cfg, batch),
+        }
+        states = [one for _ in range(self.n_super)]
+        return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *states)
+
+    def cache_axes(self) -> Dict[str, Any]:
+        Lx, Bx, ST, MLP = B.LAYER, B.BATCH, B.STATE, B.MLP
+        return {
+            "mlstm": {
+                "C": (Lx, Bx, None, ST, None),
+                "n": (Lx, Bx, None, ST),
+                "m": (Lx, Bx, None),
+                "conv": (Lx, Bx, None, MLP),
+            },
+            "slstm": {
+                "c": (Lx, Bx, None, ST),
+                "n": (Lx, Bx, None, ST),
+                "h": (Lx, Bx, None, ST),
+                "m": (Lx, Bx, None, ST),
+            },
+        }
+
+    def prefill(self, params, tokens, patches=None):
+        """Recurrent prefill: run the sequence, return last logits + state."""
+        cfg = self.cfg
+        x = L.embed_tokens(tokens, params["embed"], cfg.activ_dtype)
+        Bsz, S, d = x.shape
+
+        def body(x, bp):
+            # chunkwise mLSTM with state capture
+            xin = L.rms_norm(x, bp["mlstm"]["norm"])
+            up = jnp.einsum("bsd,de->bse", xin, bp["mlstm"]["w_up"].astype(x.dtype))
+            xm_raw, z = jnp.split(up, 2, axis=-1)
+            xm, conv_state = _causal_conv(xm_raw, bp["mlstm"]["conv_w"])
+            xm = jax.nn.silu(xm)
+            q, k, v, logi, logf = _mlstm_project(xm, bp["mlstm"], cfg)
+            c = 256 if S % 256 == 0 else S
+            h, (C, n, m) = mlstm_chunkwise(q, k, v, logi, logf, chunk=c)
+            d_inner = 2 * cfg.d_model
+            h = h.transpose(0, 2, 1, 3).reshape(Bsz, S, d_inner).astype(x.dtype)
+            h = L.rms_norm(h, bp["mlstm"]["out_norm"]) * jax.nn.silu(z)
+            x = x + jnp.einsum("bse,ed->bsd", h, bp["mlstm"]["w_down"].astype(x.dtype))
+            mlstm_state = {"C": C, "n": n, "m": m, "conv": conv_state}
+            # sLSTM scan with final state capture (hoisted input GEMMs)
+            xin = L.rms_norm(x, bp["slstm"]["norm"])
+            gx = slstm_gate_x(xin, bp["slstm"], cfg)
+            gx_t = jax.tree_util.tree_map(lambda g: g.transpose(1, 0, 2, 3), gx)
+
+            def step(state, gx_slice):
+                new = _slstm_cell(state, gx_slice, bp["slstm"], cfg)
+                return new, new["h"]
+
+            sfinal, hs = jax.lax.scan(step, slstm_init_state(cfg, Bsz), gx_t)
+            h = hs.transpose(1, 0, 2, 3).reshape(Bsz, S, d).astype(x.dtype)
+            x = x + L.rms_norm(h, bp["slstm"]["out_norm"])
+            hh = L.rms_norm(x, bp["slstm"]["ffn_norm"])
+            g = jnp.einsum("bsd,df->bsf", hh, bp["slstm"]["ffn"]["w_gate"].astype(x.dtype))
+            u = jnp.einsum("bsd,df->bsf", hh, bp["slstm"]["ffn"]["w_up"].astype(x.dtype))
+            x = x + jnp.einsum(
+                "bsf,fd->bsd", jax.nn.silu(g) * u, bp["slstm"]["ffn"]["w_down"].astype(x.dtype)
+            )
+            return x, {"mlstm": mlstm_state, "slstm": sfinal}
+
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        x, states = jax.lax.scan(body, x, params["blocks"])
+        logits = L.lm_logits(x[:, -1:], params["embed"])
+        return logits, states
+
+    def decode_step(self, params, cache, tokens, pos):
+        del pos  # recurrent state is position-free
+        cfg = self.cfg
+        x = L.embed_tokens(tokens, params["embed"], cfg.activ_dtype)
+
+        def body(x, inp):
+            bp, st = inp
+            x, m_new = mlstm_block_decode(x, bp["mlstm"], st["mlstm"], cfg)
+            x, s_new = slstm_block_decode(x, bp["slstm"], st["slstm"], cfg)
+            return x, {"mlstm": m_new, "slstm": s_new}
+
+        x, new_states = jax.lax.scan(body, x, (params["blocks"], cache))
+        return L.lm_logits(x, params["embed"]), new_states

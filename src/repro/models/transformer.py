@@ -1,0 +1,217 @@
+"""Decoder-only transformer assembly (dense, MoE, VLM-backbone).
+
+One scanned super-layer = attention + (MLP | MoE). All per-layer params
+are stacked on a leading ``layer`` axis and the forward is a
+``jax.lax.scan``, keeping HLO size O(1) in depth — essential for the
+40-pair dry-run sweep (DESIGN.md §4). The VLM family is this same decoder
+consuming stub patch embeddings as a prefix (the carve-out in the brief).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import base as B
+from repro.models import layers as L
+from repro.models import moe as M
+
+
+def _block_spec(cfg: B.ModelConfig) -> Dict[str, Any]:
+    spec: Dict[str, Any] = {
+        "attn_norm": L.norm_spec(cfg.d_model),
+        "attn": L.attention_spec(cfg),
+        "mlp_norm": L.norm_spec(cfg.d_model),
+    }
+    if cfg.family == "moe":
+        spec["moe"] = M.moe_spec(cfg)
+    else:
+        spec["mlp"] = L.mlp_spec(cfg)
+    return spec
+
+
+def _block_forward(
+    x: jnp.ndarray, bp: Dict[str, Any], cfg: B.ModelConfig, *, window: Optional[int]
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    h = L.attn_forward(L.rms_norm(x, bp["attn_norm"]), bp["attn"], cfg, causal=True, window=window)
+    x = x + h
+    aux = jnp.float32(0.0)
+    if cfg.family == "moe":
+        h, aux = M.moe_forward(L.rms_norm(x, bp["mlp_norm"]), bp["moe"], cfg)
+    else:
+        h = L.mlp_forward(L.rms_norm(x, bp["mlp_norm"]), bp["mlp"])
+    return x + h, aux
+
+
+def _block_decode(
+    x: jnp.ndarray,
+    bp: Dict[str, Any],
+    cache: Dict[str, jnp.ndarray],
+    pos: jnp.ndarray,
+    cfg: B.ModelConfig,
+    *,
+    window: Optional[int],
+) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    h, new_cache = L.attn_decode(
+        L.rms_norm(x, bp["attn_norm"]), bp["attn"], cache, pos, cfg, window=window
+    )
+    x = x + h
+    if cfg.family == "moe":
+        h, _ = M.moe_forward(L.rms_norm(x, bp["mlp_norm"]), bp["moe"], cfg)
+    else:
+        h = L.mlp_forward(L.rms_norm(x, bp["mlp_norm"]), bp["mlp"])
+    return x + h, new_cache
+
+
+class DecoderLM:
+    """dense | moe | vlm families."""
+
+    def __init__(self, cfg: B.ModelConfig) -> None:
+        assert cfg.family in ("dense", "moe", "vlm"), cfg.family
+        self.cfg = cfg
+        self._spec = {
+            "embed": L.embed_spec(cfg),
+            "blocks": L.stack_spec(_block_spec(cfg), cfg.num_layers),
+        }
+
+    # -- params ------------------------------------------------------------
+    def init(self, rng: jax.Array) -> Dict[str, Any]:
+        return L.build_params(rng, self._spec, self.cfg.param_dtype)
+
+    def param_axes(self) -> Dict[str, Any]:
+        return L.build_axes(self._spec)
+
+    # -- forward / loss ------------------------------------------------------
+    def _backbone(self, params: Dict[str, Any], x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        cfg = self.cfg
+        window = cfg.sliding_window
+
+        def body(carry, bp):
+            x, aux = carry
+            x, a = _block_forward(x, bp, cfg, window=window)
+            return (x, aux + a), None
+
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        (x, aux), _ = jax.lax.scan(body, (x, jnp.float32(0.0)), params["blocks"])
+        return x, aux
+
+    def forward(
+        self,
+        params: Dict[str, Any],
+        tokens: jnp.ndarray,
+        patches: Optional[jnp.ndarray] = None,
+    ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        cfg = self.cfg
+        x = L.embed_tokens(tokens, params["embed"], cfg.activ_dtype)
+        n_prefix = 0
+        if patches is not None:
+            x = jnp.concatenate([patches.astype(cfg.activ_dtype), x], axis=1)
+            n_prefix = patches.shape[1]
+        x, aux = self._backbone(params, x)
+        logits = L.lm_logits(x[:, n_prefix:], params["embed"])
+        return logits, aux
+
+    def loss(self, params: Dict[str, Any], batch: Dict[str, jnp.ndarray]) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+        cfg = self.cfg
+        logits, aux = self.forward(params, batch["tokens"], batch.get("patches"))
+        lm = L.causal_lm_loss(logits[:, :-1], batch["labels"][:, 1:], cfg.z_loss)
+        total = lm + cfg.aux_loss_coef * aux
+        return total, {"lm_loss": lm, "aux_loss": aux}
+
+    # -- serving -------------------------------------------------------------
+    def init_cache(self, batch: int, max_len: int) -> Dict[str, Any]:
+        cfg = self.cfg
+        window = cfg.sliding_window
+
+        def one_layer(_):
+            if window is not None:
+                return L.init_window_cache(cfg, batch, min(window, max_len), cfg.activ_dtype)
+            return L.init_full_cache(cfg, batch, max_len, cfg.activ_dtype)
+
+        # stacked over layers
+        caches = [one_layer(i) for i in range(cfg.num_layers)]
+        return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *caches)
+
+    def cache_axes(self) -> Dict[str, Any]:
+        """Logical axes for the decode cache (mirrors init_cache)."""
+        base = {
+            "k": (B.LAYER, B.BATCH, B.SEQ, B.KV_FEAT),
+            "v": (B.LAYER, B.BATCH, B.SEQ, B.KV_FEAT),
+        }
+        if self.cfg.sliding_window is not None:
+            base["pos"] = (B.LAYER, B.BATCH, B.SEQ)
+        return base
+
+    def prefill(
+        self,
+        params: Dict[str, Any],
+        tokens: jnp.ndarray,
+        patches: Optional[jnp.ndarray] = None,
+    ) -> Tuple[jnp.ndarray, Dict[str, Any]]:
+        """Run the full prompt, returning last-position logits and a cache
+
+        sized to the prompt (decode continues from pos = S)."""
+        cfg = self.cfg
+        window = cfg.sliding_window
+        x = L.embed_tokens(tokens, params["embed"], cfg.activ_dtype)
+        n_prefix = 0
+        if patches is not None:
+            x = jnp.concatenate([patches.astype(cfg.activ_dtype), x], axis=1)
+            n_prefix = patches.shape[1]
+        bsz, s, _ = x.shape
+
+        def body(x, bp):
+            xin = L.rms_norm(x, bp["attn_norm"])
+            positions = jnp.arange(s)[None, :]
+            q, k, v = L._project_qkv(xin, bp["attn"], cfg, positions)
+            out = L.sdpa_or_flash(q, k, v, cfg, causal=True, window=window)
+            h = jnp.einsum("bsf,fd->bsd", out, bp["attn"]["wo"].astype(x.dtype))
+            x = x + h
+            if cfg.family == "moe":
+                h, _ = M.moe_forward(L.rms_norm(x, bp["mlp_norm"]), bp["moe"], cfg)
+            else:
+                h = L.mlp_forward(L.rms_norm(x, bp["mlp_norm"]), bp["mlp"])
+            x = x + h
+            kvf = cfg.kv_feat
+            k_flat = k.reshape(bsz, s, kvf).astype(cfg.activ_dtype)
+            v_flat = v.reshape(bsz, s, kvf).astype(cfg.activ_dtype)
+            if window is not None:
+                w = min(window, s)
+                cache = {
+                    "k": k_flat[:, -w:],
+                    "v": v_flat[:, -w:],
+                    "pos": jnp.broadcast_to(jnp.arange(s - w, s, dtype=jnp.int32)[None], (bsz, w)),
+                }
+            else:
+                cache = {"k": k_flat, "v": v_flat}
+            return x, cache
+
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        x, caches = jax.lax.scan(body, x, params["blocks"])
+        logits = L.lm_logits(x[:, -1:], params["embed"])
+        return logits, caches
+
+    def decode_step(
+        self,
+        params: Dict[str, Any],
+        cache: Dict[str, Any],
+        tokens: jnp.ndarray,
+        pos: jnp.ndarray,
+    ) -> Tuple[jnp.ndarray, Dict[str, Any]]:
+        """serve_step: one new token for the whole batch. tokens: (B, 1)."""
+        cfg = self.cfg
+        window = cfg.sliding_window
+        x = L.embed_tokens(tokens, params["embed"], cfg.activ_dtype)
+
+        def body(x, inp):
+            bp, cache_l = inp
+            x, new_cache = _block_decode(x, bp, cache_l, pos, cfg, window=window)
+            return x, new_cache
+
+        x, new_caches = jax.lax.scan(body, x, (params["blocks"], cache))
+        logits = L.lm_logits(x, params["embed"])
+        return logits, new_caches

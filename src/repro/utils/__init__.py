@@ -1,0 +1,15 @@
+from repro.utils.trees import (
+    tree_bytes,
+    tree_param_count,
+    flatten_state_dict,
+    unflatten_state_dict,
+)
+from repro.utils.mem import MemoryMeter
+
+__all__ = [
+    "tree_bytes",
+    "tree_param_count",
+    "flatten_state_dict",
+    "unflatten_state_dict",
+    "MemoryMeter",
+]

@@ -1,0 +1,224 @@
+"""Pallas kernel validation: interpret-mode kernels vs pure-jnp oracle,
+
+swept over shapes and dtypes, plus hypothesis property tests on the codec
+invariants (round-trip error bounds, scale invariance, sign preservation).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ref
+from repro.kernels.quant_blockwise8 import (
+    BLOCK8,
+    ROWS,
+    dequantize_blockwise8_pallas,
+    quantize_blockwise8_pallas,
+)
+from repro.kernels.quant_nf4 import (
+    BLOCK4,
+    ROWS4,
+    dequantize_4bit_pallas,
+    quantize_4bit_pallas,
+)
+from repro.kernels.fused_dequant_agg import dequant_accumulate8_pallas
+from repro.kernels import ops
+from repro.core import quantization as Q
+
+
+def _rand(shape, dtype, seed=0, scale=3.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal(shape) * scale, dtype=dtype)
+
+
+# ---------------------------------------------------------------------------
+# blockwise8 kernel vs ref, shape/dtype sweep
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("nblocks", [ROWS, 2 * ROWS, 5 * ROWS])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16, jnp.float16])
+def test_quantize_blockwise8_matches_ref(nblocks, dtype):
+    x = _rand((nblocks, BLOCK8), dtype, seed=nblocks)
+    q_k, am_k = quantize_blockwise8_pallas(x, interpret=True)
+    q_r, am_r = ref.quantize_blockwise8(x)
+    np.testing.assert_array_equal(np.asarray(q_k), np.asarray(q_r))
+    np.testing.assert_allclose(np.asarray(am_k), np.asarray(am_r), rtol=1e-6)
+
+
+@pytest.mark.parametrize("nblocks", [ROWS, 3 * ROWS])
+def test_dequantize_blockwise8_matches_ref(nblocks):
+    x = _rand((nblocks, BLOCK8), jnp.float32, seed=7)
+    q, am = ref.quantize_blockwise8(x)
+    out_k = dequantize_blockwise8_pallas(q, am, interpret=True)
+    out_r = ref.dequantize_blockwise8(q, am)
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# 4-bit kernels vs ref
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("fmt", ["fp4", "nf4"])
+@pytest.mark.parametrize("nblocks", [ROWS4, 2 * ROWS4])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_quantize_4bit_matches_ref(fmt, nblocks, dtype):
+    x = _rand((nblocks, BLOCK4), dtype, seed=nblocks + len(fmt))
+    code = ref.FP4_CODE if fmt == "fp4" else ref.NF4_CODE
+    p_k, am_k = quantize_4bit_pallas(x, fmt=fmt, interpret=True)
+    p_r, am_r = ref.quantize_4bit(x, code)
+    np.testing.assert_array_equal(np.asarray(p_k), np.asarray(p_r))
+    np.testing.assert_allclose(np.asarray(am_k), np.asarray(am_r), rtol=1e-6)
+
+
+@pytest.mark.parametrize("fmt", ["fp4", "nf4"])
+def test_dequantize_4bit_matches_ref(fmt):
+    x = _rand((ROWS4, BLOCK4), jnp.float32, seed=11)
+    code = ref.FP4_CODE if fmt == "fp4" else ref.NF4_CODE
+    p, am = ref.quantize_4bit(x, code)
+    out_k = dequantize_4bit_pallas(p, am, fmt=fmt, interpret=True)
+    out_r = ref.dequantize_4bit(p, am, code)
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# fused dequant+accumulate vs ref
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("k", [1, 2, 4])
+def test_dequant_accumulate_matches_ref(k):
+    rng = np.random.default_rng(k)
+    x = jnp.asarray(rng.standard_normal((k, 2 * ROWS, BLOCK8)), jnp.float32)
+    qs, ams = jax.vmap(ref.quantize_blockwise8)(x)
+    w = jnp.asarray(rng.random(k), jnp.float32)
+    out_k = dequant_accumulate8_pallas(qs, ams, w, interpret=True)
+    out_r = ref.dequant_accumulate8(qs, ams, w)
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r), rtol=1e-5, atol=1e-5)
+
+
+def test_fused_agg_equals_dequant_then_average():
+    """The fused kernel must equal dequantize-each-then-weighted-sum."""
+    rng = np.random.default_rng(3)
+    k = 3
+    x = jnp.asarray(rng.standard_normal((k, ROWS, BLOCK8)), jnp.float32)
+    qs, ams = jax.vmap(ref.quantize_blockwise8)(x)
+    w = jnp.asarray([0.5, 0.3, 0.2], jnp.float32)
+    fused = ref.dequant_accumulate8(qs, ams, w)
+    seq = sum(w[i] * ref.dequantize_blockwise8(qs[i], ams[i]) for i in range(k))
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(seq), rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# codec round-trip properties (hypothesis)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(min_value=1, max_value=9000),
+    scale=st.floats(min_value=1e-3, max_value=1e3),
+    seed=st.integers(min_value=0, max_value=2**16),
+)
+def test_blockwise8_roundtrip_error_bound(n, scale, seed):
+    """|x - dq(q(x))| <= absmax/254 per block (half a quantization step)."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal(n) * scale, jnp.float32)
+    qt = Q.quantize(x, "blockwise8")
+    out = Q.dequantize(qt)
+    assert out.shape == x.shape and out.dtype == x.dtype
+    bound = float(jnp.max(jnp.abs(x))) / 127.0 * 0.5 + 1e-7
+    assert float(jnp.max(jnp.abs(out - x))) <= bound * 1.000001
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.integers(min_value=1, max_value=4000),
+    seed=st.integers(min_value=0, max_value=2**16),
+    fmt=st.sampled_from(["fp4", "nf4"]),
+)
+def test_4bit_roundtrip_bounded_by_codebook_gap(n, seed, fmt):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal(n), jnp.float32)
+    qt = Q.quantize(x, fmt)
+    out = Q.dequantize(qt)
+    assert out.shape == x.shape
+    code = np.sort(ref.FP4_CODE if fmt == "fp4" else ref.NF4_CODE)
+    max_gap = float(np.max(np.diff(code)))  # worst normalized quantization gap
+    # per-block error <= absmax * max_gap / 2; bound globally by global absmax
+    bound = float(jnp.max(jnp.abs(x))) * max_gap / 2.0 + 1e-7
+    assert float(jnp.max(jnp.abs(out - x))) <= bound * 1.0000001
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2**16))
+def test_quantize_scale_invariance(seed):
+    """Blockwise codes are invariant to positive per-block rescaling
+
+    (up to one ulp-induced code step at round-to-nearest boundaries)."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((ROWS, BLOCK8)), jnp.float32)
+    q1, _ = ref.quantize_blockwise8(x)
+    q2, _ = ref.quantize_blockwise8(x * 37.5)
+    diff = np.abs(np.asarray(q1, np.int32) - np.asarray(q2, np.int32))
+    assert diff.max() <= 1
+    # at most a vanishing fraction of codes sit exactly on a boundary
+    assert (diff != 0).mean() < 1e-3
+
+
+def test_zero_block_roundtrip():
+    x = jnp.zeros((5, 17), jnp.float32)
+    for fmt in ("blockwise8", "fp4", "nf4", "fp16", "bf16"):
+        out = Q.dequantize(Q.quantize(x, fmt))
+        np.testing.assert_array_equal(np.asarray(out), np.zeros((5, 17), np.float32))
+
+
+@pytest.mark.parametrize("fmt", ["fp16", "bf16", "blockwise8", "fp4", "nf4"])
+@pytest.mark.parametrize("shape", [(3,), (130,), (7, 513), (2, 3, 65)])
+def test_codec_shapes_and_dtypes(fmt, shape):
+    x = _rand(shape, jnp.float32, seed=sum(shape))
+    qt = Q.quantize(x, fmt)
+    out = Q.dequantize(qt)
+    assert out.shape == x.shape
+    assert out.dtype == x.dtype
+
+
+def _llama32_1b_shapes():
+    """The exact 147-tensor layout of paper Table I (Llama-3.2-1B)."""
+
+    class _Fake:
+        def __init__(self, *shape):
+            self.shape = shape
+
+    sd = {
+        "embed_tokens": _Fake(128256, 2048),
+        "norm": _Fake(2048),
+        "lm_head": _Fake(128256, 2048),
+    }
+    for i in range(16):
+        sd[f"layers.{i}.self_attn.q_proj"] = _Fake(2048, 2048)
+        sd[f"layers.{i}.self_attn.k_proj"] = _Fake(512, 2048)
+        sd[f"layers.{i}.self_attn.v_proj"] = _Fake(512, 2048)
+        sd[f"layers.{i}.self_attn.o_proj"] = _Fake(2048, 2048)
+        sd[f"layers.{i}.mlp.gate_proj"] = _Fake(8192, 2048)
+        sd[f"layers.{i}.mlp.up_proj"] = _Fake(8192, 2048)
+        sd[f"layers.{i}.mlp.down_proj"] = _Fake(2048, 8192)
+        sd[f"layers.{i}.input_layernorm"] = _Fake(2048)
+        sd[f"layers.{i}.post_attention_layernorm"] = _Fake(2048)
+    return sd
+
+
+def test_table2_percentages_match_paper():
+    """Paper Table II: fp32 5716.26 MB; 16-bit 50.00 %; 8-bit 25.03 %
+
+    (meta 1.54 MB); 4-bit 14.06 % (meta 89.33 MB)."""
+    sd = _llama32_1b_shapes()
+    assert len(sd) == 147  # Table I: 147 layers
+    r32 = Q.message_size_report(sd, "fp32")
+    r16 = Q.message_size_report(sd, "fp16")
+    r8 = Q.message_size_report(sd, "blockwise8")
+    r4 = Q.message_size_report(sd, "nf4")
+    assert abs(r32["model_mb"] - 5716.26) < 1.0
+    assert abs(r16["fp32_pct"] - 50.0) < 1e-6
+    assert abs(r8["fp32_pct"] - 25.03) < 0.01
+    assert abs(r4["fp32_pct"] - 14.06) < 0.01
+    assert abs(r8["meta_mb"] - 1.54) < 0.02    # paper: 1.54 MB
+    assert abs(r4["meta_mb"] - 89.33) < 0.05   # paper: 89.33 MB
