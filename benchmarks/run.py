@@ -10,7 +10,7 @@ import argparse
 import sys
 import time
 
-SUITES = ("table2", "table3", "fig45", "kernels", "chunks", "sensitivity", "roofline")
+SUITES = ("table2", "table3", "fig45", "kernels", "chunks", "sensitivity", "roofline", "async")
 
 
 def main() -> None:
@@ -55,6 +55,11 @@ def main() -> None:
         from benchmarks import roofline_report
 
         for row in roofline_report.run():
+            print(row)
+    if "async" in only:
+        from benchmarks import async_throughput
+
+        for row in async_throughput.run():
             print(row)
     print(f"# total {time.time() - t0:.1f}s", file=sys.stderr)
 

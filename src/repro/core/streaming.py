@@ -100,22 +100,28 @@ class FileSpoolDriver(Driver):
     """Spools every frame to a directory, then replays on ``flush()``.
 
     Models a store-and-forward relay; also exercises frame encode/decode.
+    Frame filenames carry a per-driver unique prefix, so concurrent
+    drivers (the async scheduler runs many round trips at once) can
+    share one spool directory without clobbering each other's frames.
     """
 
     def __init__(self, spool_dir: str) -> None:
         self.spool_dir = spool_dir
         os.makedirs(spool_dir, exist_ok=True)
+        self._uid = uuid.uuid4().hex
         self._count = 0
 
+    def _path(self, i: int) -> str:
+        return os.path.join(self.spool_dir, f"{self._uid}-{i:08d}.frame")
+
     def send(self, chunk: Chunk) -> None:
-        path = os.path.join(self.spool_dir, f"{self._count:08d}.frame")
-        with open(path, "wb") as fh:
+        with open(self._path(self._count), "wb") as fh:
             fh.write(chunk.encode())
         self._count += 1
 
     def flush(self) -> None:
         for i in range(self._count):
-            path = os.path.join(self.spool_dir, f"{i:08d}.frame")
+            path = self._path(i)
             with open(path, "rb") as fh:
                 self._on_chunk(Chunk.decode(fh.read()))
             os.unlink(path)
@@ -140,7 +146,13 @@ class TCPDriver(Driver):
         super().connect(on_chunk)
 
         def serve() -> None:
-            conn, _ = self._srv.accept()
+            try:
+                conn, _ = self._srv.accept()
+            except OSError:
+                # server socket closed before any sender connected —
+                # a clean no-traffic shutdown, not an error
+                self._done.set()
+                return
             with conn:
                 fh = conn.makefile("rb")
                 while True:
@@ -164,10 +176,25 @@ class TCPDriver(Driver):
         self._sock.sendall(chunk.encode())
 
     def close(self) -> None:
+        """Idempotent shutdown: drains the receiver thread even when no
+        sender ever connected (the concurrent scheduler closes drivers on
+        every path, including dropped-out round trips)."""
         if self._sock is not None:
             self._sock.close()
-        self._done.wait(timeout=30)
+            self._sock = None
+            self._done.wait(timeout=30)
+        elif self._thread is not None and not self._done.is_set():
+            # no sender ever connected: wake the blocked accept() with an
+            # empty connection so the receiver thread can exit promptly
+            try:
+                socket.create_connection(self.address, timeout=1).close()
+            except OSError:
+                pass
+            self._done.wait(timeout=5)
         self._srv.close()
+        if self._thread is not None:
+            self._thread.join(timeout=5)
+            self._thread = None
 
 
 # ---------------------------------------------------------------------------

@@ -1,14 +1,16 @@
 from repro.fl.aggregator import FedAvgAggregator, QuantizedFedAvgAggregator
-from repro.fl.controller import ScatterAndGather
+from repro.fl.controller import ScatterAndGather, make_task
 from repro.fl.executor import Executor, TrainExecutor
-from repro.fl.simulator import FLSimulator, SimulationConfig
+from repro.fl.simulator import FLSimulator, SimulationConfig, TrafficStats
 
 __all__ = [
     "FedAvgAggregator",
     "QuantizedFedAvgAggregator",
     "ScatterAndGather",
+    "make_task",
     "Executor",
     "TrainExecutor",
     "FLSimulator",
     "SimulationConfig",
+    "TrafficStats",
 ]

@@ -9,9 +9,23 @@ drivers, or the mesh view.
 """
 from __future__ import annotations
 
-from typing import Any, Callable, Dict, List, Optional, Sequence
+from typing import Any, Callable, Dict, List, Mapping, Optional, Sequence
 
 from repro.core.messages import Message, MessageKind
+
+
+def make_task(rnd: int, global_weights: Mapping[str, Any]) -> Message:
+    """Build one round's Task Data message.
+
+    Shared by :class:`ScatterAndGather` and the async runtime's policies
+    (``repro.runtime.async_agg``) so both construct byte-identical tasks —
+    the basis of the runtime's bitwise sync-equivalence guarantee.
+    """
+    return Message(
+        MessageKind.TASK_DATA,
+        dict(global_weights),
+        headers={"round": rnd, "task_name": "train"},
+    )
 
 
 class ClientProxy:
@@ -46,11 +60,7 @@ class ScatterAndGather:
         for rnd in range(self.num_rounds):
             results: List[Message] = []
             for client in self.clients:
-                task = Message(
-                    MessageKind.TASK_DATA,
-                    dict(global_weights),
-                    headers={"round": rnd, "task_name": "train"},
-                )
+                task = make_task(rnd, global_weights)
                 result = client.submit_task(task)
                 self.aggregator.accept(result)
                 results.append(result)

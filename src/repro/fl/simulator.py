@@ -4,10 +4,20 @@ points and the streaming transport into one runnable federation —
 NVFlare's simulator analogue. Every message physically crosses the
 streaming layer (serialized, framed, chunked, reassembled), so byte
 counts and peak transmission memory are real, not estimated.
+
+Two runtimes drive the same proxies:
+
+* the classic sequential :class:`~repro.fl.controller.ScatterAndGather`
+  controller (default — one client at a time), or
+* the event-driven :class:`~repro.runtime.scheduler.AsyncFLScheduler`
+  (pass ``runtime=``/``policy=``/``network=``): clients run concurrently
+  on a thread pool over the real transport, ordered by a deterministic
+  simulated clock fed by actual wire bytes.
 """
 from __future__ import annotations
 
 import dataclasses
+import threading
 from typing import Any, Callable, Dict, List, Optional, Sequence
 
 from repro.core import streaming as sm
@@ -29,16 +39,32 @@ class SimulationConfig:
 
 @dataclasses.dataclass
 class TrafficStats:
+    """Wire-level message/byte counters.
+
+    Thread-safe: the async runtime transmits from a pool of worker
+    threads, so ``add`` must be atomic (a bare ``+=`` on two fields loses
+    counts under contention).
+    """
+
     messages: int = 0
     bytes_sent: int = 0
 
+    def __post_init__(self) -> None:
+        self._lock = threading.Lock()
+
     def add(self, nbytes: int) -> None:
-        self.messages += 1
-        self.bytes_sent += nbytes
+        with self._lock:
+            self.messages += 1
+            self.bytes_sent += nbytes
 
 
 class _Wire:
-    """One filtered, streamed hop: serialize -> frames -> reassemble."""
+    """One filtered, streamed hop: serialize -> frames -> reassemble.
+
+    Stateless per transmit (a fresh driver/receiver pair each call), so
+    concurrent transmits from different scheduler threads don't share
+    buffers.
+    """
 
     def __init__(self, cfg: SimulationConfig, stats: TrafficStats) -> None:
         self.cfg = cfg
@@ -76,7 +102,12 @@ class _Wire:
 class _SimClientProxy(ClientProxy):
     """Server-side handle for one simulated client; runs the full filtered
 
-    round trip (the four filter points of paper §II-B) over the wire."""
+    round trip (the four filter points of paper §II-B) over the wire.
+
+    ``filter_lock`` (async runtime only) serializes filter processing so
+    stateful filters (error feedback, DP noise) stay consistent under
+    concurrent round trips; the wire transfers themselves run unlocked.
+    """
 
     def __init__(
         self,
@@ -84,25 +115,39 @@ class _SimClientProxy(ClientProxy):
         server_filters: Dict[FilterPoint, FilterChain],
         client_filters: Dict[FilterPoint, FilterChain],
         wire: _Wire,
+        filter_lock: Optional[threading.Lock] = None,
     ) -> None:
         self.name = executor.name
         self.executor = executor
         self.server_filters = server_filters
         self.client_filters = client_filters
         self.wire = wire
+        self.filter_lock = filter_lock
+
+    def _filter(self, chain: FilterChain, message: Message) -> Message:
+        if self.filter_lock is None:
+            return chain.process(message)
+        with self.filter_lock:
+            return chain.process(message)
 
     def submit_task(self, task: Message) -> Message:
         # 1. before Task Data leaves server
-        task = self.server_filters[FilterPoint.TASK_DATA_OUT].process(task)
+        task = self._filter(self.server_filters[FilterPoint.TASK_DATA_OUT], task)
+        wire_bytes_down = task.payload_bytes()
         task = self.wire.transmit(task)
         # 2. before client accepts Task Data
-        task = self.client_filters[FilterPoint.TASK_DATA_IN].process(task)
+        task = self._filter(self.client_filters[FilterPoint.TASK_DATA_IN], task)
         result = self.executor.execute(task)
         # 3. before Task Result leaves client
-        result = self.client_filters[FilterPoint.TASK_RESULT_OUT].process(result)
+        result = self._filter(self.client_filters[FilterPoint.TASK_RESULT_OUT], result)
+        wire_bytes_up = result.payload_bytes()
         result = self.wire.transmit(result)
         # 4. before server accepts Task Result
-        result = self.server_filters[FilterPoint.TASK_RESULT_IN].process(result)
+        result = self._filter(self.server_filters[FilterPoint.TASK_RESULT_IN], result)
+        # actual on-the-wire sizes of both hops, for the runtime's network
+        # model (quantized payloads => measurably shorter simulated rounds)
+        result.headers["wire_bytes_down"] = wire_bytes_down
+        result.headers["wire_bytes_up"] = wire_bytes_up
         return result
 
 
@@ -115,21 +160,49 @@ class FLSimulator:
         server_filters: Optional[Dict[FilterPoint, FilterChain]] = None,
         client_filters: Optional[Dict[FilterPoint, FilterChain]] = None,
         on_round_end: Optional[Callable[[int, Dict[str, Any], List[Message]], None]] = None,
+        runtime: Optional[Any] = None,   # repro.runtime.RuntimeConfig -> async scheduler
+        policy: Optional[Any] = None,    # repro.runtime.AggregationPolicy override
+        network: Optional[Any] = None,   # repro.runtime.NetworkModel override
     ) -> None:
         self.config = config or SimulationConfig()
         self.server_filters = server_filters or no_filters()
         self.client_filters = client_filters or no_filters()
         self.stats = TrafficStats()
         self.meter = MemoryMeter()
+        use_async = runtime is not None or policy is not None or network is not None
         wire = _Wire(self.config, self.stats)
-        proxies = [
-            _SimClientProxy(ex, self.server_filters, self.client_filters, wire)
+        filter_lock = threading.Lock() if use_async else None
+        self.proxies = [
+            _SimClientProxy(ex, self.server_filters, self.client_filters, wire, filter_lock)
             for ex in executors
         ]
-        self.controller = ScatterAndGather(
-            proxies, aggregator, self.config.num_rounds, on_round_end=on_round_end
-        )
+        self.controller: Optional[ScatterAndGather] = None
+        self.scheduler: Optional[Any] = None
+        if use_async:
+            # imported lazily: repro.runtime depends on repro.fl.controller,
+            # so a module-level import here would be circular
+            from repro.runtime.async_agg import SyncPolicy
+            from repro.runtime.scheduler import AsyncFLScheduler, RuntimeConfig
+
+            self.scheduler = AsyncFLScheduler(
+                self.proxies,
+                policy or SyncPolicy(aggregator, self.config.num_rounds, on_round_end),
+                network=network,
+                config=runtime or RuntimeConfig(),
+            )
+        else:
+            self.controller = ScatterAndGather(
+                self.proxies, aggregator, self.config.num_rounds, on_round_end=on_round_end
+            )
 
     def run(self, initial_weights: Dict[str, Any]) -> Dict[str, Any]:
+        driver = self.scheduler if self.scheduler is not None else self.controller
         with self.meter.activate():
-            return self.controller.run(initial_weights)
+            return driver.run(initial_weights)
+
+    @property
+    def sim_time_s(self) -> Optional[float]:
+        """Simulated makespan (async runtime only; None for the classic path)."""
+        if self.scheduler is None:
+            return None
+        return self.scheduler.stats.sim_time_s

@@ -1,0 +1,48 @@
+"""Event-driven async federated runtime.
+
+Layers (each its own module):
+
+* :mod:`repro.runtime.events` — deterministic simulated-clock event loop.
+* :mod:`repro.runtime.network` — per-client link/compute models that turn
+  actual wire bytes into simulated time.
+* :mod:`repro.runtime.async_agg` — aggregation policies: round-barrier
+  :class:`SyncPolicy` (bitwise-equal to ``ScatterAndGather``) and
+  staleness-weighted :class:`FedBuffPolicy`.
+* :mod:`repro.runtime.scheduler` — the orchestrator: concurrent
+  real-transport execution on a thread pool, fault injection, timeline.
+"""
+from repro.runtime.async_agg import (
+    AggregationPolicy,
+    Dispatch,
+    FedBuffPolicy,
+    SyncPolicy,
+    polynomial_staleness,
+)
+from repro.runtime.events import Event, EventKind, EventLoop
+from repro.runtime.network import (
+    PROFILES,
+    ComputeProfile,
+    LinkProfile,
+    NetworkModel,
+    heterogeneous_network,
+)
+from repro.runtime.scheduler import AsyncFLScheduler, RuntimeConfig, RuntimeStats
+
+__all__ = [
+    "AggregationPolicy",
+    "Dispatch",
+    "FedBuffPolicy",
+    "SyncPolicy",
+    "polynomial_staleness",
+    "Event",
+    "EventKind",
+    "EventLoop",
+    "PROFILES",
+    "ComputeProfile",
+    "LinkProfile",
+    "NetworkModel",
+    "heterogeneous_network",
+    "AsyncFLScheduler",
+    "RuntimeConfig",
+    "RuntimeStats",
+]

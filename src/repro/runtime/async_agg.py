@@ -1,0 +1,272 @@
+"""Aggregation policies for the event-driven scheduler.
+
+Two policies make synchronous FedAvg "one policy among several":
+
+* :class:`SyncPolicy` — a barrier per round. It buffers each round's
+  Task Results as they complete (in any simulated order) and feeds the
+  aggregator **in client-list order**, exactly the order the sequential
+  :class:`~repro.fl.controller.ScatterAndGather` loop uses; tasks are
+  built by the same :func:`~repro.fl.controller.make_task`. With the
+  same seeds the final weights are therefore *bitwise equal* to the
+  synchronous controller's — the staleness-0 fixed point.
+
+* :class:`FedBuffPolicy` — buffered asynchronous aggregation (FedBuff,
+  Nguyen et al. 2022): no barrier; every completed client immediately
+  gets a fresh task built from the *current* global model. Client deltas
+  (w_client - w_dispatched) accumulate in a size-K buffer weighted by
+  ``num_samples * (1 + staleness)^-alpha``; each buffer flush applies the
+  weighted-mean delta at ``server_lr`` and bumps the model version. Fast
+  clients contribute many low-staleness updates instead of idling behind
+  stragglers — the throughput win the async benchmark quantifies.
+
+Policies are transport-ignorant: they see completed
+:class:`~repro.core.messages.Message` results (already through all four
+filter points) and emit :class:`Dispatch` records; the scheduler owns
+time, links, threads and faults.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Mapping, Optional, Sequence
+
+import numpy as np
+
+from repro.core.messages import Message
+from repro.fl.controller import make_task
+
+
+@dataclasses.dataclass
+class Dispatch:
+    """One task handed to one client: what the scheduler launches."""
+
+    client: str
+    task: Message
+    version: int          # global model version the task was built from
+    attempt: int = 0      # dropout retry counter (scheduler-managed)
+
+
+class AggregationPolicy:
+    """What the scheduler asks of an aggregation/workflow policy."""
+
+    name = "policy"
+
+    def begin(self, initial_weights: Mapping[str, Any], clients: Sequence[str]) -> List[Dispatch]:
+        raise NotImplementedError
+
+    def on_result(self, dispatch: Dispatch, result: Message) -> List[Dispatch]:
+        raise NotImplementedError
+
+    def on_client_failed(self, dispatch: Dispatch) -> List[Dispatch]:
+        """Called when a client exhausted its dropout retries."""
+        return []
+
+    @property
+    def complete(self) -> bool:
+        raise NotImplementedError
+
+    @property
+    def model_version(self) -> int:
+        raise NotImplementedError
+
+    def finish(self) -> Dict[str, Any]:
+        raise NotImplementedError
+
+
+class SyncPolicy(AggregationPolicy):
+    """Round-barrier FedAvg over the async scheduler.
+
+    Results may *complete* in any simulated order, but aggregation per
+    round runs in client-list order once the barrier closes, so the float
+    summation order — and hence the output bits — match the sequential
+    controller. Clients that permanently dropped out are skipped (the
+    sample-weighted average renormalizes over survivors).
+    """
+
+    name = "sync"
+
+    def __init__(
+        self,
+        aggregator: Any,
+        num_rounds: int,
+        on_round_end: Optional[Callable[[int, Dict[str, Any], List[Message]], None]] = None,
+    ) -> None:
+        self.aggregator = aggregator
+        self.num_rounds = num_rounds
+        self.on_round_end = on_round_end
+        self._clients: List[str] = []
+        self._round = 0
+        self._weights: Dict[str, Any] = {}
+        self._results: Dict[str, Message] = {}
+        self._failed: set = set()
+
+    def begin(self, initial_weights, clients):
+        self._clients = list(clients)
+        self._weights = dict(initial_weights)
+        self._round = 0
+        if self.num_rounds <= 0:  # match ScatterAndGather: no rounds, no work
+            return []
+        return self._dispatch_round()
+
+    def _dispatch_round(self) -> List[Dispatch]:
+        self._results = {}
+        self._failed = set()
+        return [
+            Dispatch(c, make_task(self._round, self._weights), version=self._round)
+            for c in self._clients
+        ]
+
+    def _round_done(self) -> bool:
+        return len(self._results) + len(self._failed) >= len(self._clients)
+
+    def _close_round(self) -> List[Dispatch]:
+        ordered = [self._results[c] for c in self._clients if c in self._results]
+        for result in ordered:
+            self.aggregator.accept(result)
+        self._weights = self.aggregator.finish()
+        if self.on_round_end is not None:
+            self.on_round_end(self._round, self._weights, ordered)
+        self._round += 1
+        if self._round < self.num_rounds:
+            return self._dispatch_round()
+        return []
+
+    def on_result(self, dispatch, result):
+        if dispatch.version != self._round:
+            return []  # stale straggler from an already-closed round
+        self._results[dispatch.client] = result
+        return self._close_round() if self._round_done() else []
+
+    def on_client_failed(self, dispatch):
+        if dispatch.version != self._round:
+            return []
+        self._failed.add(dispatch.client)
+        if not self._results and self._round_done():
+            raise RuntimeError(f"round {self._round}: every client dropped out")
+        return self._close_round() if self._round_done() else []
+
+    @property
+    def complete(self) -> bool:
+        return self._round >= self.num_rounds
+
+    @property
+    def model_version(self) -> int:
+        return self._round
+
+    def finish(self):
+        return dict(self._weights)
+
+
+def polynomial_staleness(alpha: float = 0.5) -> Callable[[int], float]:
+    """FedBuff's polynomial staleness discount: (1 + s)^-alpha."""
+
+    def weight(staleness: int) -> float:
+        return float((1.0 + max(0, staleness)) ** (-alpha))
+
+    return weight
+
+
+class FedBuffPolicy(AggregationPolicy):
+    """Staleness-weighted buffered async aggregation.
+
+    ``total_tasks`` is the client-task budget (compare against a sync run
+    of ``num_rounds * num_clients``); ``buffer_size`` is K, the number of
+    client updates folded into one server step.
+    """
+
+    name = "fedbuff"
+
+    def __init__(
+        self,
+        total_tasks: int,
+        buffer_size: int = 4,
+        server_lr: float = 1.0,
+        staleness_weight: Optional[Callable[[int], float]] = None,
+        on_update: Optional[Callable[[int, Dict[str, Any]], None]] = None,
+    ) -> None:
+        if buffer_size < 1:
+            raise ValueError("buffer_size must be >= 1")
+        self.total_tasks = total_tasks
+        self.buffer_size = buffer_size
+        self.server_lr = server_lr
+        self.staleness_weight = staleness_weight or polynomial_staleness()
+        self.on_update = on_update
+        self._weights: Dict[str, np.ndarray] = {}
+        self._version = 0
+        self._delta_sum: Dict[str, np.ndarray] = {}
+        self._wsum = 0.0
+        self._buffered = 0
+        self._dispatched = 0
+        self._done = 0          # results processed
+        self._lost = 0          # permanently failed clients' tasks
+        self.staleness_seen: List[int] = []
+
+    # -- dispatch helpers ---------------------------------------------------
+    def _next_task(self, client: str) -> List[Dispatch]:
+        if self._dispatched >= self.total_tasks:
+            return []
+        self._dispatched += 1
+        return [Dispatch(client, make_task(self._version, self._weights), version=self._version)]
+
+    def begin(self, initial_weights, clients):
+        self._weights = {
+            n: np.asarray(v, np.float32) if np.issubdtype(np.asarray(v).dtype, np.floating)
+            else v
+            for n, v in initial_weights.items()
+        }
+        out: List[Dispatch] = []
+        for c in clients:
+            out.extend(self._next_task(c))
+        return out
+
+    # -- aggregation --------------------------------------------------------
+    def _flush(self) -> None:
+        if self._buffered == 0 or self._wsum <= 0:
+            return
+        for name, dsum in self._delta_sum.items():
+            self._weights[name] = (
+                np.asarray(self._weights[name], np.float32)
+                + self.server_lr * dsum / self._wsum
+            ).astype(np.float32)
+        self._version += 1
+        self._delta_sum = {}
+        self._wsum = 0.0
+        self._buffered = 0
+        if self.on_update is not None:
+            self.on_update(self._version, self._weights)
+
+    def on_result(self, dispatch, result):
+        staleness = self._version - dispatch.version
+        self.staleness_seen.append(staleness)
+        w = float(result.headers.get("num_samples", 1)) * self.staleness_weight(staleness)
+        if w > 0:
+            for name, value in result.payload.items():
+                base = dispatch.task.payload.get(name)
+                if base is None or not np.issubdtype(np.asarray(value).dtype, np.floating):
+                    continue
+                delta = (np.asarray(value, np.float32) - np.asarray(base, np.float32)) * w
+                if name in self._delta_sum:
+                    self._delta_sum[name] += delta
+                else:
+                    self._delta_sum[name] = delta
+            self._wsum += w
+            self._buffered += 1
+        self._done += 1
+        if self._buffered >= self.buffer_size:
+            self._flush()
+        return self._next_task(dispatch.client)
+
+    def on_client_failed(self, dispatch):
+        self._lost += 1
+        return []
+
+    @property
+    def complete(self) -> bool:
+        return self._done + self._lost >= self._dispatched and self._dispatched >= self.total_tasks
+
+    @property
+    def model_version(self) -> int:
+        return self._version
+
+    def finish(self):
+        self._flush()  # partial buffer still carries information
+        return dict(self._weights)

@@ -1,0 +1,103 @@
+"""Deterministic simulated-clock event loop for the async FL runtime.
+
+The scheduler never reads the wall clock: every latency in the system —
+link transmission time derived from *actual* wire bytes, client compute
+time, dropout instants — is expressed in **simulated seconds** and pushed
+onto one priority queue. Two runs with the same seeds pop the exact same
+event sequence, which is what makes the async federation reproducible
+and lets tests assert bitwise equality against the synchronous
+controller.
+
+Ordering is (time, seq): ``seq`` is a monotonically increasing insertion
+counter, so simultaneous events resolve in schedule order rather than by
+heap internals. The loop itself is randomness-free; jitter draws live in
+the network model's per-client RNG streams and dropout draws in the
+scheduler's seeded stream. Nothing here touches ``time.time()``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+import heapq
+from typing import Any, Dict, Iterator, List, Optional
+
+
+class EventKind(enum.Enum):
+    DISPATCH = "dispatch"        # server hands a task to a client link
+    ARRIVAL = "arrival"          # task data fully received by the client
+    COMPLETION = "completion"    # task result fully received by the server
+    DROPOUT = "dropout"          # client failed mid-round (injected fault)
+    RETRY = "retry"              # re-dispatch after a dropout
+    MODEL_UPDATE = "model_update"  # aggregation produced a new global version
+
+
+@dataclasses.dataclass(frozen=True)
+class Event:
+    time: float
+    seq: int
+    kind: EventKind
+    client: Optional[str] = None
+    data: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    def sort_key(self):
+        return (self.time, self.seq)
+
+
+class EventLoop:
+    """Min-heap of :class:`Event` with a monotone simulated clock."""
+
+    def __init__(self) -> None:
+        self.now = 0.0
+        self._heap: List[tuple] = []
+        self._seq = 0
+        self.history: List[Event] = []
+
+    def __len__(self) -> int:
+        return len(self._heap)
+
+    @property
+    def empty(self) -> bool:
+        return not self._heap
+
+    def schedule(
+        self,
+        delay: float,
+        kind: EventKind,
+        client: Optional[str] = None,
+        **data: Any,
+    ) -> Event:
+        """Schedule ``kind`` at ``now + delay`` (delay in simulated seconds)."""
+        return self.schedule_at(self.now + max(0.0, float(delay)), kind, client, **data)
+
+    def schedule_at(
+        self,
+        time: float,
+        kind: EventKind,
+        client: Optional[str] = None,
+        **data: Any,
+    ) -> Event:
+        if time < self.now:
+            raise ValueError(f"cannot schedule into the past ({time} < {self.now})")
+        ev = Event(float(time), self._seq, kind, client, data)
+        self._seq += 1
+        heapq.heappush(self._heap, (ev.sort_key(), ev))
+        return ev
+
+    def peek(self) -> Event:
+        """The earliest queued event, without popping or advancing time."""
+        if not self._heap:
+            raise IndexError("peek into empty event loop")
+        return self._heap[0][1]
+
+    def pop(self) -> Event:
+        """Pop the earliest event and advance the clock to it."""
+        if not self._heap:
+            raise IndexError("pop from empty event loop")
+        _, ev = heapq.heappop(self._heap)
+        self.now = ev.time
+        self.history.append(ev)
+        return ev
+
+    def drain(self) -> Iterator[Event]:
+        while self._heap:
+            yield self.pop()

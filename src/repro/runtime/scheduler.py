@@ -1,0 +1,218 @@
+"""Event-driven federated scheduler: concurrent clients on a simulated clock.
+
+The seed controller (`ScatterAndGather`) drives clients strictly
+sequentially, so round time is the *sum* of client times. This scheduler
+runs the same filtered, streamed round trips **concurrently** (a thread
+pool executes the real transport — Loopback/TCP/spool drivers, real
+serialization, real byte counts) while a deterministic
+:class:`~repro.runtime.events.EventLoop` orders everything in simulated
+time:
+
+    dispatch --downlink--> arrival --compute--> ... --uplink--> completion
+
+Link and compute durations come from the :class:`NetworkModel`, driven by
+the *actual* wire bytes each hop produced — so a quantized federation's
+simulated rounds are measurably shorter, not assumed shorter.
+
+Determinism: real executions run on worker threads in any wall-clock
+order, but their results are folded into the policy strictly in
+(simulated time, schedule seq) order, and every random draw (jitter,
+dropout) comes from seeded streams keyed by stable strings. Two runs
+with the same seeds produce identical timelines and identical weights.
+Stateful filters (error feedback, DP noise) are serialized under
+``filter_lock`` for thread-safety, but their state consumption follows
+completion order — use stateless filters where bit-reproducibility
+across runtimes matters.
+
+Fault injection: each dispatch attempt may drop out (seeded Bernoulli,
+``dropout_prob``) partway through its round trip; the scheduler
+re-dispatches up to ``max_retries`` times, then reports the client as
+failed to the policy (`SyncPolicy` renormalizes over survivors,
+`FedBuffPolicy` simply loses the contribution). Chunk-level faults
+compose underneath via :class:`~repro.core.resilience.LossyDriver` +
+``ReliableTransfer`` in the wire, invisible up here.
+"""
+from __future__ import annotations
+
+import dataclasses
+from concurrent.futures import Future, ThreadPoolExecutor
+from random import Random
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+from repro.core.messages import Message
+from repro.fl.controller import ClientProxy
+from repro.runtime.async_agg import AggregationPolicy, Dispatch
+from repro.runtime.events import Event, EventKind, EventLoop
+from repro.runtime.network import NetworkModel
+
+
+@dataclasses.dataclass
+class RuntimeConfig:
+    """Knobs for the async runtime (transport knobs stay in SimulationConfig)."""
+
+    seed: int = 0
+    max_concurrency: int = 8
+    dropout_prob: float = 0.0
+    max_retries: int = 2
+    drop_after_frac: float = 0.5   # dropout strikes this far through the round trip
+
+
+@dataclasses.dataclass
+class RuntimeStats:
+    dispatches: int = 0
+    completions: int = 0
+    dropouts: int = 0
+    retries: int = 0
+    failed_clients: int = 0
+    model_updates: int = 0
+    sim_time_s: float = 0.0
+
+
+class AsyncFLScheduler:
+    """Runs an :class:`AggregationPolicy` over real client proxies."""
+
+    def __init__(
+        self,
+        proxies: Sequence[ClientProxy],
+        policy: AggregationPolicy,
+        network: Optional[NetworkModel] = None,
+        config: Optional[RuntimeConfig] = None,
+    ) -> None:
+        if not proxies:
+            raise ValueError("need at least one client proxy")
+        self.proxies: Dict[str, ClientProxy] = {p.name: p for p in proxies}
+        if len(self.proxies) != len(proxies):
+            raise ValueError("client proxy names must be unique")
+        self.policy = policy
+        self.config = config or RuntimeConfig()
+        self.network = network or NetworkModel(seed=self.config.seed)
+        self.loop = EventLoop()
+        self.stats = RuntimeStats()
+        self._drop_rng = Random(f"dropout:{self.config.seed}")
+        # (dispatch, dispatch_sim_time, future) in launch order
+        self._inflight: List[Tuple[Dispatch, float, Future]] = []
+
+    # -- real execution (worker threads) ------------------------------------
+    def _execute(self, dispatch: Dispatch) -> Message:
+        proxy = self.proxies[dispatch.client]
+        return proxy.submit_task(dispatch.task)
+
+    def _launch(self, dispatch: Dispatch, pool: ThreadPoolExecutor) -> None:
+        self.stats.dispatches += 1
+        self.loop.schedule(0.0, EventKind.DISPATCH, dispatch.client,
+                           version=dispatch.version, attempt=dispatch.attempt)
+        self._inflight.append((dispatch, self.loop.now, pool.submit(self._execute, dispatch)))
+
+    # -- folding real results into simulated time ---------------------------
+    def _earliest_possible(self, dispatch: Dispatch, t0: float) -> float:
+        """Hard lower bound on the simulated time of any event this
+        in-flight round trip can produce (its ARRIVAL, or a DROPOUT that
+        strikes partway through the minimum-duration trip)."""
+        lat, comp = self.network.floor_seconds(dispatch.client)
+        return t0 + min(lat, self.config.drop_after_frac * (2.0 * lat + comp))
+
+    def _must_settle(self) -> bool:
+        """True when an in-flight trip could still beat the next queued
+        event in simulated time — only then does the loop block on real
+        results. Otherwise queued events are processed first, leaving
+        in-flight transports running in parallel on the pool."""
+        if not self._inflight:
+            return False
+        if self.loop.empty:
+            return True
+        next_t = self.loop.peek().time
+        return any(
+            self._earliest_possible(d, t0) < next_t for d, t0, _ in self._inflight
+        )
+
+    def _settle(self) -> None:
+        """Wait for every in-flight round trip and timestamp it.
+
+        Event *times* depend only on bytes + seeds, never on which
+        worker thread finished first, and futures are settled in launch
+        order, so the timeline is deterministic. Parallelism is
+        wave-level: every dispatch launched since the last settle runs
+        concurrently on the pool; the loop only blocks here when
+        ``_must_settle`` says an in-flight trip could produce the next
+        event.
+        """
+        for dispatch, t0, future in self._inflight:
+            result = future.result()
+            down = int(result.headers.get("wire_bytes_down", dispatch.task.payload_bytes()))
+            up = int(result.headers.get("wire_bytes_up", result.payload_bytes()))
+            t_down = self.network.transfer_seconds(dispatch.client, down)
+            t_compute = self.network.compute_seconds(dispatch.client)
+            t_up = self.network.transfer_seconds(dispatch.client, up)
+            total = t_down + t_compute + t_up
+            dropped = self._drop_rng.random() < self.config.dropout_prob
+            if dropped:
+                self.loop.schedule_at(
+                    t0 + self.config.drop_after_frac * total,
+                    EventKind.DROPOUT,
+                    dispatch.client,
+                    dispatch=dispatch,
+                )
+            else:
+                self.loop.schedule_at(t0 + t_down, EventKind.ARRIVAL, dispatch.client,
+                                      version=dispatch.version)
+                self.loop.schedule_at(
+                    t0 + total,
+                    EventKind.COMPLETION,
+                    dispatch.client,
+                    dispatch=dispatch,
+                    result=result,
+                )
+        self._inflight = []
+
+    # -- event handlers (scheduler thread, simulated-time order) ------------
+    def _handle(self, event: Event, pool: ThreadPoolExecutor) -> None:
+        if event.kind is EventKind.COMPLETION:
+            self.stats.completions += 1
+            dispatch: Dispatch = event.data["dispatch"]
+            before = self.policy.model_version
+            follow_ups = self.policy.on_result(dispatch, event.data["result"])
+            if self.policy.model_version != before:
+                self.stats.model_updates += 1
+                self.loop.schedule(0.0, EventKind.MODEL_UPDATE,
+                                   version=self.policy.model_version)
+            for d in follow_ups:
+                self._launch(d, pool)
+        elif event.kind is EventKind.DROPOUT:
+            self.stats.dropouts += 1
+            dispatch = event.data["dispatch"]
+            if dispatch.attempt < self.config.max_retries:
+                self.stats.retries += 1
+                retry = Dispatch(dispatch.client, dispatch.task,
+                                 dispatch.version, dispatch.attempt + 1)
+                self.loop.schedule(0.0, EventKind.RETRY, dispatch.client,
+                                   attempt=retry.attempt)
+                self._launch(retry, pool)
+            else:
+                self.stats.failed_clients += 1
+                for d in self.policy.on_client_failed(dispatch):
+                    self._launch(d, pool)
+        # DISPATCH / ARRIVAL / RETRY / MODEL_UPDATE are timeline markers
+
+    # -- main loop -----------------------------------------------------------
+    def run(self, initial_weights: Dict[str, Any]) -> Dict[str, Any]:
+        with ThreadPoolExecutor(max_workers=self.config.max_concurrency) as pool:
+            for d in self.policy.begin(dict(initial_weights), list(self.proxies)):
+                self._launch(d, pool)
+            while self._inflight or not self.loop.empty:
+                if self._must_settle():
+                    self._settle()
+                if self.loop.empty:
+                    break
+                self._handle(self.loop.pop(), pool)
+        self.stats.sim_time_s = self.loop.now
+        if not self.policy.complete:
+            raise RuntimeError(
+                f"{self.policy.name}: federation ended before the policy "
+                "completed its budget (did every client drop out?)"
+            )
+        return self.policy.finish()
+
+    @property
+    def timeline(self) -> List[Event]:
+        """Processed events in simulated-time order (the run's trace)."""
+        return list(self.loop.history)

@@ -19,14 +19,19 @@ from typing import Iterator, Optional
 
 
 class MemoryMeter:
-    """Tracks live transmission-buffer bytes and the peak."""
+    """Tracks live transmission-buffer bytes and the peak.
+
+    Thread-safe: the async runtime's worker threads stream concurrently,
+    so ``alloc``/``free``/``hold`` all serialize on a per-instance lock
+    (per-instance so independent meters don't contend).
+    """
 
     _active: Optional["MemoryMeter"] = None
-    _lock = threading.Lock()
 
     def __init__(self) -> None:
         self.live = 0
         self.peak = 0
+        self._lock = threading.Lock()
 
     # -- accounting -------------------------------------------------------
     def alloc(self, nbytes: int) -> None:

@@ -1,0 +1,65 @@
+"""Thread-safety regressions for the counters the async runtime shares
+across its worker threads: TrafficStats and MemoryMeter. Before the
+locks, racing ``+=`` on these lost counts silently.
+"""
+import threading
+
+from repro.fl import TrafficStats
+from repro.utils.mem import MemoryMeter
+
+
+def _hammer(n_threads, fn):
+    threads = [threading.Thread(target=fn) for _ in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+
+
+def test_traffic_stats_concurrent_adds_are_exact():
+    stats = TrafficStats()
+    per_thread, threads = 2000, 8
+
+    def add_many():
+        for _ in range(per_thread):
+            stats.add(3)
+
+    _hammer(threads, add_many)
+    assert stats.messages == threads * per_thread
+    assert stats.bytes_sent == 3 * threads * per_thread
+
+
+def test_memory_meter_concurrent_hold_balances():
+    meter = MemoryMeter()
+    per_thread, threads = 1000, 8
+
+    def hold_many():
+        for _ in range(per_thread):
+            with meter.hold(64):
+                pass
+
+    _hammer(threads, hold_many)
+    assert meter.live == 0                      # every hold released
+    assert 64 <= meter.peak <= 64 * threads     # peak is a real high-water mark
+
+
+def test_memory_meter_concurrent_alloc_free_exact():
+    meter = MemoryMeter()
+    per_thread, threads = 2000, 8
+
+    def churn():
+        for _ in range(per_thread):
+            meter.alloc(10)
+        for _ in range(per_thread):
+            meter.free(10)
+
+    _hammer(threads, churn)
+    assert meter.live == 0
+    assert meter.peak >= 10 * per_thread  # at least one thread's full burst
+
+
+def test_independent_meters_do_not_share_state():
+    a, b = MemoryMeter(), MemoryMeter()
+    a.alloc(100)
+    assert (a.live, b.live) == (100, 0)
+    assert b.peak == 0

@@ -5,7 +5,11 @@ transfer, with hypothesis sweeps over fault rates.
 """
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # property tests skip; the fault-matrix tests still run
+    from hypothesis_stub import given, settings, st
 
 from repro.core import streaming as sm
 from repro.core.resilience import LossyDriver, OrderedDeliveryBuffer, ReliableTransfer

@@ -1,0 +1,352 @@
+"""Async runtime: deterministic event loop, link model driven by real
+wire bytes, SyncPolicy bitwise-equivalence to ScatterAndGather, FedBuff
+staleness-weighted aggregation, and fault-injected concurrent runs.
+"""
+import numpy as np
+import pytest
+
+from repro.core.filters import no_filters, two_way_quantization
+from repro.fl import FedAvgAggregator, FLSimulator, SimulationConfig, TrainExecutor
+from repro.runtime import (
+    ComputeProfile,
+    EventKind,
+    EventLoop,
+    FedBuffPolicy,
+    LinkProfile,
+    NetworkModel,
+    RuntimeConfig,
+    SyncPolicy,
+    heterogeneous_network,
+    polynomial_staleness,
+)
+
+
+# ---------------------------------------------------------------------------
+# events: deterministic simulated clock
+# ---------------------------------------------------------------------------
+
+def test_event_loop_orders_by_time_then_seq():
+    loop = EventLoop()
+    loop.schedule(2.0, EventKind.COMPLETION, "b")
+    loop.schedule(1.0, EventKind.COMPLETION, "a")
+    loop.schedule(1.0, EventKind.DROPOUT, "c")  # same time: schedule order wins
+    popped = [(e.client, e.kind) for e in loop.drain()]
+    assert popped == [("a", EventKind.COMPLETION), ("c", EventKind.DROPOUT),
+                      ("b", EventKind.COMPLETION)]
+    assert loop.now == 2.0
+
+
+def test_event_loop_rejects_past_and_advances_clock():
+    loop = EventLoop()
+    loop.schedule(5.0, EventKind.ARRIVAL, "x")
+    assert loop.pop().time == 5.0
+    with pytest.raises(ValueError):
+        loop.schedule_at(1.0, EventKind.ARRIVAL, "x")
+    # negative delays clamp to "now", never travel backwards
+    ev = loop.schedule(-3.0, EventKind.ARRIVAL, "x")
+    assert ev.time == 5.0
+
+
+def test_event_loop_history_records_pop_order():
+    loop = EventLoop()
+    for d in (3.0, 1.0, 2.0):
+        loop.schedule(d, EventKind.DISPATCH)
+    list(loop.drain())
+    assert [e.time for e in loop.history] == [1.0, 2.0, 3.0]
+
+
+# ---------------------------------------------------------------------------
+# network: bytes -> simulated seconds
+# ---------------------------------------------------------------------------
+
+def test_link_profile_base_time():
+    link = LinkProfile("test", bandwidth_mbps=8.0, latency_ms=100.0)
+    # 1 MB at 8 Mbit/s = 1 s, plus 0.1 s latency
+    assert link.base_seconds(1_000_000) == pytest.approx(1.1)
+
+
+def test_network_model_deterministic_and_monotone():
+    net1 = NetworkModel(seed=42)
+    net2 = NetworkModel(seed=42)
+    times1 = [net1.transfer_seconds("c0", 1 << 20) for _ in range(5)]
+    times2 = [net2.transfer_seconds("c0", 1 << 20) for _ in range(5)]
+    assert times1 == times2  # same seed, same jitter stream
+    # fewer bytes can never take longer on the same draw index
+    big = NetworkModel(seed=7).transfer_seconds("c", 4 << 20)
+    small = NetworkModel(seed=7).transfer_seconds("c", 1 << 20)
+    assert small < big
+
+
+def test_per_client_jitter_streams_are_independent():
+    net = NetworkModel(seed=0)
+    a1 = net.transfer_seconds("a", 1000)
+    # interleaving draws for another client must not shift a's stream
+    net2 = NetworkModel(seed=0)
+    net2.transfer_seconds("b", 1000)
+    assert net2.transfer_seconds("a", 1000) == a1
+
+
+def test_heterogeneous_network_assigns_tiers():
+    names = [f"s{i}" for i in range(6)]
+    net = heterogeneous_network(names, seed=0, tiers=("fiber", "3g"))
+    assert net.link("s0").name == "fiber" and net.link("s1").name == "3g"
+    # a 1 MB transfer is much slower on 3g than fiber
+    assert net.transfer_seconds("s1", 1 << 20) > 10 * net.transfer_seconds("s0", 1 << 20)
+
+
+# ---------------------------------------------------------------------------
+# helpers: toy least-squares federation
+# ---------------------------------------------------------------------------
+
+def _make_exec(name, seed, w_true, n=128, lr=0.3, steps=3):
+    rng = np.random.default_rng(seed)
+    X = rng.standard_normal((n, w_true.size)).astype(np.float32)
+    y = X @ w_true
+
+    def train_fn(params, rnd):
+        w = np.asarray(params["w"]).copy()
+        for _ in range(steps):
+            w = w - lr * (X.T @ (X @ w - y) / n)
+        return {"w": w}, n, {"loss": float(np.mean((X @ w - y) ** 2))}
+
+    return TrainExecutor(name, train_fn)
+
+
+W_TRUE = np.arange(1, 9, dtype=np.float32) / 8.0
+
+
+def _sim(num_clients=4, rounds=3, fmt="blockwise8", **kwargs):
+    filters = two_way_quantization(fmt) if fmt else no_filters()
+    return FLSimulator(
+        [_make_exec(f"site-{i}", i, W_TRUE) for i in range(num_clients)],
+        FedAvgAggregator(),
+        SimulationConfig(num_rounds=rounds, chunk_size=2048),
+        server_filters=filters,
+        client_filters=filters,
+        **kwargs,
+    )
+
+
+# ---------------------------------------------------------------------------
+# SyncPolicy: the staleness-0 fixed point
+# ---------------------------------------------------------------------------
+
+def test_sync_policy_bitwise_matches_scatter_and_gather():
+    init = {"w": np.zeros(8, np.float32)}
+    sequential = _sim().run(dict(init))
+    scheduled = _sim(runtime=RuntimeConfig(seed=0, max_concurrency=4)).run(dict(init))
+    for k in sequential:
+        np.testing.assert_array_equal(np.asarray(sequential[k]), np.asarray(scheduled[k]))
+
+
+def test_sync_policy_zero_rounds_matches_sequential():
+    init = {"w": np.ones(8, np.float32)}
+    sequential = _sim(rounds=0).run(dict(init))
+    scheduled = _sim(rounds=0, runtime=RuntimeConfig(seed=0)).run(dict(init))
+    np.testing.assert_array_equal(np.asarray(sequential["w"]), np.asarray(scheduled["w"]))
+    np.testing.assert_array_equal(np.asarray(scheduled["w"]), init["w"])
+
+
+def test_sync_policy_round_end_callback_in_client_order():
+    seen = []
+    sim = _sim(
+        rounds=2,
+        runtime=RuntimeConfig(seed=0),
+        on_round_end=lambda rnd, w, results: seen.append(
+            (rnd, [r.headers["client"] for r in results])
+        ),
+    )
+    sim.run({"w": np.zeros(8, np.float32)})
+    assert seen == [(0, [f"site-{i}" for i in range(4)]),
+                    (1, [f"site-{i}" for i in range(4)])]
+
+
+def test_sync_policy_wire_traffic_matches_sequential():
+    init = {"w": np.zeros(8, np.float32)}
+    a, b = _sim(), _sim(runtime=RuntimeConfig(seed=0))
+    a.run(dict(init)), b.run(dict(init))
+    assert a.stats.messages == b.stats.messages
+    assert a.stats.bytes_sent == b.stats.bytes_sent
+
+
+def test_async_runtime_reports_simulated_time():
+    sim = _sim(runtime=RuntimeConfig(seed=0))
+    assert sim.sim_time_s == 0.0  # not yet run
+    sim.run({"w": np.zeros(8, np.float32)})
+    assert sim.sim_time_s > 0
+    assert _sim().sim_time_s is None  # classic path has no simulated clock
+
+
+# ---------------------------------------------------------------------------
+# quantization shortens simulated rounds (the paper's point, timed)
+# ---------------------------------------------------------------------------
+
+def test_quantized_payloads_shorten_simulated_makespan():
+    """A realistically-sized model (64k floats) on a slow link: int8
+    messages are ~4x smaller, so the simulated makespan drops by roughly
+    the transfer share of the round — measured, not assumed."""
+    big = {"w": np.linspace(-1, 1, 1 << 16).astype(np.float32)}  # 256 KiB
+
+    def identity_exec(name):
+        return TrainExecutor(name, lambda params, rnd: (
+            {k: np.asarray(v) for k, v in params.items()}, 1, {}))
+
+    def makespan(fmt):
+        filters = two_way_quantization(fmt) if fmt else no_filters()
+        net = NetworkModel(default=LinkProfile("slow", bandwidth_mbps=8.0, latency_ms=10.0),
+                           default_compute=ComputeProfile(base_seconds=0.01),
+                           seed=0)
+        sim = FLSimulator(
+            [identity_exec(f"site-{i}") for i in range(2)],
+            FedAvgAggregator(),
+            SimulationConfig(num_rounds=2),
+            server_filters=filters,
+            client_filters=filters,
+            runtime=RuntimeConfig(seed=0),
+            network=net,
+        )
+        sim.run(dict(big))
+        return sim.sim_time_s
+
+    t32, t8 = makespan(None), makespan("blockwise8")
+    assert t8 < 0.5 * t32  # fewer wire bytes => shorter simulated transfers
+
+
+# ---------------------------------------------------------------------------
+# FedBuff: buffered async aggregation
+# ---------------------------------------------------------------------------
+
+def test_polynomial_staleness_weights():
+    w = polynomial_staleness(alpha=0.5)
+    assert w(0) == 1.0
+    assert w(3) == pytest.approx(0.5)
+    assert w(8) < w(3) < w(1)
+
+
+def test_fedbuff_converges_on_toy_problem():
+    names = [f"site-{i}" for i in range(4)]
+    sim = _sim(
+        runtime=RuntimeConfig(seed=0, max_concurrency=4),
+        policy=FedBuffPolicy(total_tasks=32, buffer_size=2),
+        network=heterogeneous_network(names, seed=1),
+    )
+    out = sim.run({"w": np.zeros(8, np.float32)})
+    assert float(np.max(np.abs(np.asarray(out["w"]) - W_TRUE))) < 0.1
+
+
+def test_fedbuff_more_updates_than_sync_rounds():
+    sim = _sim(
+        runtime=RuntimeConfig(seed=0),
+        policy=FedBuffPolicy(total_tasks=12, buffer_size=2),
+    )
+    sim.run({"w": np.zeros(8, np.float32)})
+    # 12 tasks / buffer 2 = 6 server steps vs 3 sync rounds
+    assert sim.scheduler.stats.model_updates == 6
+    assert sim.scheduler.policy.model_version == 6
+
+
+def test_fedbuff_records_staleness():
+    names = [f"site-{i}" for i in range(4)]
+    policy = FedBuffPolicy(total_tasks=16, buffer_size=2)
+    sim = _sim(
+        runtime=RuntimeConfig(seed=0, max_concurrency=4),
+        policy=policy,
+        network=heterogeneous_network(names, seed=0, compute_spread=8.0),
+    )
+    sim.run({"w": np.zeros(8, np.float32)})
+    assert len(policy.staleness_seen) == 16
+    assert max(policy.staleness_seen) > 0  # stragglers really were stale
+
+
+# ---------------------------------------------------------------------------
+# scale + faults: the acceptance scenario
+# ---------------------------------------------------------------------------
+
+def test_async_eight_clients_heterogeneous_with_dropouts():
+    names = [f"site-{i}" for i in range(8)]
+
+    def run_once():
+        sim = _sim(
+            num_clients=8,
+            runtime=RuntimeConfig(seed=3, max_concurrency=8,
+                                  dropout_prob=0.2, max_retries=3),
+            policy=FedBuffPolicy(total_tasks=24, buffer_size=4),
+            network=heterogeneous_network(names, seed=3),
+        )
+        out = sim.run({"w": np.zeros(8, np.float32)})
+        return out, sim.scheduler
+
+    out1, sched1 = run_once()
+    out2, sched2 = run_once()
+    assert sched1.stats.dropouts > 0 and sched1.stats.retries > 0
+    assert sched1.stats.completions == 24
+    # identical seeds => identical weights and identical timeline
+    np.testing.assert_array_equal(np.asarray(out1["w"]), np.asarray(out2["w"]))
+    tl1 = [(e.kind, e.client, e.time) for e in sched1.timeline]
+    tl2 = [(e.kind, e.client, e.time) for e in sched2.timeline]
+    assert tl1 == tl2
+
+
+def test_sync_policy_survives_permanent_client_failure():
+    # one client always drops: after retries exhaust, the round closes
+    # over the survivors (sample-weighted average renormalizes)
+    sim = _sim(
+        rounds=2,
+        runtime=RuntimeConfig(seed=1, dropout_prob=0.35, max_retries=0),
+    )
+    out = sim.run({"w": np.zeros(8, np.float32)})
+    assert sim.scheduler.stats.failed_clients > 0
+    assert np.all(np.isfinite(np.asarray(out["w"])))
+
+
+def test_all_clients_dropping_raises():
+    sim = _sim(runtime=RuntimeConfig(seed=0, dropout_prob=1.0, max_retries=0))
+    with pytest.raises(RuntimeError, match="every client dropped"):
+        sim.run({"w": np.zeros(8, np.float32)})
+
+
+def test_fedbuff_all_clients_lost_reports_incomplete():
+    sim = _sim(
+        runtime=RuntimeConfig(seed=0, dropout_prob=1.0, max_retries=0),
+        policy=FedBuffPolicy(total_tasks=12, buffer_size=2),
+    )
+    with pytest.raises(RuntimeError, match="before the policy completed"):
+        sim.run({"w": np.zeros(8, np.float32)})
+
+
+def test_result_headers_carry_wire_bytes():
+    captured = []
+    sim = _sim(
+        rounds=1,
+        runtime=RuntimeConfig(seed=0),
+        on_round_end=lambda rnd, w, results: captured.extend(results),
+    )
+    sim.run({"w": np.zeros(8, np.float32)})
+    for r in captured:
+        assert r.headers["wire_bytes_down"] > 0
+        assert r.headers["wire_bytes_up"] > 0
+
+
+def test_timeline_contains_full_event_sequence():
+    sim = _sim(rounds=1, runtime=RuntimeConfig(seed=0))
+    sim.run({"w": np.zeros(8, np.float32)})
+    kinds = {e.kind for e in sim.scheduler.timeline}
+    assert {EventKind.DISPATCH, EventKind.ARRIVAL, EventKind.COMPLETION} <= kinds
+    times = [e.time for e in sim.scheduler.timeline]
+    assert times == sorted(times)
+
+
+def test_tcp_driver_concurrent_federation():
+    """Real sockets under the concurrent scheduler (8 round trips in flight)."""
+    filters = two_way_quantization("fp16")
+    sim = FLSimulator(
+        [_make_exec(f"site-{i}", i, W_TRUE) for i in range(8)],
+        FedAvgAggregator(),
+        SimulationConfig(num_rounds=2, driver="tcp", chunk_size=1024),
+        server_filters=filters,
+        client_filters=filters,
+        runtime=RuntimeConfig(seed=0, max_concurrency=8),
+    )
+    out = sim.run({"w": np.zeros(8, np.float32)})
+    assert np.all(np.isfinite(np.asarray(out["w"])))
+    assert sim.stats.messages == 2 * 8 * 2

@@ -112,6 +112,126 @@ def test_file_spool_driver_replay(tmp_path):
     _assert_sd_equal(sd, recv.result)
 
 
+def test_file_spool_driver_flush_preserves_send_order(tmp_path):
+    """Frames replay strictly in send order, even across big streams."""
+    driver = sm.FileSpoolDriver(str(tmp_path / "spool"))
+    seen = []
+    driver.connect(lambda c: seen.append((c.seq, c.payload)))
+    chunks = [sm.Chunk(b"s" * 16, i, f"payload-{i}".encode()) for i in range(150)]
+    for c in chunks:  # >100 frames: exercises zero-padded filename ordering
+        driver.send(c)
+    assert seen == []  # store-and-forward: nothing delivered before flush
+    driver.flush()
+    assert seen == [(c.seq, c.payload) for c in chunks]
+
+
+def test_file_spool_driver_flush_drains_and_resets(tmp_path):
+    spool = tmp_path / "spool"
+    driver = sm.FileSpoolDriver(str(spool))
+    seen = []
+    driver.connect(lambda c: seen.append(c.seq))
+    driver.send(sm.Chunk(b"x" * 16, 0, b"a"))
+    driver.flush()
+    assert seen == [0]
+    assert list(spool.iterdir()) == []  # spool dir emptied
+    driver.flush()  # second flush is a no-op, not a replay
+    assert seen == [0]
+    # the driver is reusable after a flush; numbering restarts cleanly
+    driver.send(sm.Chunk(b"x" * 16, 7, b"b"))
+    driver.flush()
+    assert seen == [0, 7]
+
+
+def test_file_spool_driver_interleaved_with_streamer(tmp_path):
+    """Spooled container stream reassembles exactly after a single flush."""
+    sd = _state_dict(seed=5)
+    driver = sm.FileSpoolDriver(str(tmp_path / "spool"))
+    recv = sm.ContainerReceiver()
+    driver.connect(recv.on_chunk)
+    sm.ContainerStreamer(driver, 333).send_container(sd)
+    driver.flush()
+    assert recv.done
+    _assert_sd_equal(sd, recv.result)
+
+
+def test_file_spool_drivers_share_directory_concurrently(tmp_path):
+    """Concurrent drivers over one spool dir (async scheduler pattern)
+    must not clobber each other's frames — filenames are per-driver."""
+    import threading
+
+    spool = str(tmp_path / "spool")
+    results = {}
+
+    def one(i):
+        sd = _state_dict(seed=i, big=32)
+        driver = sm.FileSpoolDriver(spool)
+        recv = sm.ContainerReceiver()
+        driver.connect(recv.on_chunk)
+        sm.ContainerStreamer(driver, 256).send_container(sd)
+        driver.flush()
+        results[i] = (sd, recv.result)
+
+    threads = [threading.Thread(target=one, args=(i,)) for i in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert len(results) == 8
+    for sd, out in results.values():
+        _assert_sd_equal(sd, out)
+
+
+def test_tcp_driver_close_without_traffic_does_not_hang():
+    """The concurrent scheduler closes drivers on every path, including
+    aborted round trips — close() must not block on a receiver thread
+    that never saw a connection."""
+    import time
+
+    driver = sm.TCPDriver()
+    driver.connect(lambda c: None)
+    t0 = time.monotonic()
+    driver.close()
+    assert time.monotonic() - t0 < 5.0
+    assert driver._thread is None  # receiver thread reaped
+
+
+def test_tcp_driver_close_is_idempotent():
+    sd = _state_dict(big=32)
+    driver = sm.TCPDriver()
+    recv = sm.BlobReceiver()
+    driver.connect(recv.on_chunk)
+    sm.ObjectStreamer(driver, 1024).send_container(sd)
+    driver.close()
+    driver.close()  # second close is a no-op
+    _assert_sd_equal(sd, recv.result)
+
+
+def test_tcp_driver_concurrent_transfers():
+    """Many independent TCPDrivers streaming at once (what the async
+    scheduler's thread pool does) each reassemble their own stream."""
+    import threading
+
+    results = {}
+
+    def one(i):
+        sd = _state_dict(seed=i, big=64)
+        driver = sm.TCPDriver()
+        recv = sm.BlobReceiver()
+        driver.connect(recv.on_chunk)
+        sm.ObjectStreamer(driver, 512).send_container(sd)
+        driver.close()
+        results[i] = (sd, recv.result)
+
+    threads = [threading.Thread(target=one, args=(i,)) for i in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert len(results) == 8
+    for sd, out in results.values():
+        _assert_sd_equal(sd, out)
+
+
 def test_tcp_driver_roundtrip():
     sd = _state_dict(big=64)
     driver = sm.TCPDriver()

@@ -9,7 +9,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # property tests skip; everything else still runs
+    from hypothesis_stub import given, settings, st
 
 from repro.checkpoint import load_checkpoint, save_checkpoint
 from repro.checkpoint.streaming_ckpt import iter_checkpoint, load_checkpoint_streaming
