@@ -11,7 +11,7 @@ filters, serialization, streaming, aggregation — not a shortcut.
 """
 from __future__ import annotations
 
-from typing import Dict, List, Optional
+from typing import List, Optional
 
 import jax
 import jax.numpy as jnp

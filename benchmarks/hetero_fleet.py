@@ -1,0 +1,142 @@
+"""Heterogeneous-fleet scenario benchmark: tiered/async policies +
+link-aware adaptive quantization over a mixed fiber-to-3G federation.
+
+Eight clients spread across the canonical WAN classes run through
+SyncPolicy, FedAsync, and TiFL-style tiered selection, with churn from a
+seeded random availability trace. Sync and FedAsync share one
+client-task budget (ROUNDS * NUM_CLIENTS); tiered runs 2*ROUNDS
+one-tier rounds, so its rows trade fewer total tasks for more frequent
+model updates — compare completions, not just makespan. Messages
+cross the real streaming transport behind an
+:class:`~repro.core.filters.AdaptiveQuantizeFilter` bound to the
+runtime's per-client link model — so the fiber client ships fp32/fp16
+while the 3G client ships NF4, and the per-client rows below show the
+precision the *network* chose, not a config constant.
+
+Emits ``name,us_per_call,derived`` rows (harness contract):
+us_per_call = simulated microseconds per global model update for policy
+rows, per completed client task for per-client rows.
+"""
+from __future__ import annotations
+
+from typing import Iterator, List, Tuple
+
+import numpy as np
+
+from repro.core.filters import (
+    AdaptiveQuantizeFilter,
+    DequantizeFilter,
+    FilterChain,
+    FilterPoint,
+    no_filters,
+)
+from repro.fl import FedAvgAggregator, FLSimulator, SimulationConfig, TrainExecutor
+from repro.runtime import (
+    EventKind,
+    FedAsyncPolicy,
+    TieredPolicy,
+    RuntimeConfig,
+    heterogeneous_network,
+    random_availability,
+)
+
+NUM_CLIENTS = 8
+ROUNDS = 4                      # sync rounds; fedasync gets the same task budget
+DIM = 32 * 1024                 # 128 KiB of fp32 weights per message
+BUDGET_S = 0.05                 # per-message transfer budget for adaptive precision
+TIERS = ("fiber", "cable", "wifi", "lte", "dsl", "3g")
+
+
+def _executors(w_true: np.ndarray) -> List[TrainExecutor]:
+    def make(name: str, seed: int) -> TrainExecutor:
+        rng = np.random.default_rng(seed)
+        direction = rng.standard_normal(w_true.size).astype(np.float32)
+        direction /= np.linalg.norm(direction)
+
+        def train_fn(params, rnd):
+            w = np.asarray(params["w"], np.float32)
+            w = w + 0.5 * (w_true - w) + 0.01 * direction
+            return {"w": w}, 32, {}
+
+        return TrainExecutor(name, train_fn)
+
+    return [make(f"site-{i}", i) for i in range(NUM_CLIENTS)]
+
+
+def _adaptive_filters(network) -> Tuple[dict, dict, AdaptiveQuantizeFilter]:
+    filt = AdaptiveQuantizeFilter.from_network(network, budget_s=BUDGET_S)
+    server = no_filters()
+    server[FilterPoint.TASK_DATA_OUT] = FilterChain([filt])
+    server[FilterPoint.TASK_RESULT_IN] = FilterChain([DequantizeFilter()])
+    client = no_filters()
+    client[FilterPoint.TASK_DATA_IN] = FilterChain([DequantizeFilter()])
+    client[FilterPoint.TASK_RESULT_OUT] = FilterChain([filt])
+    return server, client, filt
+
+
+def _run(mode: str):
+    names = [f"site-{i}" for i in range(NUM_CLIENTS)]
+    network = heterogeneous_network(names, seed=7, tiers=TIERS,
+                                    compute_base_s=0.5, compute_spread=6.0)
+    server_f, client_f, filt = _adaptive_filters(network)
+    w_true = np.linspace(-1.0, 1.0, DIM).astype(np.float32)
+    policy = None
+    if mode == "fedasync":
+        policy = FedAsyncPolicy(total_tasks=ROUNDS * NUM_CLIENTS, mixing_rate=0.6)
+    elif mode == "tiered":
+        policy = TieredPolicy(FedAvgAggregator(), num_rounds=ROUNDS * 2,
+                              num_tiers=3, network=network, seed=7)
+    sim = FLSimulator(
+        _executors(w_true),
+        FedAvgAggregator(),
+        SimulationConfig(num_rounds=ROUNDS, transmission="container"),
+        server_filters=server_f,
+        client_filters=client_f,
+        runtime=RuntimeConfig(seed=11, max_concurrency=NUM_CLIENTS),
+        policy=policy,
+        network=network,
+        availability=random_availability(names, mean_online_s=120.0,
+                                         mean_offline_s=30.0, horizon_s=600.0, seed=7),
+    )
+    sim.run({"w": np.zeros(DIM, np.float32)})
+    return sim, network, filt
+
+
+def run() -> Iterator[str]:
+    for mode in ("sync", "fedasync", "tiered"):
+        sim, network, filt = _run(mode)
+        s = sim.scheduler.stats
+        updates = max(1, s.model_updates)
+        yield (
+            f"hetero_fleet_{mode},{sim.sim_time_s * 1e6 / updates:.0f},"
+            f"makespan_s={sim.sim_time_s:.2f};updates={updates};"
+            f"completions={s.completions};deferrals={s.deferrals};"
+            f"interruptions={s.interruptions};wire_mb={sim.stats.bytes_sent / 1e6:.2f}"
+        )
+        if mode != "fedasync":
+            continue
+        # per-client rows for the async run: the link each client sits on
+        # and the precision the adaptive filter picked for that link
+        completions = [e for e in sim.scheduler.timeline if e.kind is EventKind.COMPLETION]
+        for i in range(NUM_CLIENTS):
+            client = f"site-{i}"
+            done = [e for e in completions if e.client == client]
+            per_task_us = (sim.sim_time_s * 1e6 / len(done)) if done else 0.0
+            link = network.link(client)
+            fmt = filt.last_fmt_by_client.get(client, "n/a")
+            yield (
+                f"hetero_fleet_client_{client},{per_task_us:.0f},"
+                f"link={link.name};bw_mbps={link.bandwidth_mbps:g};"
+                f"fmt={fmt};tasks_done={len(done)}"
+            )
+        fast = filt.last_fmt_by_client.get("site-0", "n/a")   # fiber
+        slow = filt.last_fmt_by_client.get("site-5", "n/a")   # 3g
+        yield (
+            f"hetero_fleet_adaptive_split,0,"
+            f"fiber_fmt={fast};3g_fmt={slow};differs={fast != slow}"
+        )
+
+
+if __name__ == "__main__":
+    for row in run():
+        print(row)

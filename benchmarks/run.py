@@ -3,66 +3,97 @@
 extras. Prints ``name,us_per_call,derived`` CSV (harness contract).
 
     PYTHONPATH=src python -m benchmarks.run [--only table2,table3,...]
+                                            [--smoke] [--json PATH]
+
+``--smoke`` runs the fast CI subset; ``--json`` writes a machine-readable
+``BENCH_*.json`` report (rows, per-suite timings, failures) for the
+nightly workflow artifact. A suite that raises is reported on stderr and
+the process exits non-zero, so CI actually fails on benchmark
+regressions instead of passing silently.
 """
 from __future__ import annotations
 
 import argparse
+import importlib
+import json
 import sys
 import time
+import traceback
+from typing import Dict, List
 
-SUITES = ("table2", "table3", "fig45", "kernels", "chunks", "sensitivity", "roofline", "async")
+SUITES: Dict[str, str] = {
+    "table2": "benchmarks.table2_message_size",
+    "table3": "benchmarks.table3_streaming_memory",
+    "fig45": "benchmarks.fig45_convergence",
+    "kernels": "benchmarks.quant_kernels",
+    "chunks": "benchmarks.streaming_chunks",
+    "sensitivity": "benchmarks.layer_sensitivity",
+    "roofline": "benchmarks.roofline_report",
+    "async": "benchmarks.async_throughput",
+    "hetero": "benchmarks.hetero_fleet",
+}
+
+# fast subset for the nightly smoke run (skips the convergence sweeps)
+SMOKE_SUITES = ("table2", "table3", "kernels", "chunks", "async", "hetero")
 
 
-def main() -> None:
+def main(argv: List[str] | None = None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None, help="comma-separated suite names")
-    args = ap.parse_args()
-    only = set(args.only.split(",")) if args.only else set(SUITES)
+    ap.add_argument("--smoke", action="store_true",
+                    help=f"fast subset: {','.join(SMOKE_SUITES)}")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write a JSON report (default BENCH_smoke.json with --smoke)")
+    args = ap.parse_args(argv)
+
+    if args.only:
+        unknown = set(args.only.split(",")) - set(SUITES)
+        if unknown:
+            ap.error(f"unknown suites: {sorted(unknown)} (have {sorted(SUITES)})")
+        selected = [s for s in SUITES if s in set(args.only.split(","))]
+    elif args.smoke:
+        selected = list(SMOKE_SUITES)
+    else:
+        selected = list(SUITES)
+    json_path = args.json or ("BENCH_smoke.json" if args.smoke else None)
 
     print("name,us_per_call,derived")
+    rows: List[str] = []
+    timings: Dict[str, float] = {}
+    failures: Dict[str, str] = {}
     t0 = time.time()
-    if "table2" in only:
-        from benchmarks import table2_message_size
+    for name in selected:
+        t_suite = time.time()
+        try:
+            mod = importlib.import_module(SUITES[name])
+            for row in mod.run():
+                print(row)
+                rows.append(row)
+        except Exception as exc:  # noqa: BLE001 — a failed suite must not hide the rest
+            traceback.print_exc()
+            failures[name] = f"{type(exc).__name__}: {exc}"
+        timings[name] = round(time.time() - t_suite, 3)
+    elapsed = time.time() - t0
+    print(f"# total {elapsed:.1f}s", file=sys.stderr)
 
-        for row in table2_message_size.run():
-            print(row)
-    if "table3" in only:
-        from benchmarks import table3_streaming_memory
+    if json_path:
+        report = {
+            "suites": selected,
+            "rows": rows,
+            "timings_s": timings,
+            "failures": failures,
+            "elapsed_s": round(elapsed, 3),
+        }
+        with open(json_path, "w") as fh:
+            json.dump(report, fh, indent=1)
+        print(f"# wrote {json_path}", file=sys.stderr)
 
-        for row in table3_streaming_memory.run():
-            print(row)
-    if "fig45" in only:
-        from benchmarks import fig45_convergence
-
-        for row in fig45_convergence.run():
-            print(row)
-    if "kernels" in only:
-        from benchmarks import quant_kernels
-
-        for row in quant_kernels.run():
-            print(row)
-    if "chunks" in only:
-        from benchmarks import streaming_chunks
-
-        for row in streaming_chunks.run():
-            print(row)
-    if "sensitivity" in only:
-        from benchmarks import layer_sensitivity
-
-        for row in layer_sensitivity.run():
-            print(row)
-    if "roofline" in only:
-        from benchmarks import roofline_report
-
-        for row in roofline_report.run():
-            print(row)
-    if "async" in only:
-        from benchmarks import async_throughput
-
-        for row in async_throughput.run():
-            print(row)
-    print(f"# total {time.time() - t0:.1f}s", file=sys.stderr)
+    if failures:
+        for name, err in failures.items():
+            print(f"# FAILED {name}: {err}", file=sys.stderr)
+        return 1
+    return 0
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

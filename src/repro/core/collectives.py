@@ -20,8 +20,7 @@ These run inside ``jax.shard_map`` over the ``pod`` axis; the inner
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Optional, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -18,7 +18,7 @@ training-script change is needed (swapping filter configs is enough).
 from __future__ import annotations
 
 import enum
-from typing import Any, Dict, Iterable, List, Optional
+from typing import Any, Callable, Dict, Iterable, List, Optional
 
 import numpy as np
 
@@ -201,39 +201,105 @@ class ErrorFeedbackQuantizeFilter(Filter):
         return msg
 
 
+def _network_link_fn(network: Any) -> Callable[[str], float]:
+    """client -> bits/s from a NetworkModel (or anything link()-shaped)."""
+    fn = getattr(network, "bandwidth_bps", None)
+    if callable(fn):
+        return fn
+    return lambda client: network.link(client).bandwidth_mbps * 1e6
+
+
 class AdaptiveQuantizeFilter(Filter):
     """Bandwidth-adaptive precision (paper §V: "adaptive ... mechanisms
 
     based on network conditions"): picks the cheapest format whose
     estimated transfer time fits the round's bandwidth budget, falling
     back toward fp32 when the link is fast enough to afford fidelity.
+
+    Two bandwidth sources, checked in order:
+
+    * ``link_fn(client) -> bits/s`` — a **per-client** hook, resolved from
+      the message's ``client`` header at process time. Wire it to the
+      async runtime's per-client link model with :meth:`bind_network`:
+      slow links (3G, satellite) then automatically ship 8-bit/NF4 while
+      fast links (fiber) afford fp16/fp32 — precision tracks the
+      simulated network, per client, with no job-script change.
+    * ``bandwidth_bps`` — a fleet-wide constant, the original behaviour
+      and the fallback for messages without a ``client`` header.
+
+    ``last_fmt_by_client`` records the most recent per-client decision
+    (key ``""`` for unattributed messages) for tests and benchmarks.
     """
 
     LADDER = ("fp32", "fp16", "blockwise8", "nf4")
+    BITS = {"fp32": 32, "fp16": 16, "blockwise8": 8 + 32 / 4096, "nf4": 4 + 32 / 64}
 
-    def __init__(self, bandwidth_bps: float, budget_s: float, min_params: int = 0) -> None:
+    def __init__(
+        self,
+        bandwidth_bps: Optional[float] = None,
+        budget_s: float = 1.0,
+        min_params: int = 0,
+        link_fn: Optional[Callable[[str], float]] = None,
+    ) -> None:
+        if bandwidth_bps is None and link_fn is None:
+            raise ValueError("need bandwidth_bps, link_fn, or bind_network()")
         self.bandwidth_bps = bandwidth_bps
         self.budget_s = budget_s
         self.min_params = min_params
+        self.link_fn = link_fn
         self.last_fmt: Optional[str] = None
+        self.last_fmt_by_client: Dict[str, str] = {}
+
+    @classmethod
+    def from_network(
+        cls, network: Any, budget_s: float = 1.0, min_params: int = 0
+    ) -> "AdaptiveQuantizeFilter":
+        """Link-aware construction from a runtime NetworkModel. The
+        filter has no fleet-wide fallback, so a message without a
+        ``client`` header raises rather than guessing a bandwidth."""
+        return cls(budget_s=budget_s, min_params=min_params,
+                   link_fn=_network_link_fn(network))
+
+    def bind_network(self, network: Any) -> None:
+        """Feed per-client bandwidth from ``network.link(client)`` — any
+        object with that method returning a LinkProfile-like (e.g.
+        :class:`repro.runtime.network.NetworkModel`)."""
+        self.link_fn = _network_link_fn(network)
+
+    def _bandwidth_for(self, client: Optional[str]) -> float:
+        if self.link_fn is not None and client:
+            return float(self.link_fn(client))
+        if self.bandwidth_bps is None:
+            raise ValueError(
+                "AdaptiveQuantizeFilter has only a per-client link_fn but the "
+                "message carries no 'client' header; set bandwidth_bps as fallback"
+            )
+        return self.bandwidth_bps
 
     def _payload_bits(self, message: Message, fmt: str) -> float:
-        bits = {"fp32": 32, "fp16": 16, "blockwise8": 8 + 32 / 4096, "nf4": 4 + 32 / 64}[fmt]
         n = sum(
             int(np.prod(np.asarray(v).shape))
             for v in message.payload.values()
             if not isinstance(v, QuantizedTensor)
             and np.issubdtype(np.asarray(v).dtype, np.floating)
         )
-        return n * bits
+        return n * self.BITS[fmt]
+
+    def fmt_for(self, message: Message) -> str:
+        """The precision this filter would pick for ``message`` (pure).
+
+        ``bandwidth_bps``/``link_fn`` are true bits-per-second, matching
+        :class:`~repro.runtime.network.LinkProfile` semantics."""
+        bandwidth = self._bandwidth_for(message.headers.get("client"))
+        for cand in self.LADDER:
+            if self._payload_bits(message, cand) / bandwidth <= self.budget_s:
+                return cand
+        return self.LADDER[-1]
 
     def process(self, message: Message) -> Message:
-        fmt = self.LADDER[-1]
-        for cand in self.LADDER:
-            if self._payload_bits(message, cand) / 8.0 / self.bandwidth_bps <= self.budget_s:
-                fmt = cand
-                break
+        fmt = self.fmt_for(message)
         self.last_fmt = fmt
+        self.last_fmt_by_client[str(message.headers.get("client", ""))] = fmt
         if fmt == "fp32":
             return message
         return QuantizeFilter(fmt, self.min_params).process(message)

@@ -29,9 +29,7 @@ benchmark measures the three envelopes deterministically.
 from __future__ import annotations
 
 import dataclasses
-import io
 import os
-import queue
 import socket
 import struct
 import threading

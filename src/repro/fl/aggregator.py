@@ -14,7 +14,7 @@ bit-identical to dequantize-then-average (tests assert this).
 """
 from __future__ import annotations
 
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Tuple
 
 import jax.numpy as jnp
 import numpy as np

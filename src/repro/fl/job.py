@@ -1,10 +1,11 @@
 """Declarative FL job system (NVFlare-style): one JSON/dict describes the
 
 whole federation — model, clients, data partitioning, the filter stack at
-each of the four points, transmission mode — and the runner builds and
-executes it. The paper's "no code change, just a configuration change"
-claim is this surface: switching quantization on/off/format or streaming
-mode touches only the job spec.
+each of the four points, transmission mode, and the runtime scenario —
+and the runner builds and executes it. The paper's "no code change, just
+a configuration change" claim is this surface: switching quantization
+on/off/format, streaming mode, or the *entire scheduling regime* touches
+only the job spec.
 
     spec = {
       "arch": "llama3.2-1b", "smoke": true,
@@ -12,12 +13,25 @@ mode touches only the job spec.
       "clients": 3, "partition": "dirichlet", "alpha": 0.5,
       "quantization": {"fmt": "blockwise8", "error_feedback": false},
       "dp_sigma": 0.0,
-      "transmission": "container", "driver": "loopback", "chunk_mb": 1
+      "transmission": "container", "driver": "loopback", "chunk_mb": 1,
+      "runtime": {                       # optional: async scenario engine
+        "policy": "fedasync",            # sync | fedbuff | fedasync | tiered
+        "max_concurrency": 8, "dropout_prob": 0.1, "max_retries": 2,
+        "total_tasks": 15,               # fedasync/fedbuff task budget
+        "network": {"kind": "hetero", "tiers": ["fiber", "lte", "3g"]},
+        "availability": {"kind": "random", "mean_online_s": 60,
+                         "mean_offline_s": 20, "horizon_s": 600}
+      }
     }
     result = run_job(spec)
+
+With ``"quantization": {"fmt": "adaptive"}`` and a runtime network, each
+client's wire precision tracks its simulated link (slow links get
+8-bit/NF4, fast links fp16/fp32) — see ``result["adaptive_fmts"]``.
 """
 from __future__ import annotations
 
+import dataclasses
 import json
 from typing import Any, Dict, List, Optional
 
@@ -27,6 +41,7 @@ import numpy as np
 
 from repro.configs import get_config, get_smoke_config
 from repro.core.filters import (
+    AdaptiveQuantizeFilter,
     DequantizeFilter,
     DPGaussianNoiseFilter,
     ErrorFeedbackQuantizeFilter,
@@ -59,22 +74,52 @@ DEFAULTS: Dict[str, Any] = {
     "driver": "loopback",
     "chunk_mb": 1,
     "server_quantized_aggregation": False,
+    "runtime": None,
     "seed": 0,
 }
 
+RUNTIME_POLICIES = ("sync", "fedbuff", "fedasync", "tiered")
 
-def _build_filters(spec: Dict[str, Any]):
-    """Two-way scheme (+optional EF / DP) from the job spec."""
+
+def _adaptive_filter(q: Dict[str, Any], network: Optional[Any]) -> AdaptiveQuantizeFilter:
+    f = AdaptiveQuantizeFilter(
+        bandwidth_bps=float(q.get("bandwidth_mbps", 80.0)) * 1e6,  # wifi-class fallback
+        budget_s=float(q.get("budget_s", 1.0)),
+        min_params=int(q.get("min_params", 0)),
+    )
+    if network is not None:
+        f.bind_network(network)
+    return f
+
+
+def _build_filters(spec: Dict[str, Any], network: Optional[Any] = None):
+    """Two-way scheme (+optional EF / DP / link-adaptive) from the job spec."""
     server = no_filters()
     client = no_filters()
+    adaptive: List[AdaptiveQuantizeFilter] = []
     q = spec.get("quantization")
     if q:
         fmt = q["fmt"]
-        mk = (
-            (lambda: ErrorFeedbackQuantizeFilter(fmt))
-            if q.get("error_feedback")
-            else (lambda: QuantizeFilter(fmt))
-        )
+        if fmt == "adaptive":
+            if q.get("error_feedback"):
+                raise ValueError("error_feedback does not compose with adaptive precision")
+            if spec.get("server_quantized_aggregation"):
+                # per-client formats can differ (that's the point), and the
+                # fused aggregator needs one uniform wire format
+                raise ValueError(
+                    "server_quantized_aggregation does not compose with adaptive "
+                    "precision: clients may ship mixed formats"
+                )
+
+            def mk():
+                adaptive.append(_adaptive_filter(q, network))
+                return adaptive[-1]
+        elif q.get("error_feedback"):
+            def mk():
+                return ErrorFeedbackQuantizeFilter(fmt)
+        else:
+            def mk():
+                return QuantizeFilter(fmt)
         server[FilterPoint.TASK_DATA_OUT] = FilterChain([mk()])
         client[FilterPoint.TASK_DATA_IN] = FilterChain([DequantizeFilter()])
         out_chain: List[Any] = []
@@ -88,10 +133,120 @@ def _build_filters(spec: Dict[str, Any]):
         client[FilterPoint.TASK_RESULT_OUT] = FilterChain(
             [DPGaussianNoiseFilter(spec["dp_sigma"], seed=spec["seed"])]
         )
-    return server, client
+    return server, client, adaptive
 
 
-def run_job(spec: Dict[str, Any]) -> Dict[str, Any]:
+def _build_runtime(
+    spec: Dict[str, Any], aggregator: Any, client_names: List[str]
+) -> Dict[str, Any]:
+    """Translate the ``"runtime"`` spec block into FLSimulator kwargs."""
+    r = spec.get("runtime")
+    if not r:
+        return {}
+    # imported lazily, same circularity constraint as fl.simulator
+    from repro.runtime import (
+        FedAsyncPolicy,
+        FedBuffPolicy,
+        RuntimeConfig,
+        TieredPolicy,
+        availability_from_spec,
+        network_from_spec,
+        polynomial_staleness,
+    )
+
+    r = dict(r)
+    policy_name = r.get("policy", "sync")
+    if policy_name not in RUNTIME_POLICIES:
+        raise ValueError(f"unknown runtime policy {policy_name!r}; pick from {RUNTIME_POLICIES}")
+    if policy_name in ("fedbuff", "fedasync") and spec.get("server_quantized_aggregation"):
+        # these policies aggregate deltas/weights directly (not through the
+        # aggregator) and skip QuantizedTensor payload items — quantized
+        # server ingress would silently aggregate nothing
+        raise ValueError(
+            f"server_quantized_aggregation is not supported with policy "
+            f"{policy_name!r}; it requires the aggregator path (sync/tiered)"
+        )
+    seed = int(r.get("seed", spec["seed"]))
+    network = network_from_spec(r["network"], client_names) if r.get("network") else None
+    availability = (
+        availability_from_spec(r["availability"], client_names)
+        if r.get("availability") else None
+    )
+    config = RuntimeConfig(
+        seed=seed,
+        max_concurrency=int(r.get("max_concurrency", 8)),
+        dropout_prob=float(r.get("dropout_prob", 0.0)),
+        max_retries=int(r.get("max_retries", 2)),
+    )
+    total_tasks = int(r.get("total_tasks", spec["rounds"] * len(client_names)))
+    staleness = polynomial_staleness(float(r.get("staleness_alpha", 0.5)))
+    policy: Optional[Any] = None  # sync: FLSimulator's default SyncPolicy
+    if policy_name == "fedbuff":
+        policy = FedBuffPolicy(
+            total_tasks,
+            buffer_size=int(r.get("buffer_size", 4)),
+            server_lr=float(r.get("server_lr", 1.0)),
+            staleness_weight=staleness,
+        )
+    elif policy_name == "fedasync":
+        policy = FedAsyncPolicy(
+            total_tasks,
+            mixing_rate=float(r.get("mixing_rate", 0.6)),
+            staleness_weight=staleness,
+        )
+    elif policy_name == "tiered":
+        policy = TieredPolicy(
+            aggregator,
+            spec["rounds"],
+            num_tiers=int(r.get("num_tiers", 3)),
+            network=network,
+            credits=r.get("credits"),
+            seed=seed,
+        )
+    return {
+        "runtime": config,
+        "policy": policy,
+        "network": network,
+        "availability": availability,
+    }
+
+
+@dataclasses.dataclass
+class Job:
+    """A fully-constructed federation, ready to run (or inspect)."""
+
+    spec: Dict[str, Any]
+    sim: FLSimulator
+    init_weights: Dict[str, Any]
+    history: List[float]
+    adaptive_filters: List[AdaptiveQuantizeFilter]
+
+    def run(self) -> Dict[str, Any]:
+        final = self.sim.run(self.init_weights)
+        out = {
+            "final_weights": final,
+            "history": self.history,
+            "messages": self.sim.stats.messages,
+            "wire_bytes": self.sim.stats.bytes_sent,
+        }
+        if self.sim.scheduler is not None:
+            out["sim_time_s"] = self.sim.sim_time_s
+            out["runtime_stats"] = dataclasses.asdict(self.sim.scheduler.stats)
+            out["policy"] = self.sim.scheduler.policy.name
+        if self.adaptive_filters:
+            fmts: Dict[str, str] = {}
+            for f in self.adaptive_filters:
+                fmts.update(f.last_fmt_by_client)
+            out["adaptive_fmts"] = fmts
+        return out
+
+
+def build_job(spec: Dict[str, Any]) -> Job:
+    """Construct the federation a spec describes, without running it.
+
+    ``run_job`` is exactly ``build_job(spec).run()`` — tests use this to
+    check the declarative surface against direct FLSimulator construction.
+    """
     spec = {**DEFAULTS, **spec}
     cfg = get_smoke_config(spec["arch"]) if spec["smoke"] else get_config(spec["arch"])
     model = create_model(cfg)
@@ -126,14 +281,18 @@ def run_job(spec: Dict[str, Any]) -> Dict[str, Any]:
 
         return TrainExecutor(name, train_fn)
 
-    server_filters, client_filters = _build_filters(spec)
+    client_names = [f"site-{i}" for i in range(len(datasets))]
     agg = (
         QuantizedFedAvgAggregator()
         if spec.get("server_quantized_aggregation") and spec.get("quantization")
         else FedAvgAggregator()
     )
+    runtime_kwargs = _build_runtime(spec, agg, client_names)
+    server_filters, client_filters, adaptive = _build_filters(
+        spec, network=runtime_kwargs.get("network")
+    )
     sim = FLSimulator(
-        [make_client(f"site-{i}", d) for i, d in enumerate(datasets)],
+        [make_client(n, d) for n, d in zip(client_names, datasets)],
         agg,
         SimulationConfig(
             num_rounds=spec["rounds"],
@@ -143,15 +302,14 @@ def run_job(spec: Dict[str, Any]) -> Dict[str, Any]:
         ),
         server_filters=server_filters,
         client_filters=client_filters,
+        **runtime_kwargs,
     )
     init = flatten_state_dict(model.init(jax.random.PRNGKey(spec["seed"])))
-    final = sim.run(init)
-    return {
-        "final_weights": final,
-        "history": history,
-        "messages": sim.stats.messages,
-        "wire_bytes": sim.stats.bytes_sent,
-    }
+    return Job(spec, sim, init, history, adaptive)
+
+
+def run_job(spec: Dict[str, Any]) -> Dict[str, Any]:
+    return build_job(spec).run()
 
 
 def run_job_file(path: str) -> Dict[str, Any]:

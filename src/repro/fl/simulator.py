@@ -22,7 +22,7 @@ from typing import Any, Callable, Dict, List, Optional, Sequence
 
 from repro.core import streaming as sm
 from repro.core.filters import FilterChain, FilterPoint, no_filters
-from repro.core.messages import Message, MessageKind
+from repro.core.messages import Message
 from repro.fl.controller import ClientProxy, ScatterAndGather
 from repro.fl.executor import Executor
 from repro.utils.mem import MemoryMeter
@@ -131,6 +131,9 @@ class _SimClientProxy(ClientProxy):
             return chain.process(message)
 
     def submit_task(self, task: Message) -> Message:
+        # destination goes in the headers so egress filters can be
+        # link-aware (AdaptiveQuantizeFilter picks per-client precision)
+        task.headers.setdefault("client", self.name)
         # 1. before Task Data leaves server
         task = self._filter(self.server_filters[FilterPoint.TASK_DATA_OUT], task)
         wire_bytes_down = task.payload_bytes()
@@ -163,13 +166,17 @@ class FLSimulator:
         runtime: Optional[Any] = None,   # repro.runtime.RuntimeConfig -> async scheduler
         policy: Optional[Any] = None,    # repro.runtime.AggregationPolicy override
         network: Optional[Any] = None,   # repro.runtime.NetworkModel override
+        availability: Optional[Any] = None,  # repro.runtime.AvailabilityTrace
     ) -> None:
         self.config = config or SimulationConfig()
         self.server_filters = server_filters or no_filters()
         self.client_filters = client_filters or no_filters()
         self.stats = TrafficStats()
         self.meter = MemoryMeter()
-        use_async = runtime is not None or policy is not None or network is not None
+        use_async = (
+            runtime is not None or policy is not None
+            or network is not None or availability is not None
+        )
         wire = _Wire(self.config, self.stats)
         filter_lock = threading.Lock() if use_async else None
         self.proxies = [
@@ -189,6 +196,7 @@ class FLSimulator:
                 policy or SyncPolicy(aggregator, self.config.num_rounds, on_round_end),
                 network=network,
                 config=runtime or RuntimeConfig(),
+                availability=availability,
             )
         else:
             self.controller = ScatterAndGather(

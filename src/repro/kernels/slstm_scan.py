@@ -20,13 +20,12 @@ single gx read + h write: ~(4+1) x S x D x 4 B.
 from __future__ import annotations
 
 import functools
-from typing import Tuple
-
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from repro.utils.compat import pallas_tpu_compiler_params
 
 DEFAULT_CHUNK = 256
 
@@ -113,7 +112,7 @@ def slstm_scan_pallas(
             pltpu.VMEM((H, hd), jnp.float32),  # m
         ],
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=pallas_tpu_compiler_params(
             dimension_semantics=("parallel", "arbitrary")
         ),
     )(gx, r)

@@ -18,19 +18,18 @@ from __future__ import annotations
 
 import argparse
 import time
-from functools import partial
-from typing import Any, Dict, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
-import numpy as np
-from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 from repro.configs import ARCH_IDS, get_config, get_smoke_config
 from repro.core import collectives as C
 from repro.data import dirichlet_partition
 from repro.models import create_model
 from repro.optim import adamw_init, adamw_update
+from repro.utils.compat import make_mesh, shard_map
 
 
 def make_fl_round(model, *, local_steps: int, lr: float, agg: str, mesh):
@@ -76,12 +75,12 @@ def make_fl_round(model, *, local_steps: int, lr: float, agg: str, mesh):
     pspec = P()  # params replicated within pod; pod axis handled by shard_map
     batch_spec = P("pod")  # leading dim = pod-local batches
 
-    fl_round_sm = jax.shard_map(
+    fl_round_sm = shard_map(
         fl_round,
         mesh=mesh,
         in_specs=(pspec, pspec, batch_spec),
         out_specs=(pspec, pspec, pspec),
-        check_vma=False,
+        check=False,
     )
     return jax.jit(fl_round_sm, donate_argnums=(0, 1))
 
@@ -89,11 +88,7 @@ def make_fl_round(model, *, local_steps: int, lr: float, agg: str, mesh):
 def run(args) -> Dict[str, Any]:
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     model = create_model(cfg)
-    mesh = jax.make_mesh(
-        (args.pods, jax.device_count() // args.pods),
-        ("pod", "data"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2,
-    )
+    mesh = make_mesh((args.pods, jax.device_count() // args.pods), ("pod", "data"))
     params = model.init(jax.random.PRNGKey(args.seed))
     opt_state = adamw_init(params)
     datasets = dirichlet_partition(

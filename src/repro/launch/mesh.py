@@ -10,21 +10,17 @@ jax device state (the dry-run sets XLA_FLAGS before first jax init).
 """
 from __future__ import annotations
 
-import jax
-
-
-def _auto(n):
-    return (jax.sharding.AxisType.Auto,) * n
+from repro.utils.compat import make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+    return make_mesh(shape, axes)
 
 
 def make_debug_mesh(data: int = 1, model: int = 1, pod: int = 0):
     """Small mesh over however many devices exist (tests)."""
     if pod:
-        return jax.make_mesh((pod, data, model), ("pod", "data", "model"), axis_types=_auto(3))
-    return jax.make_mesh((data, model), ("data", "model"), axis_types=_auto(2))
+        return make_mesh((pod, data, model), ("pod", "data", "model"))
+    return make_mesh((data, model), ("data", "model"))

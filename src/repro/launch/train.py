@@ -10,7 +10,6 @@ from __future__ import annotations
 
 import argparse
 import time
-from functools import partial
 from typing import Any, Dict, Optional, Tuple
 
 import jax

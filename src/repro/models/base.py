@@ -16,7 +16,7 @@ runs on 1 CPU device (smoke tests) and the 512-chip production mesh
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Optional, Tuple
 
 import jax.numpy as jnp
 

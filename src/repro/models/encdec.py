@@ -10,14 +10,13 @@ assigned input shapes don't require giant learned tables).
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
 
 from repro.models import base as B
 from repro.models import layers as L
-from repro.models.layers import ParamDef
 
 
 def _enc_block_spec(cfg: B.ModelConfig) -> Dict[str, Any]:
@@ -200,8 +199,6 @@ class EncDecModel:
 
 
 def _sinusoid_at(pos: jnp.ndarray, d: int, dtype) -> jnp.ndarray:
-    import numpy as np
-
     half = d // 2
     dim = jnp.arange(half, dtype=jnp.float32)
     ang = pos.astype(jnp.float32) / jnp.power(10000.0, 2 * dim / d)

@@ -8,7 +8,7 @@ a single source of truth consumed by ``repro.launch.sharding``.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp

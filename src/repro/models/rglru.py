@@ -25,7 +25,6 @@ from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.models import base as B
 from repro.models import layers as L

@@ -8,7 +8,6 @@ consuming stub patch embeddings as a prefix (the carve-out in the brief).
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, Optional, Tuple
 
 import jax

@@ -2,46 +2,67 @@
 
 Layers (each its own module):
 
-* :mod:`repro.runtime.events` — deterministic simulated-clock event loop.
+* :mod:`repro.runtime.events` — deterministic simulated-clock event loop
+  and client availability traces (arrival/departure schedules).
 * :mod:`repro.runtime.network` — per-client link/compute models that turn
   actual wire bytes into simulated time.
 * :mod:`repro.runtime.async_agg` — aggregation policies: round-barrier
-  :class:`SyncPolicy` (bitwise-equal to ``ScatterAndGather``) and
-  staleness-weighted :class:`FedBuffPolicy`.
+  :class:`SyncPolicy` (bitwise-equal to ``ScatterAndGather``),
+  staleness-weighted :class:`FedBuffPolicy`, per-update
+  :class:`FedAsyncPolicy`, and latency-tiered :class:`TieredPolicy`.
 * :mod:`repro.runtime.scheduler` — the orchestrator: concurrent
-  real-transport execution on a thread pool, fault injection, timeline.
+  real-transport execution on a thread pool, fault injection,
+  availability deferral/interrupts, timeline.
 """
 from repro.runtime.async_agg import (
     AggregationPolicy,
     Dispatch,
+    FedAsyncPolicy,
     FedBuffPolicy,
     SyncPolicy,
+    TieredPolicy,
     polynomial_staleness,
 )
-from repro.runtime.events import Event, EventKind, EventLoop
+from repro.runtime.events import (
+    AvailabilityTrace,
+    Event,
+    EventKind,
+    EventLoop,
+    availability_from_spec,
+    periodic_availability,
+    random_availability,
+)
 from repro.runtime.network import (
     PROFILES,
     ComputeProfile,
     LinkProfile,
     NetworkModel,
     heterogeneous_network,
+    network_from_spec,
 )
 from repro.runtime.scheduler import AsyncFLScheduler, RuntimeConfig, RuntimeStats
 
 __all__ = [
     "AggregationPolicy",
     "Dispatch",
+    "FedAsyncPolicy",
     "FedBuffPolicy",
     "SyncPolicy",
+    "TieredPolicy",
     "polynomial_staleness",
+    "AvailabilityTrace",
     "Event",
     "EventKind",
     "EventLoop",
+    "availability_from_spec",
+    "periodic_availability",
+    "random_availability",
     "PROFILES",
     "ComputeProfile",
     "LinkProfile",
     "NetworkModel",
     "heterogeneous_network",
+    "network_from_spec",
     "AsyncFLScheduler",
     "RuntimeConfig",
     "RuntimeStats",

@@ -1,6 +1,6 @@
 """Aggregation policies for the event-driven scheduler.
 
-Two policies make synchronous FedAvg "one policy among several":
+Four policies make synchronous FedAvg "one policy among several":
 
 * :class:`SyncPolicy` — a barrier per round. It buffers each round's
   Task Results as they complete (in any simulated order) and feeds the
@@ -19,6 +19,18 @@ Two policies make synchronous FedAvg "one policy among several":
   clients contribute many low-staleness updates instead of idling behind
   stragglers — the throughput win the async benchmark quantifies.
 
+* :class:`FedAsyncPolicy` — fully asynchronous per-update mixing
+  (FedAsync, Xie et al. 2019): every single client result is immediately
+  folded into the global model, ``w <- (1 - a_t) w + a_t w_client`` with
+  ``a_t = mixing_rate * (1 + staleness)^-alpha`` — the K=1 extreme of
+  the buffered family, maximum freshness, one model version per update.
+
+* :class:`TieredPolicy` — TiFL-style tiered selection (Chai et al.
+  2020): clients are bucketed into tiers by *profiled round latency* and
+  each round runs over one tier only, so a round is never dragged out by
+  a straggler from a slower tier. Selection is seeded (deterministic)
+  with optional per-tier credits to bound how often any tier is drawn.
+
 Policies are transport-ignorant: they see completed
 :class:`~repro.core.messages.Message` results (already through all four
 filter points) and emit :class:`Dispatch` records; the scheduler owns
@@ -27,6 +39,7 @@ time, links, threads and faults.
 from __future__ import annotations
 
 import dataclasses
+from random import Random
 from typing import Any, Callable, Dict, List, Mapping, Optional, Sequence
 
 import numpy as np
@@ -80,6 +93,9 @@ class SyncPolicy(AggregationPolicy):
     summation order — and hence the output bits — match the sequential
     controller. Clients that permanently dropped out are skipped (the
     sample-weighted average renormalizes over survivors).
+
+    Subclasses may narrow each round to a cohort by overriding
+    :meth:`_select_round_clients` (see :class:`TieredPolicy`).
     """
 
     name = "sync"
@@ -94,6 +110,7 @@ class SyncPolicy(AggregationPolicy):
         self.num_rounds = num_rounds
         self.on_round_end = on_round_end
         self._clients: List[str] = []
+        self._round_clients: List[str] = []
         self._round = 0
         self._weights: Dict[str, Any] = {}
         self._results: Dict[str, Message] = {}
@@ -107,19 +124,24 @@ class SyncPolicy(AggregationPolicy):
             return []
         return self._dispatch_round()
 
+    def _select_round_clients(self) -> List[str]:
+        """The cohort for the round about to start (default: everyone)."""
+        return list(self._clients)
+
     def _dispatch_round(self) -> List[Dispatch]:
         self._results = {}
         self._failed = set()
+        self._round_clients = self._select_round_clients()
         return [
             Dispatch(c, make_task(self._round, self._weights), version=self._round)
-            for c in self._clients
+            for c in self._round_clients
         ]
 
     def _round_done(self) -> bool:
-        return len(self._results) + len(self._failed) >= len(self._clients)
+        return len(self._results) + len(self._failed) >= len(self._round_clients)
 
     def _close_round(self) -> List[Dispatch]:
-        ordered = [self._results[c] for c in self._clients if c in self._results]
+        ordered = [self._results[c] for c in self._round_clients if c in self._results]
         for result in ordered:
             self.aggregator.accept(result)
         self._weights = self.aggregator.finish()
@@ -165,36 +187,16 @@ def polynomial_staleness(alpha: float = 0.5) -> Callable[[int], float]:
     return weight
 
 
-class FedBuffPolicy(AggregationPolicy):
-    """Staleness-weighted buffered async aggregation.
+class _BudgetedAsyncPolicy(AggregationPolicy):
+    """Shared machinery for barrier-free policies with a client-task
+    budget (:class:`FedBuffPolicy`, :class:`FedAsyncPolicy`): dispatch
+    bookkeeping, float32 weight coercion, and the completion criterion
+    (all dispatched tasks either processed or permanently lost)."""
 
-    ``total_tasks`` is the client-task budget (compare against a sync run
-    of ``num_rounds * num_clients``); ``buffer_size`` is K, the number of
-    client updates folded into one server step.
-    """
-
-    name = "fedbuff"
-
-    def __init__(
-        self,
-        total_tasks: int,
-        buffer_size: int = 4,
-        server_lr: float = 1.0,
-        staleness_weight: Optional[Callable[[int], float]] = None,
-        on_update: Optional[Callable[[int, Dict[str, Any]], None]] = None,
-    ) -> None:
-        if buffer_size < 1:
-            raise ValueError("buffer_size must be >= 1")
+    def __init__(self, total_tasks: int) -> None:
         self.total_tasks = total_tasks
-        self.buffer_size = buffer_size
-        self.server_lr = server_lr
-        self.staleness_weight = staleness_weight or polynomial_staleness()
-        self.on_update = on_update
         self._weights: Dict[str, np.ndarray] = {}
         self._version = 0
-        self._delta_sum: Dict[str, np.ndarray] = {}
-        self._wsum = 0.0
-        self._buffered = 0
         self._dispatched = 0
         self._done = 0          # results processed
         self._lost = 0          # permanently failed clients' tasks
@@ -217,6 +219,51 @@ class FedBuffPolicy(AggregationPolicy):
         for c in clients:
             out.extend(self._next_task(c))
         return out
+
+    def on_client_failed(self, dispatch):
+        self._lost += 1
+        return []
+
+    @property
+    def complete(self) -> bool:
+        return self._done + self._lost >= self._dispatched and self._dispatched >= self.total_tasks
+
+    @property
+    def model_version(self) -> int:
+        return self._version
+
+    def finish(self):
+        return dict(self._weights)
+
+
+class FedBuffPolicy(_BudgetedAsyncPolicy):
+    """Staleness-weighted buffered async aggregation.
+
+    ``total_tasks`` is the client-task budget (compare against a sync run
+    of ``num_rounds * num_clients``); ``buffer_size`` is K, the number of
+    client updates folded into one server step.
+    """
+
+    name = "fedbuff"
+
+    def __init__(
+        self,
+        total_tasks: int,
+        buffer_size: int = 4,
+        server_lr: float = 1.0,
+        staleness_weight: Optional[Callable[[int], float]] = None,
+        on_update: Optional[Callable[[int, Dict[str, Any]], None]] = None,
+    ) -> None:
+        if buffer_size < 1:
+            raise ValueError("buffer_size must be >= 1")
+        super().__init__(total_tasks)
+        self.buffer_size = buffer_size
+        self.server_lr = server_lr
+        self.staleness_weight = staleness_weight or polynomial_staleness()
+        self.on_update = on_update
+        self._delta_sum: Dict[str, np.ndarray] = {}
+        self._wsum = 0.0
+        self._buffered = 0
 
     # -- aggregation --------------------------------------------------------
     def _flush(self) -> None:
@@ -255,18 +302,136 @@ class FedBuffPolicy(AggregationPolicy):
             self._flush()
         return self._next_task(dispatch.client)
 
-    def on_client_failed(self, dispatch):
-        self._lost += 1
-        return []
-
-    @property
-    def complete(self) -> bool:
-        return self._done + self._lost >= self._dispatched and self._dispatched >= self.total_tasks
-
-    @property
-    def model_version(self) -> int:
-        return self._version
-
     def finish(self):
         self._flush()  # partial buffer still carries information
         return dict(self._weights)
+
+
+class FedAsyncPolicy(_BudgetedAsyncPolicy):
+    """FedAsync (Xie et al. 2019): per-update server mixing.
+
+    Every completed client result is immediately mixed into the global
+    model — no buffer, no barrier:
+
+        a_t = mixing_rate * (1 + staleness)^-alpha
+        w  <- (1 - a_t) * w + a_t * w_client
+
+    One server step (and model version bump) per client update: maximum
+    freshness at the cost of more server steps than FedBuff. Stale
+    updates are geometrically discounted by the polynomial staleness
+    weight, FedAsync's convergence knob.
+    """
+
+    name = "fedasync"
+
+    def __init__(
+        self,
+        total_tasks: int,
+        mixing_rate: float = 0.6,
+        staleness_weight: Optional[Callable[[int], float]] = None,
+        on_update: Optional[Callable[[int, Dict[str, Any]], None]] = None,
+    ) -> None:
+        if not 0.0 < mixing_rate <= 1.0:
+            raise ValueError("mixing_rate must be in (0, 1]")
+        super().__init__(total_tasks)
+        self.mixing_rate = mixing_rate
+        self.staleness_weight = staleness_weight or polynomial_staleness()
+        self.on_update = on_update
+
+    def on_result(self, dispatch, result):
+        staleness = self._version - dispatch.version
+        self.staleness_seen.append(staleness)
+        a = self.mixing_rate * self.staleness_weight(staleness)
+        for name, value in result.payload.items():
+            cur = self._weights.get(name)
+            if cur is None or not np.issubdtype(np.asarray(value).dtype, np.floating):
+                continue
+            self._weights[name] = (
+                (1.0 - a) * np.asarray(cur, np.float32) + a * np.asarray(value, np.float32)
+            ).astype(np.float32)
+        self._version += 1
+        self._done += 1
+        if self.on_update is not None:
+            self.on_update(self._version, self._weights)
+        return self._next_task(dispatch.client)
+
+
+class TieredPolicy(SyncPolicy):
+    """TiFL-style tiered client selection (Chai et al. 2020).
+
+    Clients are profiled for expected round latency, sorted, and split
+    into ``num_tiers`` equal-size buckets; every round draws **one** tier
+    (seeded uniform over eligible tiers) and runs a sync FedAvg round
+    over that tier only. Intra-round wait is bounded by the tier's own
+    stragglers — a fiber client never idles behind a 3G one.
+
+    Profiling: ``latency_fn(client) -> seconds`` if given; else, with a
+    :class:`~repro.runtime.network.NetworkModel`, the jitter-free
+    estimate ``2 * link.base_seconds(probe_bytes) + compute`` per client;
+    else clients are bucketed in client-list order.
+
+    ``credits`` (optional, per tier) bounds how many rounds any tier may
+    serve, TiFL's guard against over-training on one latency class; when
+    every tier's credits are spent the guard lifts and all tiers become
+    eligible again.
+    """
+
+    name = "tiered"
+
+    def __init__(
+        self,
+        aggregator: Any,
+        num_rounds: int,
+        num_tiers: int = 3,
+        latency_fn: Optional[Callable[[str], float]] = None,
+        network: Optional[Any] = None,   # repro.runtime.network.NetworkModel
+        probe_bytes: int = 1 << 20,
+        credits: Optional[int] = None,
+        seed: int = 0,
+        on_round_end: Optional[Callable[[int, Dict[str, Any], List[Message]], None]] = None,
+    ) -> None:
+        if num_tiers < 1:
+            raise ValueError("num_tiers must be >= 1")
+        super().__init__(aggregator, num_rounds, on_round_end)
+        self.num_tiers = num_tiers
+        self.latency_fn = latency_fn
+        self.network = network
+        self.probe_bytes = probe_bytes
+        self.credits = credits
+        self._rng = Random(f"tiered:{seed}")
+        self.tiers: List[List[str]] = []
+        self.tier_of: Dict[str, int] = {}
+        self.profiled_latency: Dict[str, float] = {}
+        self.selected_tiers: List[int] = []
+        self._credits_left: List[int] = []
+
+    def _estimate_latency(self, client: str) -> float:
+        if self.latency_fn is not None:
+            return float(self.latency_fn(client))
+        if self.network is not None:
+            link = self.network.link(client)
+            _, compute = self.network.floor_seconds(client)
+            return 2.0 * link.base_seconds(self.probe_bytes) + compute
+        return 0.0  # no profile: stable sort keeps client-list order
+
+    def begin(self, initial_weights, clients):
+        clients = list(clients)
+        self.profiled_latency = {c: self._estimate_latency(c) for c in clients}
+        by_latency = sorted(clients, key=lambda c: self.profiled_latency[c])
+        k = min(self.num_tiers, len(clients))
+        bounds = [round(i * len(by_latency) / k) for i in range(k + 1)]
+        self.tiers = [by_latency[bounds[i]:bounds[i + 1]] for i in range(k)]
+        self.tier_of = {c: i for i, tier in enumerate(self.tiers) for c in tier}
+        self._credits_left = [self.credits or 0] * len(self.tiers)
+        self.selected_tiers = []
+        return super().begin(initial_weights, clients)
+
+    def _select_round_clients(self) -> List[str]:
+        eligible = [i for i, left in enumerate(self._credits_left) if left > 0]
+        if not eligible:  # no credit scheme, or all spent: every tier eligible
+            eligible = list(range(len(self.tiers)))
+        idx = eligible[self._rng.randrange(len(eligible))]
+        if self._credits_left[idx] > 0:
+            self._credits_left[idx] -= 1
+        self.selected_tiers.append(idx)
+        return list(self.tiers[idx])

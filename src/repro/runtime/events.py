@@ -16,10 +16,14 @@ scheduler's seeded stream. Nothing here touches ``time.time()``.
 """
 from __future__ import annotations
 
+import bisect
 import dataclasses
 import enum
 import heapq
-from typing import Any, Dict, Iterator, List, Optional
+import json
+import math
+from random import Random
+from typing import Any, Dict, Iterator, List, Mapping, Optional, Sequence, Tuple
 
 
 class EventKind(enum.Enum):
@@ -29,6 +33,8 @@ class EventKind(enum.Enum):
     DROPOUT = "dropout"          # client failed mid-round (injected fault)
     RETRY = "retry"              # re-dispatch after a dropout
     MODEL_UPDATE = "model_update"  # aggregation produced a new global version
+    DEFERRED = "deferred"        # dispatch parked until the client's next arrival
+    INTERRUPT = "interrupt"      # client departed mid round trip (availability)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -101,3 +107,215 @@ class EventLoop:
     def drain(self) -> Iterator[Event]:
         while self._heap:
             yield self.pop()
+
+
+# ---------------------------------------------------------------------------
+# Client availability: arrival/departure schedules
+# ---------------------------------------------------------------------------
+
+class AvailabilityTrace:
+    """Per-client online windows (arrival/departure schedule).
+
+    ``intervals`` maps a client name to half-open ``[start, end)`` windows
+    in simulated seconds during which the client is reachable; ``end`` may
+    be ``inf`` for an open-ended final window. Clients absent from the
+    mapping are **always online** — an empty trace is the idealized fleet.
+
+    This replaces Bernoulli-only dropout with the trace-driven churn of
+    real cross-device fleets: the scheduler defers dispatches to offline
+    clients until their next arrival, and a departure mid round trip
+    interrupts the trip (the task is re-dispatched on return). Traces are
+    plain data — load them from a file (:meth:`from_file`) or synthesize
+    them (:func:`periodic_availability`, :func:`random_availability`).
+    """
+
+    def __init__(self, intervals: Mapping[str, Sequence[Tuple[float, float]]]) -> None:
+        self._starts: Dict[str, List[float]] = {}
+        self._ends: Dict[str, List[float]] = {}
+        for client, wins in intervals.items():
+            merged = _merge_windows(wins)
+            self._starts[client] = [s for s, _ in merged]
+            self._ends[client] = [e for _, e in merged]
+
+    # -- queries -----------------------------------------------------------
+    def _window_index(self, client: str, t: float) -> int:
+        """Index of the last window starting at or before ``t`` (-1: none)."""
+        return bisect.bisect_right(self._starts[client], t) - 1
+
+    def is_online(self, client: str, t: float) -> bool:
+        if client not in self._starts:
+            return True
+        i = self._window_index(client, t)
+        return i >= 0 and t < self._ends[client][i]
+
+    def next_arrival(self, client: str, t: float) -> float:
+        """Earliest time >= ``t`` at which ``client`` is online (``t`` itself
+        if already online; ``inf`` if the client never returns)."""
+        if self.is_online(client, t):
+            return t
+        starts = self._starts[client]
+        i = bisect.bisect_left(starts, t)
+        return starts[i] if i < len(starts) else math.inf
+
+    def online_until(self, client: str, t: float) -> float:
+        """End of the online window containing ``t`` (``t`` if offline,
+        ``inf`` if the client is always online / in an open-ended window)."""
+        if client not in self._starts:
+            return math.inf
+        i = self._window_index(client, t)
+        if i < 0 or t >= self._ends[client][i]:
+            return t
+        return self._ends[client][i]
+
+    def clients(self) -> List[str]:
+        return list(self._starts)
+
+    def windows(self, client: str) -> List[Tuple[float, float]]:
+        if client not in self._starts:
+            return [(0.0, math.inf)]
+        return list(zip(self._starts[client], self._ends[client]))
+
+    # -- (de)serialization -------------------------------------------------
+    @classmethod
+    def from_file(cls, path: str) -> "AvailabilityTrace":
+        """Load a trace: JSON ``{"client": [[start, end], ...]}`` or CSV
+        lines ``client,start,end`` (``end`` may be ``inf``); ``#`` comments
+        and blank lines are skipped in CSV."""
+        with open(path) as fh:
+            text = fh.read()
+        if text.lstrip().startswith("{"):
+            raw = json.loads(text)
+            return cls({c: [(float(s), float(e)) for s, e in wins] for c, wins in raw.items()})
+        intervals: Dict[str, List[Tuple[float, float]]] = {}
+        for line in text.splitlines():
+            line = line.strip()
+            if not line or line.startswith("#"):
+                continue
+            client, start, end = (f.strip() for f in line.split(","))
+            intervals.setdefault(client, []).append((float(start), float(end)))
+        return cls(intervals)
+
+    def to_file(self, path: str) -> None:
+        payload = {
+            c: [[s, "inf" if math.isinf(e) else e] for s, e in self.windows(c)]
+            for c in self._starts
+        }
+        with open(path, "w") as fh:
+            json.dump(payload, fh, indent=1)
+
+
+def _merge_windows(wins: Sequence[Tuple[float, float]]) -> List[Tuple[float, float]]:
+    """Sort, validate, and merge overlapping/adjacent online windows."""
+    out: List[Tuple[float, float]] = []
+    for start, end in sorted((float(s), float(e)) for s, e in wins):
+        if end <= start:
+            raise ValueError(f"empty availability window [{start}, {end})")
+        if out and start <= out[-1][1]:
+            out[-1] = (out[-1][0], max(out[-1][1], end))
+        else:
+            out.append((start, end))
+    return out
+
+
+def periodic_availability(
+    clients: Sequence[str],
+    period_s: float,
+    horizon_s: float,
+    duty_cycle: float = 0.5,
+    stagger: bool = True,
+) -> AvailabilityTrace:
+    """Diurnal-style availability: each client is online for the first
+    ``duty_cycle`` fraction of every ``period_s`` window, phase-shifted
+    per client when ``stagger`` so the fleet never goes dark at once.
+    After ``horizon_s`` every client comes (and stays) online, so jobs
+    always terminate."""
+    if not 0.0 < duty_cycle <= 1.0:
+        raise ValueError("duty_cycle must be in (0, 1]")
+    if not math.isfinite(horizon_s) or horizon_s <= 0:
+        raise ValueError("horizon_s must be finite and positive")
+    intervals: Dict[str, List[Tuple[float, float]]] = {}
+    for i, client in enumerate(clients):
+        offset = (i / max(1, len(clients))) * period_s if stagger else 0.0
+        wins: List[Tuple[float, float]] = []
+        # the tail of the previous (phase-shifted) on-window may cover t=0
+        head_end = offset - (1.0 - duty_cycle) * period_s
+        if offset > 0.0 and head_end > 0.0:
+            wins.append((0.0, min(head_end, horizon_s)))
+        start = offset
+        while start < horizon_s:
+            wins.append((start, min(start + duty_cycle * period_s, horizon_s)))
+            start += period_s
+        wins.append((horizon_s, math.inf))
+        intervals[client] = wins
+    return AvailabilityTrace(intervals)
+
+
+def availability_from_spec(spec: Mapping, clients: Sequence[str]) -> AvailabilityTrace:
+    """Build an AvailabilityTrace from a declarative job-spec dict.
+
+    Shapes (``kind`` selects the source)::
+
+        {"kind": "file", "path": "traces/fleet.json"}
+        {"kind": "windows", "windows": {"site-0": [[0, 10], [20, "inf"]]}}
+        {"kind": "periodic", "period_s": 60, "duty_cycle": 0.5,
+         "horizon_s": 600, "stagger": true}
+        {"kind": "random", "mean_online_s": 120, "mean_offline_s": 60,
+         "horizon_s": 600, "seed": 0}
+    """
+    spec = dict(spec)
+    kind = spec.get("kind", "windows" if "windows" in spec else None)
+    if kind == "file":
+        return AvailabilityTrace.from_file(spec["path"])
+    if kind == "windows":
+        return AvailabilityTrace(
+            {c: [(float(s), float(e)) for s, e in wins]
+             for c, wins in spec["windows"].items()}
+        )
+    if kind == "periodic":
+        return periodic_availability(
+            clients,
+            period_s=float(spec["period_s"]),
+            horizon_s=float(spec["horizon_s"]),
+            duty_cycle=float(spec.get("duty_cycle", 0.5)),
+            stagger=bool(spec.get("stagger", True)),
+        )
+    if kind == "random":
+        return random_availability(
+            clients,
+            mean_online_s=float(spec["mean_online_s"]),
+            mean_offline_s=float(spec["mean_offline_s"]),
+            horizon_s=float(spec["horizon_s"]),
+            seed=int(spec.get("seed", 0)),
+        )
+    raise ValueError(f"unknown availability spec kind: {kind!r}")
+
+
+def random_availability(
+    clients: Sequence[str],
+    mean_online_s: float,
+    mean_offline_s: float,
+    horizon_s: float,
+    seed: int = 0,
+) -> AvailabilityTrace:
+    """Churn model: each client alternates exponentially-distributed
+    online/offline stretches (its own seeded stream, so traces are
+    deterministic and independent across clients). After ``horizon_s``
+    everyone stays online so the federation can always finish."""
+    if mean_online_s <= 0 or mean_offline_s <= 0:
+        raise ValueError("mean_online_s and mean_offline_s must be positive "
+                         "(for an always-online fleet, omit the trace)")
+    if not math.isfinite(horizon_s) or horizon_s <= 0:
+        raise ValueError("horizon_s must be finite and positive")
+    intervals: Dict[str, List[Tuple[float, float]]] = {}
+    for client in clients:
+        rng = Random(f"avail:{seed}:{client}")
+        wins: List[Tuple[float, float]] = []
+        duty = mean_online_s / (mean_online_s + mean_offline_s)
+        t = 0.0 if rng.random() < duty else rng.expovariate(1.0 / mean_offline_s)
+        while t < horizon_s:
+            end = t + rng.expovariate(1.0 / mean_online_s)
+            wins.append((t, min(end, horizon_s)))
+            t = end + rng.expovariate(1.0 / mean_offline_s)
+        wins.append((horizon_s, math.inf))
+        intervals[client] = wins
+    return AvailabilityTrace(intervals)

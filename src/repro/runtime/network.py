@@ -85,6 +85,10 @@ class NetworkModel:
     def link(self, client: str) -> LinkProfile:
         return self.profiles.get(client, self.default)
 
+    def bandwidth_bps(self, client: str) -> float:
+        """The client's link rate in bits/s (AdaptiveQuantizeFilter's unit)."""
+        return self.link(client).bandwidth_mbps * 1e6
+
     def _jittered(self, client: str, base: float, jitter: float) -> float:
         if jitter <= 0.0:
             return base
@@ -130,3 +134,55 @@ def heterogeneous_network(
         for c in clients
     }
     return NetworkModel(profiles, compute=compute, seed=seed)
+
+
+def _link_from_spec(value) -> LinkProfile:
+    """A named WAN class ("fiber") or an inline profile dict."""
+    if isinstance(value, str):
+        return PROFILES[value]
+    return LinkProfile(
+        name=value.get("name", "custom"),
+        bandwidth_mbps=float(value["bandwidth_mbps"]),
+        latency_ms=float(value.get("latency_ms", 10.0)),
+        jitter=float(value.get("jitter", 0.0)),
+    )
+
+
+def network_from_spec(spec: Mapping, clients: Sequence[str]) -> NetworkModel:
+    """Build a NetworkModel from a declarative job-spec dict.
+
+    Two shapes::
+
+        {"kind": "hetero", "tiers": ["fiber", "3g"], "compute_base_s": 1.0,
+         "compute_spread": 4.0, "seed": 0}
+
+        {"default": "wifi",
+         "profiles": {"site-0": "fiber",
+                      "site-1": {"bandwidth_mbps": 5, "latency_ms": 80}},
+         "compute": {"site-0": 0.5}, "compute_base_s": 1.0,
+         "compute_jitter": 0.0, "seed": 0}
+
+    Link values are canonical :data:`PROFILES` names or inline dicts.
+    """
+    spec = dict(spec)
+    seed = int(spec.get("seed", 0))
+    if spec.get("kind") == "hetero":
+        kwargs = {
+            k: spec[k]
+            for k in ("tiers", "compute_base_s", "compute_spread")
+            if k in spec
+        }
+        if "tiers" in kwargs:
+            kwargs["tiers"] = tuple(kwargs["tiers"])
+        return heterogeneous_network(clients, seed=seed, **kwargs)
+    jitter = float(spec.get("compute_jitter", 0.0))
+    return NetworkModel(
+        profiles={c: _link_from_spec(v) for c, v in spec.get("profiles", {}).items()},
+        default=_link_from_spec(spec.get("default", "wifi")),
+        compute={
+            c: ComputeProfile(float(v), jitter=jitter)
+            for c, v in spec.get("compute", {}).items()
+        },
+        default_compute=ComputeProfile(float(spec.get("compute_base_s", 1.0)), jitter=jitter),
+        seed=seed,
+    )

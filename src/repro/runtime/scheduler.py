@@ -31,10 +31,19 @@ failed to the policy (`SyncPolicy` renormalizes over survivors,
 `FedBuffPolicy` simply loses the contribution). Chunk-level faults
 compose underneath via :class:`~repro.core.resilience.LossyDriver` +
 ``ReliableTransfer`` in the wire, invisible up here.
+
+Client availability: an optional :class:`AvailabilityTrace` gives each
+client arrival/departure windows. A dispatch to an offline client is
+**deferred** (parked as a ``DEFERRED`` event at the client's next
+arrival, not launched); a departure mid round trip **interrupts** the
+trip at the departure instant and re-dispatches on return. Unlike
+dropouts, availability churn is scheduled — it never consumes retry
+budget. A client that never returns is reported failed to the policy.
 """
 from __future__ import annotations
 
 import dataclasses
+import math
 from concurrent.futures import Future, ThreadPoolExecutor
 from random import Random
 from typing import Any, Dict, List, Optional, Sequence, Tuple
@@ -42,7 +51,7 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 from repro.core.messages import Message
 from repro.fl.controller import ClientProxy
 from repro.runtime.async_agg import AggregationPolicy, Dispatch
-from repro.runtime.events import Event, EventKind, EventLoop
+from repro.runtime.events import AvailabilityTrace, Event, EventKind, EventLoop
 from repro.runtime.network import NetworkModel
 
 
@@ -65,6 +74,8 @@ class RuntimeStats:
     retries: int = 0
     failed_clients: int = 0
     model_updates: int = 0
+    deferrals: int = 0      # dispatches parked until a client's arrival
+    interruptions: int = 0  # round trips cut short by a client departure
     sim_time_s: float = 0.0
 
 
@@ -77,6 +88,7 @@ class AsyncFLScheduler:
         policy: AggregationPolicy,
         network: Optional[NetworkModel] = None,
         config: Optional[RuntimeConfig] = None,
+        availability: Optional[AvailabilityTrace] = None,
     ) -> None:
         if not proxies:
             raise ValueError("need at least one client proxy")
@@ -86,6 +98,7 @@ class AsyncFLScheduler:
         self.policy = policy
         self.config = config or RuntimeConfig()
         self.network = network or NetworkModel(seed=self.config.seed)
+        self.availability = availability
         self.loop = EventLoop()
         self.stats = RuntimeStats()
         self._drop_rng = Random(f"dropout:{self.config.seed}")
@@ -97,7 +110,23 @@ class AsyncFLScheduler:
         proxy = self.proxies[dispatch.client]
         return proxy.submit_task(dispatch.task)
 
+    def _fail_client(self, dispatch: Dispatch, pool: ThreadPoolExecutor) -> None:
+        self.stats.failed_clients += 1
+        for d in self.policy.on_client_failed(dispatch):
+            self._launch(d, pool)
+
     def _launch(self, dispatch: Dispatch, pool: ThreadPoolExecutor) -> None:
+        if self.availability is not None and not self.availability.is_online(
+            dispatch.client, self.loop.now
+        ):
+            arrival = self.availability.next_arrival(dispatch.client, self.loop.now)
+            if math.isinf(arrival):  # departed for good: permanent failure
+                self._fail_client(dispatch, pool)
+                return
+            self.stats.deferrals += 1
+            self.loop.schedule_at(arrival, EventKind.DEFERRED, dispatch.client,
+                                  dispatch=dispatch)
+            return
         self.stats.dispatches += 1
         self.loop.schedule(0.0, EventKind.DISPATCH, dispatch.client,
                            version=dispatch.version, attempt=dispatch.attempt)
@@ -106,10 +135,14 @@ class AsyncFLScheduler:
     # -- folding real results into simulated time ---------------------------
     def _earliest_possible(self, dispatch: Dispatch, t0: float) -> float:
         """Hard lower bound on the simulated time of any event this
-        in-flight round trip can produce (its ARRIVAL, or a DROPOUT that
-        strikes partway through the minimum-duration trip)."""
+        in-flight round trip can produce (its ARRIVAL, a DROPOUT that
+        strikes partway through the minimum-duration trip, or an
+        INTERRUPT at the client's scheduled departure)."""
         lat, comp = self.network.floor_seconds(dispatch.client)
-        return t0 + min(lat, self.config.drop_after_frac * (2.0 * lat + comp))
+        bound = t0 + min(lat, self.config.drop_after_frac * (2.0 * lat + comp))
+        if self.availability is not None:
+            bound = min(bound, self.availability.online_until(dispatch.client, t0))
+        return bound
 
     def _must_settle(self) -> bool:
         """True when an in-flight trip could still beat the next queued
@@ -144,14 +177,23 @@ class AsyncFLScheduler:
             t_compute = self.network.compute_seconds(dispatch.client)
             t_up = self.network.transfer_seconds(dispatch.client, up)
             total = t_down + t_compute + t_up
+            departs = (
+                self.availability.online_until(dispatch.client, t0)
+                if self.availability is not None else math.inf
+            )
             dropped = self._drop_rng.random() < self.config.dropout_prob
-            if dropped:
-                self.loop.schedule_at(
-                    t0 + self.config.drop_after_frac * total,
-                    EventKind.DROPOUT,
-                    dispatch.client,
-                    dispatch=dispatch,
-                )
+            drop_t = t0 + self.config.drop_after_frac * total
+            if dropped and drop_t < departs:
+                self.loop.schedule_at(drop_t, EventKind.DROPOUT, dispatch.client,
+                                      dispatch=dispatch)
+            elif t0 + total > departs:
+                # client leaves mid round trip: the trip dies at the
+                # departure instant and re-dispatches on the next arrival
+                if t0 + t_down < departs:
+                    self.loop.schedule_at(t0 + t_down, EventKind.ARRIVAL, dispatch.client,
+                                          version=dispatch.version)
+                self.loop.schedule_at(departs, EventKind.INTERRUPT, dispatch.client,
+                                      dispatch=dispatch)
             else:
                 self.loop.schedule_at(t0 + t_down, EventKind.ARRIVAL, dispatch.client,
                                       version=dispatch.version)
@@ -188,9 +230,15 @@ class AsyncFLScheduler:
                                    attempt=retry.attempt)
                 self._launch(retry, pool)
             else:
-                self.stats.failed_clients += 1
-                for d in self.policy.on_client_failed(dispatch):
-                    self._launch(d, pool)
+                self._fail_client(dispatch, pool)
+        elif event.kind is EventKind.DEFERRED:
+            # the client just arrived: launch the parked dispatch for real
+            self._launch(event.data["dispatch"], pool)
+        elif event.kind is EventKind.INTERRUPT:
+            # departure killed the trip; re-dispatch (defers to next
+            # arrival). Availability churn never consumes retry budget.
+            self.stats.interruptions += 1
+            self._launch(event.data["dispatch"], pool)
         # DISPATCH / ARRIVAL / RETRY / MODEL_UPDATE are timeline markers
 
     # -- main loop -----------------------------------------------------------

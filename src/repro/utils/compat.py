@@ -1,0 +1,47 @@
+"""Version-compatibility shims for the jax API surface we depend on.
+
+The repo targets the modern jax API (``jax.shard_map`` with ``check_vma``,
+``jax.make_mesh(..., axis_types=...)``, ``pallas.tpu.CompilerParams``) but
+must also run on the 0.4.x toolchain baked into the CI image, where those
+spell ``jax.experimental.shard_map.shard_map(check_rep=...)``,
+``jax.make_mesh`` without axis types, and ``TPUCompilerParams``. Every
+call site goes through these helpers instead of feature-testing inline.
+"""
+from __future__ import annotations
+
+import inspect
+from typing import Any, Sequence
+
+import jax
+
+
+def make_mesh(axis_shapes: Sequence[int], axis_names: Sequence[str]) -> Any:
+    """``jax.make_mesh`` with Auto axis types where supported."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        try:
+            return jax.make_mesh(
+                tuple(axis_shapes), tuple(axis_names),
+                axis_types=(axis_type.Auto,) * len(axis_names),
+            )
+        except TypeError:  # make_mesh predates axis_types
+            pass
+    return jax.make_mesh(tuple(axis_shapes), tuple(axis_names))
+
+
+def shard_map(f: Any, mesh: Any, in_specs: Any, out_specs: Any, check: bool = True) -> Any:
+    """``jax.shard_map``; ``check`` maps to check_vma / check_rep."""
+    sm = getattr(jax, "shard_map", None)
+    if sm is None:
+        from jax.experimental.shard_map import shard_map as sm
+    params = inspect.signature(sm).parameters
+    flag = "check_vma" if "check_vma" in params else "check_rep"
+    return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **{flag: check})
+
+
+def pallas_tpu_compiler_params(**kwargs: Any) -> Any:
+    """``pltpu.CompilerParams`` (renamed from ``TPUCompilerParams``)."""
+    from jax.experimental.pallas import tpu as pltpu
+
+    cls = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+    return cls(**kwargs)

@@ -59,10 +59,10 @@ def test_error_feedback_residual_bounded():
     "bandwidth,budget,expect",
     [
         (1e12, 1.0, "fp32"),       # infinite link -> full precision
-        (4e6, 1.0, "fp16"),        # 4 MB/s, 1 s budget, 2 MB fp16 payload fits
-        (1.2e6, 1.0, "blockwise8"),  # 1.05 MB int8 payload fits in 1 s
-        (5e5, 1.0, "nf4"),
-        (1e3, 1.0, "nf4"),         # hopeless link -> cheapest format
+        (3.2e7, 1.0, "fp16"),      # 32 Mbit/s, 1 s budget, 16.8 Mbit fp16 fits
+        (9.6e6, 1.0, "blockwise8"),  # 8.4 Mbit int8 payload fits in 1 s
+        (4e6, 1.0, "nf4"),
+        (8e3, 1.0, "nf4"),         # hopeless link -> cheapest format
     ],
 )
 def test_adaptive_precision_ladder(bandwidth, budget, expect):
@@ -79,7 +79,6 @@ def test_selective_quantize_filter_mixed_precision():
     """Norms stay fp16, embeddings int8, the bulk nf4 — and dequantize
     recovers everything (paper §V per-layer sensitivity policy)."""
     from repro.core.filters import SelectiveQuantizeFilter
-    from repro.core.quantization import QuantizedTensor
 
     rng = np.random.default_rng(3)
     payload = {

@@ -3,7 +3,6 @@
 FedAvg (incremental + fused-quantized), and end-to-end federated
 convergence on a toy task — the paper's Fig. 4/5 claims in miniature.
 """
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -12,7 +11,6 @@ from repro.core.filters import (
     DequantizeFilter,
     DPGaussianNoiseFilter,
     FilterChain,
-    FilterPoint,
     QuantizeFilter,
     no_filters,
     two_way_quantization,

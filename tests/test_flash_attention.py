@@ -2,7 +2,6 @@
 
 sweeps in interpret mode (the compiled path is TPU-only).
 """
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

@@ -1,0 +1,422 @@
+"""Heterogeneous-client runtime: FedAsync per-update mixing (hand-checked
+math), TiFL-style tiered selection (deterministic under a seed),
+availability traces (deferral + mid-trip interrupts), link-aware adaptive
+quantization, and the declarative "runtime" job-spec surface.
+"""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.filters import (
+    AdaptiveQuantizeFilter,
+    DequantizeFilter,
+    FilterChain,
+    FilterPoint,
+    no_filters,
+)
+from repro.core.messages import Message, MessageKind
+from repro.fl import FedAvgAggregator, FLSimulator, SimulationConfig, TrainExecutor
+from repro.runtime import (
+    AvailabilityTrace,
+    EventKind,
+    FedAsyncPolicy,
+    NetworkModel,
+    ComputeProfile,
+    LinkProfile,
+    RuntimeConfig,
+    TieredPolicy,
+    availability_from_spec,
+    heterogeneous_network,
+    network_from_spec,
+    periodic_availability,
+    polynomial_staleness,
+    random_availability,
+)
+
+
+def _result(payload):
+    return Message(MessageKind.TASK_RESULT, dict(payload), headers={"num_samples": 1})
+
+
+# ---------------------------------------------------------------------------
+# FedAsync: per-update mixing, hand-computed
+# ---------------------------------------------------------------------------
+
+def test_fedasync_staleness_decay_hand_computed():
+    """w <- (1-a_t) w + a_t w_client with a_t = 0.5 * (1+s)^-1, traced by
+    hand through three updates of increasing staleness."""
+    policy = FedAsyncPolicy(
+        total_tasks=3, mixing_rate=0.5, staleness_weight=polynomial_staleness(alpha=1.0)
+    )
+    d_a, d_b = policy.begin({"w": np.zeros(2, np.float32)}, ["a", "b"])
+
+    # update 1: staleness 0 -> a = 0.5;  w = 0.5*[1, 1] = [0.5, 0.5]
+    (d_a2,) = policy.on_result(d_a, _result({"w": np.array([1.0, 1.0], np.float32)}))
+    np.testing.assert_allclose(policy.finish()["w"], [0.5, 0.5], rtol=1e-6)
+    assert policy.model_version == 1 and d_a2.version == 1
+
+    # update 2: dispatched at v0, now v1 -> staleness 1 -> a = 0.25
+    #   w = 0.75*[0.5, 0.5] + 0.25*[1, -1] = [0.625, 0.125]
+    out = policy.on_result(d_b, _result({"w": np.array([1.0, -1.0], np.float32)}))
+    assert out == []  # task budget exhausted: no follow-up dispatch
+    np.testing.assert_allclose(policy.finish()["w"], [0.625, 0.125], rtol=1e-6)
+
+    # update 3: dispatched at v1, now v2 -> staleness 1 -> a = 0.25
+    #   w = 0.75*[0.625, 0.125] + 0.25*[-1, 1] = [0.21875, 0.34375]
+    policy.on_result(d_a2, _result({"w": np.array([-1.0, 1.0], np.float32)}))
+    np.testing.assert_allclose(policy.finish()["w"], [0.21875, 0.34375], rtol=1e-6)
+    assert policy.complete
+    assert policy.staleness_seen == [0, 1, 1]
+    assert policy.model_version == 3
+
+
+def test_fedasync_mixing_rate_validated():
+    with pytest.raises(ValueError):
+        FedAsyncPolicy(total_tasks=4, mixing_rate=0.0)
+    with pytest.raises(ValueError):
+        FedAsyncPolicy(total_tasks=4, mixing_rate=1.5)
+
+
+# ---------------------------------------------------------------------------
+# shared toy federation helpers
+# ---------------------------------------------------------------------------
+
+W_TRUE = np.arange(1, 9, dtype=np.float32) / 8.0
+
+
+def _make_exec(name, seed, n=128, lr=0.3, steps=3):
+    rng = np.random.default_rng(seed)
+    X = rng.standard_normal((n, W_TRUE.size)).astype(np.float32)
+    y = X @ W_TRUE
+
+    def train_fn(params, rnd):
+        w = np.asarray(params["w"]).copy()
+        for _ in range(steps):
+            w = w - lr * (X.T @ (X @ w - y) / n)
+        return {"w": w}, n, {"loss": float(np.mean((X @ w - y) ** 2))}
+
+    return TrainExecutor(name, train_fn)
+
+
+def _identity_exec(name):
+    return TrainExecutor(
+        name, lambda params, rnd: ({k: np.asarray(v) for k, v in params.items()}, 1, {})
+    )
+
+
+NAMES = [f"site-{i}" for i in range(4)]
+
+PROFILE_FIBER = LinkProfile("fiber", bandwidth_mbps=1000.0, latency_ms=2.0)
+PROFILE_3G = LinkProfile("3g", bandwidth_mbps=2.0, latency_ms=100.0)
+
+
+def _sim(execs=None, rounds=3, **kwargs):
+    return FLSimulator(
+        execs or [_make_exec(n, i) for i, n in enumerate(NAMES)],
+        FedAvgAggregator(),
+        SimulationConfig(num_rounds=rounds, chunk_size=2048),
+        **kwargs,
+    )
+
+
+def test_fedasync_converges_on_toy_problem():
+    sim = _sim(
+        runtime=RuntimeConfig(seed=0, max_concurrency=4),
+        policy=FedAsyncPolicy(total_tasks=32, mixing_rate=0.5),
+        network=heterogeneous_network(NAMES, seed=1),
+    )
+    out = sim.run({"w": np.zeros(8, np.float32)})
+    assert float(np.max(np.abs(np.asarray(out["w"]) - W_TRUE))) < 0.1
+    # one server step (and model version) per completed update
+    assert sim.scheduler.stats.model_updates == 32
+
+
+# ---------------------------------------------------------------------------
+# tiered selection
+# ---------------------------------------------------------------------------
+
+def test_tiered_buckets_by_profiled_latency():
+    latency = {"site-0": 4.0, "site-1": 1.0, "site-2": 3.0, "site-3": 2.0}
+    policy = TieredPolicy(
+        FedAvgAggregator(), num_rounds=2, num_tiers=2,
+        latency_fn=latency.__getitem__, seed=0,
+    )
+    policy.begin({"w": np.zeros(8, np.float32)}, NAMES)
+    assert policy.tiers == [["site-1", "site-3"], ["site-2", "site-0"]]
+    assert policy.tier_of["site-1"] == 0 and policy.tier_of["site-0"] == 1
+
+
+def test_tiered_selection_deterministic_under_seed():
+    def run_once(seed):
+        policy = TieredPolicy(
+            FedAvgAggregator(), num_rounds=8, num_tiers=2,
+            network=heterogeneous_network(NAMES, seed=1), seed=seed,
+        )
+        sim = _sim(rounds=8, runtime=RuntimeConfig(seed=0, max_concurrency=4),
+                   policy=policy, network=heterogeneous_network(NAMES, seed=1))
+        out = sim.run({"w": np.zeros(8, np.float32)})
+        return policy.selected_tiers, np.asarray(out["w"])
+
+    tiers1, w1 = run_once(seed=1)
+    tiers2, w2 = run_once(seed=1)
+    assert tiers1 == tiers2 and len(tiers1) == 8
+    np.testing.assert_array_equal(w1, w2)
+    assert len(set(tiers1)) > 1  # both tiers actually serve rounds
+    tiers3, _ = run_once(seed=2)
+    assert tiers3 != tiers1  # a different seed draws a different schedule
+
+
+def test_tiered_rounds_only_touch_one_tier():
+    seen_rounds = []
+    policy = TieredPolicy(
+        FedAvgAggregator(), num_rounds=6, num_tiers=2,
+        latency_fn={"site-0": 1, "site-1": 2, "site-2": 3, "site-3": 4}.__getitem__,
+        seed=3,
+        on_round_end=lambda rnd, w, results: seen_rounds.append(
+            sorted(r.headers["client"] for r in results)
+        ),
+    )
+    sim = _sim(rounds=6, runtime=RuntimeConfig(seed=0, max_concurrency=4), policy=policy)
+    sim.run({"w": np.zeros(8, np.float32)})
+    fast, slow = ["site-0", "site-1"], ["site-2", "site-3"]
+    assert seen_rounds and all(r in (fast, slow) for r in seen_rounds)
+
+
+def test_tiered_credits_bound_tier_usage():
+    policy = TieredPolicy(
+        FedAvgAggregator(), num_rounds=4, num_tiers=2, credits=2,
+        latency_fn={"site-0": 1, "site-1": 2, "site-2": 3, "site-3": 4}.__getitem__,
+        seed=0,
+    )
+    sim = _sim(rounds=4, runtime=RuntimeConfig(seed=0, max_concurrency=4), policy=policy)
+    sim.run({"w": np.zeros(8, np.float32)})
+    # 2 credits per tier over 4 rounds: each tier serves exactly twice
+    assert sorted(policy.selected_tiers) == [0, 0, 1, 1]
+
+
+# ---------------------------------------------------------------------------
+# availability traces
+# ---------------------------------------------------------------------------
+
+def test_availability_trace_semantics():
+    trace = AvailabilityTrace({"a": [(1.0, 3.0), (5.0, math.inf)], "b": [(0.0, 2.0)]})
+    assert not trace.is_online("a", 0.5)
+    assert trace.is_online("a", 1.0) and trace.is_online("a", 2.9)
+    assert not trace.is_online("a", 3.0)  # half-open [start, end)
+    assert trace.is_online("a", 100.0)
+    assert trace.next_arrival("a", 0.0) == 1.0
+    assert trace.next_arrival("a", 2.0) == 2.0  # already online
+    assert trace.next_arrival("a", 3.5) == 5.0
+    assert trace.online_until("a", 2.0) == 3.0
+    assert trace.online_until("a", 6.0) == math.inf
+    assert trace.online_until("a", 4.0) == 4.0  # offline: no window
+    assert trace.next_arrival("b", 2.0) == math.inf  # gone for good
+    assert trace.is_online("unlisted", 42.0)  # absent clients always online
+    assert trace.online_until("unlisted", 42.0) == math.inf
+
+
+def test_availability_trace_merges_overlaps_and_rejects_empty():
+    trace = AvailabilityTrace({"a": [(0.0, 2.0), (1.0, 4.0), (4.0, 5.0)]})
+    assert trace.windows("a") == [(0.0, 5.0)]
+    with pytest.raises(ValueError):
+        AvailabilityTrace({"a": [(3.0, 3.0)]})
+
+
+def test_availability_trace_file_roundtrip(tmp_path):
+    trace = AvailabilityTrace({"a": [(0.0, 2.0), (5.0, math.inf)], "b": [(1.0, 9.0)]})
+    path = str(tmp_path / "trace.json")
+    trace.to_file(path)
+    loaded = AvailabilityTrace.from_file(path)
+    for c in ("a", "b"):
+        assert loaded.windows(c) == trace.windows(c)
+    # CSV flavor
+    csv = tmp_path / "trace.csv"
+    csv.write_text("# client,start,end\na, 0, 2\na, 5, inf\nb, 1, 9\n")
+    loaded_csv = AvailabilityTrace.from_file(str(csv))
+    for c in ("a", "b"):
+        assert loaded_csv.windows(c) == trace.windows(c)
+
+
+def test_availability_generators_deterministic_and_terminating():
+    r1 = random_availability(NAMES, 10.0, 5.0, horizon_s=100.0, seed=7)
+    r2 = random_availability(NAMES, 10.0, 5.0, horizon_s=100.0, seed=7)
+    for c in NAMES:
+        assert r1.windows(c) == r2.windows(c)
+        assert r1.is_online(c, 1e9)  # open-ended tail: jobs can always finish
+    p = periodic_availability(NAMES, period_s=10.0, horizon_s=50.0, duty_cycle=0.5)
+    for c in NAMES:
+        assert p.is_online(c, 1e9)
+    # staggered duty cycles: at any instant someone is online
+    assert any(p.is_online(c, 7.0) for c in NAMES)
+
+
+def test_dispatch_to_offline_client_waits_for_arrival():
+    """The scheduler parks the dispatch and launches it at the arrival."""
+    avail = AvailabilityTrace({"site-0": [(50.0, math.inf)]})
+    sim = _sim(rounds=1, runtime=RuntimeConfig(seed=0, max_concurrency=4),
+               availability=avail)
+    out = sim.run({"w": np.zeros(8, np.float32)})
+    assert np.all(np.isfinite(np.asarray(out["w"])))
+    assert sim.scheduler.stats.deferrals == 1
+    events = sim.scheduler.timeline
+    deferred = [e for e in events if e.kind is EventKind.DEFERRED]
+    assert [e.client for e in deferred] == ["site-0"] and deferred[0].time == 50.0
+    launch = [e for e in events if e.kind is EventKind.DISPATCH and e.client == "site-0"]
+    assert launch[0].time == 50.0  # not before the arrival
+    # everyone else dispatched at t=0; the round barrier waited for site-0
+    assert sim.sim_time_s > 50.0
+
+
+def test_departure_mid_trip_interrupts_and_resumes():
+    # compute takes ~1 s but the only window before t=100 is 0.3 s long
+    avail = AvailabilityTrace({"site-0": [(0.0, 0.3), (100.0, math.inf)]})
+    net = NetworkModel(default=LinkProfile("fast", bandwidth_mbps=1000.0, latency_ms=1.0),
+                       default_compute=ComputeProfile(base_seconds=1.0), seed=0)
+    sim = _sim(execs=[_make_exec("site-0", 0)], rounds=1,
+               runtime=RuntimeConfig(seed=0), availability=avail, network=net)
+    out = sim.run({"w": np.zeros(8, np.float32)})
+    s = sim.scheduler.stats
+    assert s.interruptions == 1 and s.deferrals == 1
+    assert s.completions == 1 and s.failed_clients == 0
+    assert sim.sim_time_s > 100.0
+    assert np.all(np.isfinite(np.asarray(out["w"])))
+    interrupts = [e for e in sim.scheduler.timeline if e.kind is EventKind.INTERRUPT]
+    assert interrupts[0].time == pytest.approx(0.3)
+
+
+def test_client_gone_for_good_reports_failure():
+    avail = AvailabilityTrace({"site-3": [(0.0, 0.0 + 1e-9)]})  # never really there
+    sim = _sim(rounds=1, runtime=RuntimeConfig(seed=0, max_concurrency=4),
+               availability=avail)
+    out = sim.run({"w": np.zeros(8, np.float32)})
+    assert sim.scheduler.stats.failed_clients == 1
+    assert np.all(np.isfinite(np.asarray(out["w"])))  # renormalized over survivors
+
+
+def test_availability_identical_seeds_identical_timeline():
+    def run_once():
+        sim = _sim(
+            runtime=RuntimeConfig(seed=3, max_concurrency=4, dropout_prob=0.15),
+            policy=FedAsyncPolicy(total_tasks=12),
+            network=heterogeneous_network(NAMES, seed=3),
+            availability=random_availability(NAMES, 20.0, 10.0, horizon_s=200.0, seed=3),
+        )
+        out = sim.run({"w": np.zeros(8, np.float32)})
+        return out, [(e.kind, e.client, e.time) for e in sim.scheduler.timeline]
+
+    out1, tl1 = run_once()
+    out2, tl2 = run_once()
+    np.testing.assert_array_equal(np.asarray(out1["w"]), np.asarray(out2["w"]))
+    assert tl1 == tl2
+
+
+# ---------------------------------------------------------------------------
+# link-aware adaptive quantization
+# ---------------------------------------------------------------------------
+
+def test_adaptive_filter_precision_tracks_link():
+    net = NetworkModel(profiles={
+        "site-fast": PROFILE_FIBER, "site-slow": PROFILE_3G,
+    }, seed=0)
+    filt = AdaptiveQuantizeFilter.from_network(net, budget_s=0.5)
+    payload = {"w": np.linspace(-1, 1, 1 << 16).astype(np.float32)}  # 2 Mbit fp32
+
+    def msg(client):
+        return Message(MessageKind.TASK_DATA, dict(payload), headers={"client": client})
+
+    filt.process(msg("site-fast"))
+    filt.process(msg("site-slow"))
+    fast, slow = filt.last_fmt_by_client["site-fast"], filt.last_fmt_by_client["site-slow"]
+    assert fast == "fp32"           # 2 Mbit / 1 Gbit/s ~ 2 ms
+    assert slow in ("blockwise8", "nf4")  # 2 Mbit / 2 Mbit/s won't fit at fp16
+    assert fast != slow
+
+
+def test_adaptive_filter_requires_some_bandwidth_source():
+    with pytest.raises(ValueError):
+        AdaptiveQuantizeFilter()
+
+
+def test_adaptive_from_network_rejects_unattributed_message():
+    """A link-only filter must not guess a bandwidth for messages that
+    carry no client header — that's a config error, not an nf4 fallback."""
+    net = NetworkModel(profiles={"site-fast": PROFILE_FIBER}, seed=0)
+    filt = AdaptiveQuantizeFilter.from_network(net)
+    with pytest.raises(ValueError, match="no 'client' header"):
+        filt.process(Message(MessageKind.TASK_DATA,
+                             {"w": np.zeros(8, np.float32)}, headers={}))
+
+
+def test_random_availability_validates_inputs():
+    with pytest.raises(ValueError):
+        random_availability(NAMES, 0.0, 5.0, horizon_s=10.0)
+    with pytest.raises(ValueError):
+        random_availability(NAMES, 5.0, -1.0, horizon_s=10.0)
+    with pytest.raises(ValueError):
+        random_availability(NAMES, 5.0, 5.0, horizon_s=math.inf)
+
+
+def test_adaptive_filter_in_federation_per_client_bits():
+    """End to end: the same federation round ships different precisions to
+    different clients, decided by the simulated link."""
+    names = ["site-fast", "site-slow"]
+    net = NetworkModel(profiles={"site-fast": PROFILE_FIBER, "site-slow": PROFILE_3G},
+                       default_compute=ComputeProfile(0.01), seed=0)
+    filt = AdaptiveQuantizeFilter.from_network(net, budget_s=0.5)
+    server = no_filters()
+    server[FilterPoint.TASK_DATA_OUT] = FilterChain([filt])
+    server[FilterPoint.TASK_RESULT_IN] = FilterChain([DequantizeFilter()])
+    client = no_filters()
+    client[FilterPoint.TASK_DATA_IN] = FilterChain([DequantizeFilter()])
+    sim = FLSimulator(
+        [_identity_exec(n) for n in names],
+        FedAvgAggregator(),
+        SimulationConfig(num_rounds=1),
+        server_filters=server,
+        client_filters=client,
+        runtime=RuntimeConfig(seed=0, max_concurrency=2),
+        network=net,
+    )
+    sim.run({"w": np.linspace(-1, 1, 1 << 16).astype(np.float32)})
+    assert filt.last_fmt_by_client["site-fast"] != filt.last_fmt_by_client["site-slow"]
+
+
+# ---------------------------------------------------------------------------
+# spec builders
+# ---------------------------------------------------------------------------
+
+def test_network_from_spec_shapes():
+    hetero = network_from_spec({"kind": "hetero", "tiers": ["fiber", "3g"]}, NAMES)
+    assert hetero.link("site-0").name == "fiber" and hetero.link("site-1").name == "3g"
+    explicit = network_from_spec(
+        {"default": "lte",
+         "profiles": {"site-0": "fiber",
+                      "site-1": {"bandwidth_mbps": 5.0, "latency_ms": 80.0}},
+         "compute": {"site-0": 0.25}, "compute_base_s": 2.0},
+        NAMES,
+    )
+    assert explicit.link("site-0").name == "fiber"
+    assert explicit.link("site-1").bandwidth_mbps == 5.0
+    assert explicit.link("site-2").name == "lte"
+    assert explicit.compute_seconds("site-0") == 0.25
+    assert explicit.compute_seconds("site-2") == 2.0
+
+
+def test_availability_from_spec_shapes(tmp_path):
+    windows = availability_from_spec(
+        {"kind": "windows", "windows": {"a": [[0, 1], [2, "inf"]]}}, NAMES)
+    assert windows.windows("a") == [(0.0, 1.0), (2.0, math.inf)]
+    periodic = availability_from_spec(
+        {"kind": "periodic", "period_s": 10, "horizon_s": 50}, NAMES)
+    assert periodic.is_online("site-0", 1e9)
+    rand = availability_from_spec(
+        {"kind": "random", "mean_online_s": 5, "mean_offline_s": 5,
+         "horizon_s": 50, "seed": 1}, NAMES)
+    assert rand.is_online("site-0", 1e9)
+    path = tmp_path / "t.json"
+    windows.to_file(str(path))
+    from_file = availability_from_spec({"kind": "file", "path": str(path)}, NAMES)
+    assert from_file.windows("a") == windows.windows("a")
+    with pytest.raises(ValueError):
+        availability_from_spec({"kind": "martian"}, NAMES)

@@ -27,7 +27,6 @@ from repro.kernels.quant_nf4 import (
     quantize_4bit_pallas,
 )
 from repro.kernels.fused_dequant_agg import dequant_accumulate8_pallas
-from repro.kernels import ops
 from repro.core import quantization as Q
 
 

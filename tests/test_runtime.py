@@ -15,7 +15,6 @@ from repro.runtime import (
     LinkProfile,
     NetworkModel,
     RuntimeConfig,
-    SyncPolicy,
     heterogeneous_network,
     polynomial_staleness,
 )

@@ -3,7 +3,6 @@
 streaming checkpoints, and the centralized training driver (loss must
 actually decrease on the learnable synthetic corpus).
 """
-import os
 
 import jax
 import jax.numpy as jnp
@@ -16,7 +15,7 @@ except ImportError:  # property tests skip; everything else still runs
     from hypothesis_stub import given, settings, st
 
 from repro.checkpoint import load_checkpoint, save_checkpoint
-from repro.checkpoint.streaming_ckpt import iter_checkpoint, load_checkpoint_streaming
+from repro.checkpoint.streaming_ckpt import load_checkpoint_streaming
 from repro.configs import get_smoke_config
 from repro.data import SyntheticLMDataset, dirichlet_partition, iid_partition
 from repro.launch.train import train_loop
