@@ -14,7 +14,7 @@ us_per_call = simulated microseconds per global model update.
 """
 from __future__ import annotations
 
-from typing import Iterator, List
+from collections.abc import Iterator
 
 import numpy as np
 
@@ -27,7 +27,7 @@ ROUNDS = 4                      # sync rounds; async gets the same task budget
 DIM = 32 * 1024                 # 128 KiB of fp32 weights per message
 
 
-def _executors(w_true: np.ndarray) -> List[TrainExecutor]:
+def _executors(w_true: np.ndarray) -> list[TrainExecutor]:
     def make(name: str, seed: int) -> TrainExecutor:
         rng = np.random.default_rng(seed)
         direction = rng.standard_normal(w_true.size).astype(np.float32)

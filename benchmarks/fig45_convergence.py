@@ -11,7 +11,7 @@ filters, serialization, streaming, aggregation — not a shortcut.
 """
 from __future__ import annotations
 
-from typing import List, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -41,7 +41,7 @@ def _setup(seed: int = 0):
     return cfg, model, params, data
 
 
-def centralized(seed: int = 0) -> List[float]:
+def centralized(seed: int = 0) -> list[float]:
     cfg, model, params, data = _setup(seed)
     opt = adamw_init(params)
 
@@ -59,10 +59,10 @@ def centralized(seed: int = 0) -> List[float]:
     return losses
 
 
-def federated(fmt: Optional[str], seed: int = 0) -> List[float]:
+def federated(fmt: Optional[str], seed: int = 0) -> list[float]:
     """Single-site FL (paper's Fig. 4/5 setting) through the full stack."""
     cfg, model, params, data = _setup(seed)
-    losses: List[float] = []
+    losses: list[float] = []
 
     @jax.jit
     def step(params, opt, batch):
@@ -93,8 +93,8 @@ def federated(fmt: Optional[str], seed: int = 0) -> List[float]:
     return losses
 
 
-def run() -> List[str]:
-    rows: List[str] = []
+def run() -> list[str]:
+    rows: list[str] = []
     cen = centralized()
     fl = federated(None)
     # Fig 4: curves align (compare mean of last round)

@@ -19,7 +19,7 @@ rows, per completed client task for per-client rows.
 """
 from __future__ import annotations
 
-from typing import Iterator, List, Tuple
+from collections.abc import Iterator
 
 import numpy as np
 
@@ -47,7 +47,7 @@ BUDGET_S = 0.05                 # per-message transfer budget for adaptive preci
 TIERS = ("fiber", "cable", "wifi", "lte", "dsl", "3g")
 
 
-def _executors(w_true: np.ndarray) -> List[TrainExecutor]:
+def _executors(w_true: np.ndarray) -> list[TrainExecutor]:
     def make(name: str, seed: int) -> TrainExecutor:
         rng = np.random.default_rng(seed)
         direction = rng.standard_normal(w_true.size).astype(np.float32)
@@ -63,7 +63,7 @@ def _executors(w_true: np.ndarray) -> List[TrainExecutor]:
     return [make(f"site-{i}", i) for i in range(NUM_CLIENTS)]
 
 
-def _adaptive_filters(network) -> Tuple[dict, dict, AdaptiveQuantizeFilter]:
+def _adaptive_filters(network) -> tuple[dict, dict, AdaptiveQuantizeFilter]:
     filt = AdaptiveQuantizeFilter.from_network(network, budget_s=BUDGET_S)
     server = no_filters()
     server[FilterPoint.TASK_DATA_OUT] = FilterChain([filt])

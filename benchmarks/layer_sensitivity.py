@@ -7,7 +7,6 @@ higher precision. Drives SelectiveQuantizeFilter policies.
 """
 from __future__ import annotations
 
-from typing import Dict, List
 
 import jax
 import jax.numpy as jnp
@@ -30,7 +29,7 @@ def _tensor_class(name: str) -> str:
     return "other"
 
 
-def run() -> List[str]:
+def run() -> list[str]:
     cfg = get_smoke_config("llama3.2-1b").with_overrides(remat=False)
     model = create_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
@@ -41,11 +40,11 @@ def run() -> List[str]:
     base = np.asarray(base_logits, np.float32)
 
     # per-class SNR + end-to-end logit distortion at nf4
-    classes: Dict[str, List[str]] = {}
+    classes: dict[str, list[str]] = {}
     for name in flat:
         classes.setdefault(_tensor_class(name), []).append(name)
 
-    rows: List[str] = []
+    rows: list[str] = []
     for cls, names in sorted(classes.items()):
         # weight-space SNR
         snrs = []

@@ -1,0 +1,81 @@
+"""Wire-pipeline peak-memory envelope: the tentpole claim, benchmarked.
+
+One llama-shaped global-weight message crosses the simulator wire under
+container streaming with an ``nf4 + zlib`` stack, three ways:
+
+* ``pipeline`` — per-item stages inside the streamer loop (peak ~ one
+  quantized item),
+* ``legacy``   — the same transforms as whole-message FilterChain shim
+  stages (peak ~ whole quantized payload),
+* ``plain``    — no transforms (peak ~ one fp32 item, for scale).
+
+Reported ``derived`` fields carry the byte-exact peaks and true wire
+bytes, so the nightly ``--smoke`` run surfaces any regression of the
+O(largest item) envelope in BENCH_*.json.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.filters import two_way_quantization
+from repro.fl import FedAvgAggregator, FLSimulator, SimulationConfig, TrainExecutor
+
+
+def model_dict(d: int = 256, layers: int = 12):
+    rng = np.random.default_rng(0)
+    sd = {}
+    for i in range(layers):
+        sd[f"layers.{i}.attn"] = rng.standard_normal((d, d)).astype(np.float32)
+        sd[f"layers.{i}.mlp"] = rng.standard_normal((2 * d, d)).astype(np.float32)
+    return sd
+
+
+def _run(sd, wire_kwargs):
+    def train_fn(params, rnd):
+        return {k: np.asarray(v) for k, v in params.items()}, 1, {}
+
+    sim = FLSimulator(
+        [TrainExecutor("site-0", train_fn)],
+        FedAvgAggregator(),
+        SimulationConfig(num_rounds=1, transmission="container", chunk_size=1 << 18),
+        **wire_kwargs,
+    )
+    t0 = time.perf_counter()
+    sim.run(dict(sd))
+    elapsed_us = (time.perf_counter() - t0) * 1e6
+    return sim.meter.peak, sim.stats.bytes_sent, elapsed_us
+
+
+def run() -> list[str]:
+    sd = model_dict()
+    total = sum(v.nbytes for v in sd.values())
+    max_item = max(v.nbytes for v in sd.values())
+    stack = ["quantize:nf4", "zlib"]
+    filters = two_way_quantization("nf4")
+    cases = {
+        "pipeline": {"pipelines": {"task_data": stack, "task_result": stack}},
+        "legacy": {"server_filters": filters, "client_filters": filters},
+        "plain": {"pipelines": {}},
+    }
+    rows = []
+    peaks = {}
+    for name, wire_kwargs in cases.items():
+        peak, wire_bytes, us = _run(sd, wire_kwargs)
+        peaks[name] = peak
+        rows.append(
+            f"pipeline_envelope/{name},{us:.0f},"
+            f"peak_bytes={peak};wire_bytes={wire_bytes};"
+            f"payload_bytes={total};max_item_bytes={max_item}"
+        )
+    rows.append(
+        "pipeline_envelope/ratio,0,"
+        f"legacy_over_pipeline={peaks['legacy'] / max(peaks['pipeline'], 1):.2f}"
+    )
+    return rows
+
+
+if __name__ == "__main__":
+    for row in run():
+        print(row)

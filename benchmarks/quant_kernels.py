@@ -6,7 +6,6 @@ Reports us/call and achieved GB/s for each codec over a 64 MiB tensor.
 from __future__ import annotations
 
 import time
-from typing import List
 
 import jax
 import jax.numpy as jnp
@@ -28,8 +27,8 @@ def _time(f, *args, reps=3):
     return (time.perf_counter() - t0) / reps * 1e6, out
 
 
-def run() -> List[str]:
-    rows: List[str] = []
+def run() -> list[str]:
+    rows: list[str] = []
     rng = np.random.default_rng(0)
     x = jnp.asarray(rng.standard_normal(N), jnp.float32)
     gb = x.nbytes / 1e9

@@ -9,7 +9,6 @@ from __future__ import annotations
 import glob
 import json
 import os
-from typing import List
 
 DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
 
@@ -22,13 +21,14 @@ def load_reports():
     return out
 
 
-def run() -> List[str]:
-    rows: List[str] = []
+def run() -> list[str]:
+    rows: list[str] = []
     reports = load_reports()
     if not reports:
         return ["roofline/none,0,run `python -m repro.launch.dryrun --all` first"]
     for r in reports:
-        dominant = {"compute": r["compute_s"], "memory": r["memory_s"], "collective": r["collective_s"]}
+        dominant = {"compute": r["compute_s"], "memory": r["memory_s"],
+                    "collective": r["collective_s"]}
         total = max(dominant.values())
         rows.append(
             f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}/{r.get('tag','baseline')},0,"

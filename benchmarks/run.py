@@ -19,9 +19,8 @@ import json
 import sys
 import time
 import traceback
-from typing import Dict, List
 
-SUITES: Dict[str, str] = {
+SUITES: dict[str, str] = {
     "table2": "benchmarks.table2_message_size",
     "table3": "benchmarks.table3_streaming_memory",
     "fig45": "benchmarks.fig45_convergence",
@@ -31,13 +30,16 @@ SUITES: Dict[str, str] = {
     "roofline": "benchmarks.roofline_report",
     "async": "benchmarks.async_throughput",
     "hetero": "benchmarks.hetero_fleet",
+    "envelope": "benchmarks.pipeline_envelope",
 }
 
-# fast subset for the nightly smoke run (skips the convergence sweeps)
-SMOKE_SUITES = ("table2", "table3", "kernels", "chunks", "async", "hetero")
+# fast subset for the nightly smoke run (skips the convergence sweeps);
+# "envelope" keeps the wire pipeline's O(largest item) peak-memory claim
+# under regression watch in BENCH_*.json
+SMOKE_SUITES = ("table2", "table3", "kernels", "chunks", "async", "hetero", "envelope")
 
 
-def main(argv: List[str] | None = None) -> int:
+def main(argv: list[str] | None = None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None, help="comma-separated suite names")
     ap.add_argument("--smoke", action="store_true",
@@ -58,9 +60,9 @@ def main(argv: List[str] | None = None) -> int:
     json_path = args.json or ("BENCH_smoke.json" if args.smoke else None)
 
     print("name,us_per_call,derived")
-    rows: List[str] = []
-    timings: Dict[str, float] = {}
-    failures: Dict[str, str] = {}
+    rows: list[str] = []
+    timings: dict[str, float] = {}
+    failures: dict[str, str] = {}
     t0 = time.time()
     for name in selected:
         t_suite = time.time()

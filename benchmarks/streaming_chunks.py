@@ -6,7 +6,6 @@ retransmission overhead per setting.
 from __future__ import annotations
 
 import time
-from typing import List
 
 import numpy as np
 
@@ -21,8 +20,8 @@ def _sd(mb: int = 32):
     return {f"layer.{i}": rng.standard_normal(n).astype(np.float32) for i in range(8)}
 
 
-def run() -> List[str]:
-    rows: List[str] = []
+def run() -> list[str]:
+    rows: list[str] = []
     sd = _sd()
     total = sum(v.nbytes for v in sd.values())
 

@@ -9,7 +9,6 @@ Two parts:
 from __future__ import annotations
 
 import time
-from typing import Dict, List
 
 import numpy as np
 
@@ -24,8 +23,8 @@ class _Shape:
         self.shape = shape
 
 
-def llama32_1b_layout() -> Dict[str, _Shape]:
-    sd: Dict[str, _Shape] = {
+def llama32_1b_layout() -> dict[str, _Shape]:
+    sd: dict[str, _Shape] = {
         "embed_tokens": _Shape(128256, 2048),
         "norm": _Shape(2048),
         "lm_head": _Shape(128256, 2048),
@@ -51,7 +50,7 @@ PAPER_TABLE2 = {  # fmt: (model_mb, meta_mb, pct)
 }
 
 
-def small_llama_dict(scale: int = 16) -> Dict[str, np.ndarray]:
+def small_llama_dict(scale: int = 16) -> dict[str, np.ndarray]:
     rng = np.random.default_rng(0)
     d = 2048 // scale
     sd = {"embed_tokens": rng.standard_normal((128256 // scale, d)).astype(np.float32)}
@@ -61,8 +60,8 @@ def small_llama_dict(scale: int = 16) -> Dict[str, np.ndarray]:
     return sd
 
 
-def run() -> List[str]:
-    rows: List[str] = []
+def run() -> list[str]:
+    rows: list[str] = []
     layout = llama32_1b_layout()
     for fmt, (want_mb, want_meta, want_pct) in PAPER_TABLE2.items():
         r = message_size_report(layout, fmt)

@@ -16,7 +16,6 @@ from __future__ import annotations
 import os
 import tempfile
 import time
-from typing import List
 
 import numpy as np
 
@@ -35,7 +34,7 @@ def model_dict(d: int = 512, layers: int = 8, vocab: int = 8192):
     return sd
 
 
-def run() -> List[str]:
+def run() -> list[str]:
     sd = model_dict()
     total = sum(v.nbytes for v in sd.values())
     max_item = max(v.nbytes for v in sd.values())

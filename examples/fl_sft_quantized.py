@@ -12,9 +12,9 @@ import numpy as np
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
-from benchmarks.fig45_convergence import centralized, federated
-from benchmarks.table2_message_size import llama32_1b_layout
-from repro.core.quantization import message_size_report
+from benchmarks.fig45_convergence import centralized, federated  # noqa: E402
+from benchmarks.table2_message_size import llama32_1b_layout  # noqa: E402
+from repro.core.quantization import message_size_report  # noqa: E402
 
 
 def main() -> None:

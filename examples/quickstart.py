@@ -1,7 +1,8 @@
 """Quickstart: 3-client federated training with message quantization and
 
 container streaming, end to end through the real stack — Controller,
-Executors, the four filter points, SFM chunked wire — in ~1 minute on CPU.
+Executors, a quantize+zlib+crc32 wire pipeline, SFM chunked wire — in
+~1 minute on CPU.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -10,7 +11,6 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_smoke_config
-from repro.core.filters import two_way_quantization
 from repro.data import dirichlet_partition
 from repro.fl import FedAvgAggregator, FLSimulator, SimulationConfig, TrainExecutor
 from repro.models import create_model
@@ -33,7 +33,8 @@ def main() -> None:
 
     def make_client(name, data):
         def train_fn(flat_params, rnd):
-            params = unflatten_state_dict({k: jnp.asarray(np.asarray(v)) for k, v in flat_params.items()})
+            params = unflatten_state_dict(
+                {k: jnp.asarray(np.asarray(v)) for k, v in flat_params.items()})
             opt = adamw_init(params)
             loss = None
             for _ in range(LOCAL_STEPS):
@@ -44,18 +45,19 @@ def main() -> None:
 
         return TrainExecutor(name, train_fn)
 
-    filters = two_way_quantization("blockwise8")  # the paper's §II-C scheme
+    # the paper's §II-C two-way scheme as a wire-pipeline stack: quantize
+    # + compress + checksum run per item inside the container streamer
+    stack = ["quantize:blockwise8", "zlib", "crc32"]
     sim = FLSimulator(
         [make_client(f"site-{i}", ds) for i, ds in enumerate(datasets)],
         FedAvgAggregator(),
         SimulationConfig(num_rounds=ROUNDS, transmission="container"),
-        server_filters=filters,
-        client_filters=filters,
+        pipelines={"task_data": stack, "task_result": stack},
     )
     init = flatten_state_dict(model.init(jax.random.PRNGKey(0)))
     final = sim.run(init)
     print(f"\nrounds: {ROUNDS} | messages: {sim.stats.messages} "
-          f"| wire bytes: {sim.stats.bytes_sent/1e6:.1f} MB (int8 wire)")
+          f"| wire bytes: {sim.stats.bytes_sent/1e6:.1f} MB (int8+zlib wire)")
     print(f"final global weights: {len(final)} tensors")
 
 

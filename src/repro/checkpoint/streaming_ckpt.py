@@ -15,7 +15,8 @@ from __future__ import annotations
 
 import os
 import struct
-from typing import Any, Callable, Dict, Iterator, Optional, Tuple
+from collections.abc import Callable, Iterator
+from typing import Any, Optional
 
 import numpy as np
 
@@ -47,7 +48,7 @@ def save_checkpoint(path: str, tree: Any, *, fmt: Optional[str] = None) -> int:
     return total + 4
 
 
-def iter_checkpoint(path: str) -> Iterator[Tuple[str, Any]]:
+def iter_checkpoint(path: str) -> Iterator[tuple[str, Any]]:
     """Stream items off disk one at a time (peak memory = one item)."""
     size = os.path.getsize(path)
     with open(path, "rb") as fh:
@@ -59,7 +60,7 @@ def iter_checkpoint(path: str) -> Iterator[Tuple[str, Any]]:
             # length is derivable from the header
             import json
 
-            h = json.loads(header.decode("utf-8"))
+            h = json.loads(header.decode())
             if h["kind"] == "qtensor":
                 pshape = tuple(h["payload_shape"])
                 pdtype = np.dtype(h["payload_dtype"])
@@ -76,7 +77,7 @@ def iter_checkpoint(path: str) -> Iterator[Tuple[str, Any]]:
             yield name, value
 
 
-def load_checkpoint(path: str) -> Dict[str, Any]:
+def load_checkpoint(path: str) -> dict[str, Any]:
     return unflatten_state_dict(dict(iter_checkpoint(path)))
 
 

@@ -10,11 +10,10 @@ allocation).
 from __future__ import annotations
 
 import importlib
-from typing import Dict, List
 
 from repro.models.base import ModelConfig
 
-ARCH_IDS: List[str] = [
+ARCH_IDS: list[str] = [
     "xlstm-125m",
     "stablelm-1.6b",
     "dbrx-132b",
@@ -45,5 +44,5 @@ def get_smoke_config(arch_id: str) -> ModelConfig:
     return mod.CONFIG.with_overrides(**mod.SMOKE_OVERRIDES)
 
 
-def all_configs() -> Dict[str, ModelConfig]:
+def all_configs() -> dict[str, ModelConfig]:
     return {a: get_config(a) for a in ARCH_IDS}

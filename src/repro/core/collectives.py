@@ -20,7 +20,7 @@ These run inside ``jax.shard_map`` over the ``pod`` axis; the inner
 """
 from __future__ import annotations
 
-from typing import Any, Optional, Tuple
+from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
@@ -31,7 +31,7 @@ from repro.kernels import ref as KREF
 BLOCK = KREF.BLOCK8
 
 
-def _flatten_tree(tree: Any) -> Tuple[jnp.ndarray, Any, list]:
+def _flatten_tree(tree: Any) -> tuple[jnp.ndarray, Any, list]:
     leaves, treedef = jax.tree_util.tree_flatten(tree)
     sizes = [int(np.prod(l.shape)) for l in leaves]
     flat = jnp.concatenate([l.reshape(-1).astype(jnp.float32) for l in leaves])
@@ -48,7 +48,7 @@ def _unflatten_tree(flat: jnp.ndarray, meta: Any, sizes: list) -> Any:
     return jax.tree_util.tree_unflatten(treedef, leaves)
 
 
-def _quantize_flat(flat: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+def _quantize_flat(flat: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
     n = flat.shape[0]
     padded = int(np.ceil(n / BLOCK)) * BLOCK
     if padded != n:

@@ -14,11 +14,23 @@ The two-way quantization scheme installs a :class:`QuantizeFilter` on both
 message crosses the wire quantized while **training and aggregation always
 see original precision** — the paper's key design point, and the reason no
 training-script change is needed (swapping filter configs is enough).
+
+.. deprecated:: the ``Filter``/``FilterChain`` surface is superseded by
+   the registry-driven :class:`~repro.core.pipeline.WirePipeline`, whose
+   stages run **per item inside the streaming loop** (peak transmission
+   memory ~one item) instead of materializing the whole transformed
+   payload up front, as every filter here must. Existing configurations
+   keep working: the simulator adapts filter chains onto whole-message
+   pipeline stages via
+   :func:`~repro.core.pipeline.legacy_wire_pipelines`, with bitwise-
+   identical results. New transforms should be written as registered
+   pipeline stages (``@register_stage``), not filters.
 """
 from __future__ import annotations
 
 import enum
-from typing import Any, Callable, Dict, Iterable, List, Optional
+from collections.abc import Callable, Iterable
+from typing import Any, Optional
 
 import numpy as np
 
@@ -46,7 +58,7 @@ class Filter:
 
 class FilterChain:
     def __init__(self, filters: Optional[Iterable[Filter]] = None) -> None:
-        self.filters: List[Filter] = list(filters or [])
+        self.filters: list[Filter] = list(filters or [])
 
     def process(self, message: Message) -> Message:
         for f in self.filters:
@@ -67,7 +79,7 @@ class QuantizeFilter(Filter):
         self.min_params = min_params
 
     def process(self, message: Message) -> Message:
-        out: Dict[str, Any] = {}
+        out: dict[str, Any] = {}
         for name, value in message.payload.items():
             if isinstance(value, QuantizedTensor):
                 out[name] = value
@@ -112,7 +124,7 @@ class DPGaussianNoiseFilter(Filter):
         self._rng = np.random.default_rng(seed)
 
     def process(self, message: Message) -> Message:
-        out: Dict[str, Any] = {}
+        out: dict[str, Any] = {}
         for name, value in message.payload.items():
             if isinstance(value, QuantizedTensor) or not np.issubdtype(
                 np.asarray(value).dtype, np.floating
@@ -144,7 +156,7 @@ class SelectiveQuantizeFilter(Filter):
         return self.default_fmt
 
     def process(self, message: Message) -> Message:
-        out: Dict[str, Any] = {}
+        out: dict[str, Any] = {}
         fmts = set()
         for name, value in message.payload.items():
             arr = np.asarray(value)
@@ -179,10 +191,10 @@ class ErrorFeedbackQuantizeFilter(Filter):
     def __init__(self, fmt: str, min_params: int = 0) -> None:
         self.fmt = fmt
         self.min_params = min_params
-        self._residual: Dict[str, np.ndarray] = {}
+        self._residual: dict[str, np.ndarray] = {}
 
     def process(self, message: Message) -> Message:
-        out: Dict[str, Any] = {}
+        out: dict[str, Any] = {}
         for name, value in message.payload.items():
             if isinstance(value, QuantizedTensor) or not np.issubdtype(
                 np.asarray(value).dtype, np.floating
@@ -248,12 +260,12 @@ class AdaptiveQuantizeFilter(Filter):
         self.min_params = min_params
         self.link_fn = link_fn
         self.last_fmt: Optional[str] = None
-        self.last_fmt_by_client: Dict[str, str] = {}
+        self.last_fmt_by_client: dict[str, str] = {}
 
     @classmethod
     def from_network(
         cls, network: Any, budget_s: float = 1.0, min_params: int = 0
-    ) -> "AdaptiveQuantizeFilter":
+    ) -> AdaptiveQuantizeFilter:
         """Link-aware construction from a runtime NetworkModel. The
         filter has no fleet-wide fallback, so a message without a
         ``client`` header raises rather than guessing a bandwidth."""
@@ -305,7 +317,7 @@ class AdaptiveQuantizeFilter(Filter):
         return QuantizeFilter(fmt, self.min_params).process(message)
 
 
-def two_way_quantization(fmt: str) -> Dict[FilterPoint, FilterChain]:
+def two_way_quantization(fmt: str) -> dict[FilterPoint, FilterChain]:
     """The paper's §II-C scheme: quantize on both egress points,
 
     dequantize on both ingress points."""
@@ -317,5 +329,5 @@ def two_way_quantization(fmt: str) -> Dict[FilterPoint, FilterChain]:
     }
 
 
-def no_filters() -> Dict[FilterPoint, FilterChain]:
+def no_filters() -> dict[FilterPoint, FilterChain]:
     return {p: FilterChain() for p in FilterPoint}

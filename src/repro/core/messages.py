@@ -10,7 +10,8 @@ from __future__ import annotations
 
 import dataclasses
 import enum
-from typing import Any, Dict, Mapping
+from collections.abc import Mapping
+from typing import Any
 
 from repro.utils.trees import tree_bytes
 
@@ -23,10 +24,16 @@ class MessageKind(enum.Enum):
 @dataclasses.dataclass
 class Message:
     kind: MessageKind
-    payload: Dict[str, Any]
-    headers: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    payload: dict[str, Any]
+    headers: dict[str, Any] = dataclasses.field(default_factory=dict)
 
     def payload_bytes(self) -> int:
+        """Logical tensor-payload size: raw array/QuantizedTensor bytes
+        only. This is **not** bytes-on-wire — it excludes item framing,
+        pipeline envelopes, chunk headers and the transmitted message
+        headers; the simulator's
+        :class:`~repro.fl.simulator.TrafficStats` counts those at the
+        driver, which is where true wire totals come from."""
         total = 0
         for v in self.payload.values():
             if hasattr(v, "total_bytes"):
@@ -35,5 +42,5 @@ class Message:
                 total += tree_bytes(v)
         return total
 
-    def replace_payload(self, payload: Mapping[str, Any]) -> "Message":
+    def replace_payload(self, payload: Mapping[str, Any]) -> Message:
         return Message(self.kind, dict(payload), dict(self.headers))

@@ -1,0 +1,823 @@
+"""Unified wire pipeline: registry-driven, streaming-aware message transforms.
+
+This module is the message plane's single composition surface. A
+:class:`WirePipeline` is an ordered stack of :class:`Stage` objects that
+executes **inside** the streaming loop, so a container-streamed,
+NF4-quantized, zlib-compressed upload peaks at ~one item of transmission
+memory instead of one model — the composition of the paper's two
+contributions (§II-C quantization x §III streaming) that the legacy
+``Filter``/``FilterChain`` layering could not express (filters
+materialize the whole transformed payload before the streamer sees it).
+
+Stage hooks, by granularity:
+
+* **whole-message** — ``begin_encode`` (sender, before any item is
+  serialized: stamp headers, pick a per-message format, or — legacy
+  adapter only — replace the payload wholesale) and ``end_decode``
+  (receiver, after the payload is reassembled).
+* **per-item, value level** — ``encode_item`` / ``decode_item`` run on
+  each payload tensor around the serialization boundary (quantize /
+  dequantize, DP noise, secure-agg masking).
+* **per-item, byte level** — ``encode_item_bytes`` / ``decode_item_bytes``
+  run on each item's serialized bytes (compression, checksums); each
+  application records a small metadata dict that travels in the item's
+  wire envelope.
+
+Wire format: when a pipeline has any per-item stage, each item is framed
+as a self-describing **envelope**::
+
+    envelope := hlen (u32 LE) | header (utf-8 JSON) | body
+    header   := {"kind": "wire", "name": ..., "n": len(body),
+                 "v": [value-stage names...],
+                 "b": [[byte-stage name, meta], ...]}
+
+so a receiver can undo the byte stages and (by default) the value stages
+from the envelope alone, resolving stage names through the registry when
+it has no pipeline instance of its own. A pipeline with no stages frames
+items exactly like :func:`repro.core.serialization.serialize_item` —
+byte-for-byte compatible with the pre-pipeline wire. Message headers
+cross the wire as a leading ``meta`` item, so byte accounting includes
+them.
+
+Registry: ``@register_stage("quantize")`` binds a stage class to a spec
+name; :func:`build_pipeline` turns declarative specs like
+``["quantize:nf4", "zlib", "crc32"]`` into a pipeline, which is how
+``fl/job.py`` job specs declare per-direction wire stacks and how
+third-party stages plug in without touching core. The same pattern
+registers transport drivers (``repro.core.streaming.register_driver``)
+and scheduling policies (``repro.runtime.async_agg.register_policy``).
+
+Legacy interop: :func:`legacy_wire_pipelines` adapts the deprecated
+``Filter``/``FilterChain`` four-point configuration onto per-hop
+pipelines via whole-message adapter stages; results are bitwise
+identical to the old path, but the whole transformed payload is
+materialized (and metered) before streaming — new code should use
+registered stages instead.
+"""
+from __future__ import annotations
+
+import json
+import struct
+import zlib as _zlib
+from collections.abc import Callable, Iterator, Mapping
+from typing import Any, Optional, Union
+
+import numpy as np
+
+from repro.core import serialization as ser
+from repro.core import secure_agg as sa
+from repro.core.filters import AdaptiveQuantizeFilter, Filter, FilterChain, FilterPoint
+from repro.core.messages import Message, MessageKind
+from repro.core.quantization import QuantizedTensor, dequantize, quantize
+from repro.utils import mem
+
+_U32 = struct.Struct("<I")
+
+#: reserved item name carrying message kind + headers across the wire
+META_ITEM = "__meta__"
+
+
+class WireIntegrityError(ValueError):
+    """A checksum stage rejected an item (corrupted bytes on the wire)."""
+
+
+class WireContext:
+    """Per-message state shared by every stage hook of one transfer.
+
+    ``headers`` is the live header dict of the message being encoded (or
+    the transmitted headers on the decode side); ``state`` is stage
+    scratch space (e.g. the adaptive stage parks its per-message format
+    choice); ``decode_values`` mirrors the owning pipeline's setting so
+    value stages know whether their decode hook will run.
+    """
+
+    __slots__ = ("headers", "state", "decode_values")
+
+    def __init__(self, headers: dict[str, Any], decode_values: bool = True) -> None:
+        self.headers = headers
+        self.state: dict[str, Any] = {}
+        self.decode_values = decode_values
+
+
+# ---------------------------------------------------------------------------
+# Stage base + registry
+# ---------------------------------------------------------------------------
+
+class Stage:
+    """One wire transform. Subclass and override any subset of hooks.
+
+    ``name`` is the registry key (set by :func:`register_stage`) and what
+    the wire envelope records, so it must be stable across versions.
+    ``stateful`` stages (RNG streams, error-feedback residuals) are
+    serialized under the simulator's filter lock when round trips run
+    concurrently.
+    """
+
+    name: str = "stage"
+    stateful: bool = False
+
+    # -- whole-message hooks ------------------------------------------------
+    def begin_encode(self, message: Message, ctx: WireContext) -> Message:
+        return message
+
+    def end_decode(self, message: Message, ctx: WireContext) -> Message:
+        return message
+
+    # -- per-item hooks, value level ----------------------------------------
+    def encode_item(self, name: str, value: Any, ctx: WireContext) -> Any:
+        return value
+
+    def decode_item(self, name: str, value: Any, ctx: WireContext) -> Any:
+        return value
+
+    # -- per-item hooks, byte level -----------------------------------------
+    def encode_item_bytes(
+        self, name: str, blob: bytes, meta: dict[str, Any], ctx: WireContext
+    ) -> bytes:
+        return blob
+
+    def decode_item_bytes(
+        self, name: str, blob: bytes, meta: Mapping[str, Any], ctx: WireContext
+    ) -> bytes:
+        return blob
+
+    # -- spec support -------------------------------------------------------
+    @classmethod
+    def from_spec(cls, arg: Optional[str] = None, **kwargs: Any) -> Stage:
+        """Build from a job-spec entry; ``arg`` is the ``name:arg`` suffix."""
+        if arg is not None:
+            raise ValueError(f"stage {cls.name!r} takes no ':arg' (got {arg!r})")
+        return cls(**kwargs)
+
+    @classmethod
+    def for_decode(cls) -> Stage:
+        """A decode-capable instance for receivers that only know the
+        stage *name* from a wire envelope (registry fallback). Override
+        when ``__init__`` needs encode-side configuration the decode
+        hooks don't use."""
+        return cls.from_spec(None)
+
+
+_STAGES: dict[str, type[Stage]] = {}
+
+
+def register_stage(name: str) -> Callable[[type[Stage]], type[Stage]]:
+    """Class decorator: bind ``name`` to a Stage class in the registry."""
+
+    def deco(cls: type[Stage]) -> type[Stage]:
+        if name in _STAGES:
+            raise ValueError(f"stage name {name!r} already registered ({_STAGES[name]})")
+        cls.name = name
+        _STAGES[name] = cls
+        return cls
+
+    return deco
+
+
+def registered_stages() -> tuple[str, ...]:
+    return tuple(sorted(_STAGES))
+
+
+StageSpec = Union[str, Mapping[str, Any], Stage]
+
+
+def build_stage(spec: StageSpec) -> Stage:
+    """``"quantize:nf4"`` | ``{"stage": "zlib", "level": 9}`` | Stage."""
+    if isinstance(spec, Stage):
+        return spec
+    if isinstance(spec, str):
+        name, _, arg = spec.partition(":")
+        cls = _lookup(name)
+        return cls.from_spec(arg or None)
+    if isinstance(spec, Mapping):
+        kwargs = dict(spec)
+        name = kwargs.pop("stage")
+        cls = _lookup(name)
+        return cls.from_spec(kwargs.pop("arg", None), **kwargs)
+    raise TypeError(f"bad stage spec {spec!r}")
+
+
+def _lookup(name: str) -> type[Stage]:
+    try:
+        return _STAGES[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown stage {name!r}; registered: {registered_stages()}"
+        ) from None
+
+
+# ---------------------------------------------------------------------------
+# Registered stages
+# ---------------------------------------------------------------------------
+
+def _is_quantizable(value: Any, min_params: int) -> bool:
+    if isinstance(value, QuantizedTensor):
+        return False
+    arr = np.asarray(value)
+    return bool(
+        np.issubdtype(arr.dtype, np.floating) and int(np.prod(arr.shape)) >= min_params
+    )
+
+
+@register_stage("quantize")
+class QuantizeStage(Stage):
+    """Per-item two-way quantization (paper §II-C) — spec ``quantize:nf4``.
+
+    Encode quantizes each float tensor to ``fmt`` as it enters the
+    streamer loop; decode recovers original precision item-by-item, so
+    neither side ever holds a whole quantized model for transmission.
+    Small/integer tensors pass through (same skip rule as the legacy
+    :class:`~repro.core.filters.QuantizeFilter`).
+    """
+
+    def __init__(self, fmt: str, min_params: int = 0) -> None:
+        self.fmt = fmt
+        self.min_params = min_params
+
+    @classmethod
+    def from_spec(cls, arg: Optional[str] = None, **kwargs: Any) -> QuantizeStage:
+        fmt = arg or kwargs.pop("fmt", None)
+        if not fmt:
+            raise ValueError('quantize stage needs a format, e.g. "quantize:nf4"')
+        return cls(fmt, **kwargs)
+
+    @classmethod
+    def for_decode(cls) -> QuantizeStage:
+        # decode reads each QuantizedTensor's own fmt; the encode-side
+        # format is irrelevant on the receiving end
+        return cls("nf4")
+
+    def begin_encode(self, message: Message, ctx: WireContext) -> Message:
+        ctx.headers["quantized_fmt"] = self.fmt
+        return message
+
+    def end_decode(self, message: Message, ctx: WireContext) -> Message:
+        if ctx.decode_values:
+            message.headers.pop("quantized_fmt", None)
+        return message
+
+    def encode_item(self, name: str, value: Any, ctx: WireContext) -> Any:
+        if not _is_quantizable(value, self.min_params):
+            return value
+        return quantize(np.asarray(value), self.fmt)
+
+    def decode_item(self, name: str, value: Any, ctx: WireContext) -> Any:
+        return dequantize(value) if isinstance(value, QuantizedTensor) else value
+
+
+@register_stage("ef-quantize")
+class ErrorFeedbackQuantizeStage(Stage):
+    """Quantize with error feedback (EF-SGD/EF21): transmits
+    ``Q(x_t + e_{t-1})`` and keeps the residual per (client, tensor
+    name) — one stage instance serves a whole hop direction, and the
+    ``client`` header keeps each site's error stream independent.
+    Stateful.
+    """
+
+    stateful = True
+
+    def __init__(self, fmt: str, min_params: int = 0) -> None:
+        self.fmt = fmt
+        self.min_params = min_params
+        self._residual: dict[tuple[str, str], np.ndarray] = {}
+
+    @classmethod
+    def from_spec(cls, arg: Optional[str] = None, **kwargs: Any) -> ErrorFeedbackQuantizeStage:
+        fmt = arg or kwargs.pop("fmt", None)
+        if not fmt:
+            raise ValueError('ef-quantize stage needs a format, e.g. "ef-quantize:nf4"')
+        return cls(fmt, **kwargs)
+
+    @classmethod
+    def for_decode(cls) -> ErrorFeedbackQuantizeStage:
+        return cls("nf4")  # decode reads the wire tensor's own fmt
+
+    def begin_encode(self, message: Message, ctx: WireContext) -> Message:
+        ctx.headers["quantized_fmt"] = self.fmt
+        ctx.headers["error_feedback"] = True
+        return message
+
+    def end_decode(self, message: Message, ctx: WireContext) -> Message:
+        if ctx.decode_values:
+            message.headers.pop("quantized_fmt", None)
+        return message
+
+    def encode_item(self, name: str, value: Any, ctx: WireContext) -> Any:
+        if not _is_quantizable(value, self.min_params):
+            return value
+        key = (str(ctx.headers.get("client", "")), name)
+        arr = np.asarray(value, np.float32)
+        corrected = arr + self._residual.get(key, 0.0)
+        qt = quantize(corrected, self.fmt)
+        self._residual[key] = corrected - np.asarray(dequantize(qt), np.float32)
+        return qt
+
+    def decode_item(self, name: str, value: Any, ctx: WireContext) -> Any:
+        return dequantize(value) if isinstance(value, QuantizedTensor) else value
+
+
+@register_stage("adaptive")
+class AdaptiveQuantizeStage(Stage):
+    """Bandwidth-adaptive precision as a pipeline stage: the format is
+    chosen once per message in ``begin_encode`` (from the ``client``
+    header and the bound per-client link model), then applied item by
+    item inside the streamer loop. The decision logic is shared with the
+    legacy :class:`~repro.core.filters.AdaptiveQuantizeFilter`.
+    """
+
+    def __init__(
+        self,
+        bandwidth_bps: Optional[float] = None,
+        budget_s: float = 1.0,
+        min_params: int = 0,
+        link_fn: Optional[Callable[[str], float]] = None,
+    ) -> None:
+        self._decider = AdaptiveQuantizeFilter(
+            bandwidth_bps=bandwidth_bps, budget_s=budget_s,
+            min_params=min_params, link_fn=link_fn,
+        )
+        self.min_params = min_params
+
+    @classmethod
+    def from_spec(cls, arg: Optional[str] = None, **kwargs: Any) -> AdaptiveQuantizeStage:
+        kwargs.setdefault("bandwidth_bps", float(arg) if arg else 80e6)  # wifi-class
+        return cls(**kwargs)
+
+    def bind_network(self, network: Any) -> None:
+        self._decider.bind_network(network)
+
+    @property
+    def last_fmt_by_client(self) -> dict[str, str]:
+        return self._decider.last_fmt_by_client
+
+    def begin_encode(self, message: Message, ctx: WireContext) -> Message:
+        fmt = self._decider.fmt_for(message)
+        self._decider.last_fmt = fmt
+        self._decider.last_fmt_by_client[str(ctx.headers.get("client", ""))] = fmt
+        ctx.state["adaptive_fmt"] = fmt
+        if fmt != "fp32":
+            ctx.headers["quantized_fmt"] = fmt
+        return message
+
+    def end_decode(self, message: Message, ctx: WireContext) -> Message:
+        if ctx.decode_values:
+            message.headers.pop("quantized_fmt", None)
+        return message
+
+    def encode_item(self, name: str, value: Any, ctx: WireContext) -> Any:
+        fmt = ctx.state.get("adaptive_fmt", "fp32")
+        if fmt == "fp32" or not _is_quantizable(value, self.min_params):
+            return value
+        return quantize(np.asarray(value), fmt)
+
+    def decode_item(self, name: str, value: Any, ctx: WireContext) -> Any:
+        return dequantize(value) if isinstance(value, QuantizedTensor) else value
+
+
+@register_stage("dp-noise")
+class DPNoiseStage(Stage):
+    """Gaussian-mechanism DP noise, per item, at full precision — stack
+    it *before* a quantize stage so noise is added pre-quantization.
+    Decode is the identity (noise is the point). Stateful (RNG stream).
+    """
+
+    stateful = True
+
+    def __init__(self, sigma: float, seed: int = 0) -> None:
+        self.sigma = sigma
+        self._rng = np.random.default_rng(seed)
+
+    @classmethod
+    def from_spec(cls, arg: Optional[str] = None, **kwargs: Any) -> DPNoiseStage:
+        if arg is not None:
+            kwargs.setdefault("sigma", float(arg))
+        return cls(**kwargs)
+
+    def encode_item(self, name: str, value: Any, ctx: WireContext) -> Any:
+        if isinstance(value, QuantizedTensor):
+            return value
+        arr = np.asarray(value)
+        if not np.issubdtype(arr.dtype, np.floating):
+            return value
+        return arr + self._rng.normal(0.0, self.sigma, arr.shape).astype(arr.dtype)
+
+
+@register_stage("secure-mask")
+class SecureMaskStage(Stage):
+    """Pairwise additive masking (Bonawitz-style), per item: fixed-point
+    encode + per-pair mask streams keyed by the ``round`` header. Decode
+    is the identity — the server's :class:`~repro.core.secure_agg.
+    SecureAggregator` unmasks by summation, never per client.
+    """
+
+    def __init__(self, client_index: int, all_clients: list[int], base_seed: int = 0) -> None:
+        self.client_index = client_index
+        self.all_clients = list(all_clients)
+        self.base_seed = base_seed
+
+    @classmethod
+    def from_spec(cls, arg: Optional[str] = None, **kwargs: Any) -> SecureMaskStage:
+        if arg is not None:
+            raise ValueError("secure-mask is configured per client; use dict spec kwargs")
+        return cls(**kwargs)
+
+    @classmethod
+    def for_decode(cls) -> SecureMaskStage:
+        return cls(0, [])  # decode is the identity: masked grids stay masked
+
+    def begin_encode(self, message: Message, ctx: WireContext) -> Message:
+        ctx.headers["secure_masked"] = True
+        return message
+
+    def encode_item(self, name: str, value: Any, ctx: WireContext) -> Any:
+        arr = np.asarray(value)
+        if isinstance(value, QuantizedTensor) or not np.issubdtype(arr.dtype, np.floating):
+            return value
+        rnd = int(ctx.headers.get("round", 0))
+        g = sa._to_grid(arr)
+        for other in self.all_clients:
+            if other == self.client_index:
+                continue
+            mask = sa._pair_seed(self.base_seed, self.client_index, other, name, rnd).integers(
+                0, int(sa.MOD), size=arr.shape, dtype=np.int64
+            )
+            g = (g + mask) % sa.MOD if self.client_index < other else (g - mask) % sa.MOD
+        return g.astype(np.uint32)
+
+
+@register_stage("zlib")
+class ZlibStage(Stage):
+    """Byte-level DEFLATE compression of each serialized item — spec
+    ``zlib`` or ``zlib:9``. Composes after quantization (quantized
+    payloads still compress: absmax metadata and repeated codes)."""
+
+    def __init__(self, level: int = 6) -> None:
+        self.level = level
+
+    @classmethod
+    def from_spec(cls, arg: Optional[str] = None, **kwargs: Any) -> ZlibStage:
+        if arg is not None:
+            kwargs.setdefault("level", int(arg))
+        return cls(**kwargs)
+
+    def encode_item_bytes(
+        self, name: str, blob: bytes, meta: dict[str, Any], ctx: WireContext
+    ) -> bytes:
+        meta["n"] = len(blob)
+        return _zlib.compress(blob, self.level)
+
+    def decode_item_bytes(
+        self, name: str, blob: bytes, meta: Mapping[str, Any], ctx: WireContext
+    ) -> bytes:
+        # the envelope-declared original length bounds decompression, so a
+        # corrupted/hostile stream cannot expand past what it declared
+        # (receivers can also inspect meta["n"] for policy before decode)
+        n = meta.get("n")
+        if n is None:
+            return _zlib.decompress(blob)
+        d = _zlib.decompressobj()
+        out = d.decompress(blob, int(n))
+        if not d.eof or d.unconsumed_tail or len(out) != int(n):
+            raise WireIntegrityError(
+                f"zlib stream for item {name!r} does not match its declared "
+                f"length {n} (got {len(out)} bytes, eof={d.eof})"
+            )
+        return out
+
+
+@register_stage("crc32")
+class Crc32Stage(Stage):
+    """Byte-level integrity check: stamps each item's CRC-32 into the
+    envelope metadata; decode recomputes and raises
+    :class:`WireIntegrityError` on mismatch."""
+
+    def encode_item_bytes(
+        self, name: str, blob: bytes, meta: dict[str, Any], ctx: WireContext
+    ) -> bytes:
+        meta["crc"] = _zlib.crc32(blob)
+        return blob
+
+    def decode_item_bytes(
+        self, name: str, blob: bytes, meta: Mapping[str, Any], ctx: WireContext
+    ) -> bytes:
+        crc = _zlib.crc32(blob)
+        if crc != meta.get("crc"):
+            raise WireIntegrityError(
+                f"crc32 mismatch on item {name!r}: wire carried {meta.get('crc')}, "
+                f"received bytes hash to {crc}"
+            )
+        return blob
+
+
+# ---------------------------------------------------------------------------
+# Legacy Filter/FilterChain adapters (deprecated surface)
+# ---------------------------------------------------------------------------
+
+def _filter_is_stateful(filt: Filter) -> bool:
+    """Whether a legacy filter needs the simulator's filter lock.
+
+    Honors an explicit ``stateful`` attribute on the filter; the known
+    stateless built-ins stream concurrently (pure per-message math), and
+    unknown third-party filters default to stateful — the conservative
+    choice the legacy simulator always made.
+    """
+    from repro.core import filters as _f
+    from repro.core import secure_agg as _sa
+
+    explicit = getattr(filt, "stateful", None)
+    if explicit is not None:
+        return bool(explicit)
+    return not isinstance(
+        filt,
+        (_f.QuantizeFilter, _f.DequantizeFilter, _f.SelectiveQuantizeFilter,
+         _f.AdaptiveQuantizeFilter, _sa.SecureMaskFilter),
+    )
+
+
+class FilterStage(Stage):
+    """Adapter: run a legacy egress :class:`~repro.core.filters.Filter`
+    as a whole-message hook.
+
+    .. deprecated:: the whole transformed payload is materialized (and
+       charged to the :class:`~repro.utils.mem.MemoryMeter`) before the
+       streamer sees it — exactly the peak-memory envelope the pipeline
+       exists to avoid. Use a registered per-item stage instead.
+    """
+
+    def __init__(self, filt: Filter) -> None:
+        self.filter = filt
+        self.name = f"filter:{type(filt).__name__}"
+        self.stateful = _filter_is_stateful(filt)
+
+    def begin_encode(self, message: Message, ctx: WireContext) -> Message:
+        return self.filter.process(message)
+
+
+class IngressFilterStage(Stage):
+    """Adapter: run a legacy ingress Filter (e.g. ``DequantizeFilter``)
+    after the payload is reassembled. Same deprecation note as
+    :class:`FilterStage`."""
+
+    def __init__(self, filt: Filter) -> None:
+        self.filter = filt
+        self.name = f"filter:{type(filt).__name__}"
+        self.stateful = _filter_is_stateful(filt)
+
+    def end_decode(self, message: Message, ctx: WireContext) -> Message:
+        return self.filter.process(message)
+
+
+def legacy_wire_pipelines(
+    server_filters: Mapping[FilterPoint, FilterChain],
+    client_filters: Mapping[FilterPoint, FilterChain],
+) -> dict[str, WirePipeline]:
+    """Map the deprecated four-point Filter configuration onto per-hop
+    pipelines: each hop's egress chain becomes whole-message encode
+    stages, the peer's ingress chain becomes whole-message decode
+    stages (``end_decode`` hooks run in reverse pipeline order, so the
+    ingress wrappers are appended reversed to preserve chain order).
+    Results are bitwise identical to the legacy path.
+    """
+
+    def hop(egress: FilterChain, ingress: FilterChain) -> WirePipeline:
+        stages: list[Stage] = [FilterStage(f) for f in egress.filters]
+        stages += [IngressFilterStage(f) for f in reversed(ingress.filters)]
+        return WirePipeline(stages)
+
+    return {
+        "task_data": hop(
+            server_filters[FilterPoint.TASK_DATA_OUT],
+            client_filters[FilterPoint.TASK_DATA_IN],
+        ),
+        "task_result": hop(
+            client_filters[FilterPoint.TASK_RESULT_OUT],
+            server_filters[FilterPoint.TASK_RESULT_IN],
+        ),
+    }
+
+
+# ---------------------------------------------------------------------------
+# WirePipeline
+# ---------------------------------------------------------------------------
+
+def _overrides(stage: Stage, hook: str) -> bool:
+    return getattr(type(stage), hook) is not getattr(Stage, hook)
+
+
+class WirePipeline:
+    """An ordered stack of stages bound to one wire hop.
+
+    Encode runs stages first-to-last; decode runs them last-to-first.
+    ``decode_values=False`` leaves items in wire form (e.g. quantized
+    server-side aggregation consumes :class:`QuantizedTensor` payloads
+    directly); byte stages always decode — the items could not be parsed
+    otherwise.
+    """
+
+    def __init__(self, stages: Optional[list[StageSpec]] = None, *,
+                 decode_values: bool = True) -> None:
+        self.stages: list[Stage] = [build_stage(s) for s in (stages or [])]
+        self.decode_values = decode_values
+        self._vstages = [s for s in self.stages if _overrides(s, "encode_item")
+                         or _overrides(s, "decode_item")]
+        self._bstages = [s for s in self.stages if _overrides(s, "encode_item_bytes")
+                         or _overrides(s, "decode_item_bytes")]
+        self._by_name = {s.name: s for s in self.stages}
+
+    @property
+    def stateful(self) -> bool:
+        return any(s.stateful for s in self.stages)
+
+    def __repr__(self) -> str:
+        return f"WirePipeline([{', '.join(s.name for s in self.stages)}])"
+
+    # -- encode side --------------------------------------------------------
+    def begin_encode(self, message: Message) -> tuple[Message, WireContext]:
+        """Run whole-message hooks; returns the message to stream and the
+        shared per-transfer context. ``ctx.state['held_bytes']`` is the
+        payload size a legacy whole-message transform materialized (0 on
+        the per-item path) — the wire charges it to the MemoryMeter for
+        the duration of the transfer."""
+        ctx = WireContext(message.headers, self.decode_values)
+        original_payload = message.payload
+        for s in self.stages:
+            message = s.begin_encode(message, ctx)
+            ctx.headers = message.headers
+        ctx.state["held_bytes"] = (
+            message.payload_bytes() if message.payload is not original_payload else 0
+        )
+        if META_ITEM in message.payload:
+            raise ValueError(f"payload item name {META_ITEM!r} is reserved")
+        return message, ctx
+
+    def encode_wire_item(self, name: str, value: Any, ctx: WireContext) -> bytes:
+        """One payload item -> envelope bytes (the per-item hot path)."""
+        for s in self._vstages:
+            value = s.encode_item(name, value, ctx)
+        inner = ser.serialize_item(name, value)
+        return self._wrap(name, inner, [s.name for s in self._vstages], ctx)
+
+    def _wrap(self, name: str, inner: bytes, vnames: list[str], ctx: WireContext) -> bytes:
+        if not self._vstages and not self._bstages:
+            return inner
+        body = inner
+        brecs: list[list[Any]] = []
+        for s in self._bstages:
+            bmeta: dict[str, Any] = {}
+            body = s.encode_item_bytes(name, body, bmeta, ctx)
+            brecs.append([s.name, bmeta])
+        header = {"kind": "wire", "name": name, "n": len(body), "v": vnames, "b": brecs}
+        hb = json.dumps(header, sort_keys=True).encode()
+        return _U32.pack(len(hb)) + hb + body
+
+    def _encode_meta(self, message: Message, ctx: WireContext) -> bytes:
+        body = json.dumps(
+            {"kind": message.kind.value, "headers": _json_safe(message.headers)[0]},
+            sort_keys=True,
+        ).encode()
+        header = json.dumps(
+            {"kind": "meta", "name": META_ITEM, "n": len(body)}, sort_keys=True
+        ).encode()
+        inner = _U32.pack(len(header)) + header + body
+        return self._wrap(META_ITEM, inner, [], ctx)
+
+    def iter_encode(self, message: Message, ctx: WireContext) -> Iterator[tuple[str, bytes]]:
+        """Container-streaming producer: the meta item, then one envelope
+        per payload item — peak live bytes stays ~one (encoded) item."""
+        blob = self._encode_meta(message, ctx)
+        with mem.record_hold(len(blob)):
+            yield META_ITEM, blob
+        for name, value in message.payload.items():
+            blob = self.encode_wire_item(name, value, ctx)
+            with mem.record_hold(len(blob)):
+                yield name, blob
+
+    def n_items(self, message: Message) -> int:
+        return len(message.payload) + 1  # + meta item
+
+    def encode_blob(self, message: Message, ctx: WireContext) -> bytes:
+        """Regular-transmission producer: the whole wire message as one
+        blob (peak ~ full payload; registered with the MemoryMeter)."""
+        parts = [_U32.pack(self.n_items(message))]
+        parts.extend(blob for _, blob in self.iter_encode(message, ctx))
+        blob = b"".join(parts)
+        mem.record_alloc(len(blob))
+        return blob
+
+    def unsent_headers(self, message: Message) -> dict[str, Any]:
+        """Headers that cannot cross the wire (not JSON-serializable);
+        the in-process wire carries them around the transport."""
+        return _json_safe(message.headers)[1]
+
+    # -- decode side --------------------------------------------------------
+    def decoder(self) -> WireDecoder:
+        return WireDecoder(self)
+
+    def _decode_stage(self, name: str) -> Stage:
+        stage = self._by_name.get(name)
+        if stage is None:  # receiver without the sender's pipeline: registry default
+            stage = _lookup(name).for_decode()
+            self._by_name[name] = stage
+        return stage
+
+    def decode_wire_item(self, buf: bytes, ctx: WireContext) -> tuple[str, Any, int]:
+        """Parse one envelope from the head of ``buf``; returns
+        ``(name, value, consumed)``. The meta item decodes to its header
+        dict under the reserved name ``META_ITEM``."""
+        (hlen,) = _U32.unpack_from(buf, 0)
+        header = json.loads(bytes(buf[4:4 + hlen]).decode())
+        kind = header.get("kind")
+        if kind == "wire":
+            n = header["n"]
+            name = header["name"]
+            body = bytes(buf[4 + hlen:4 + hlen + n])
+            for sname, bmeta in reversed(header["b"]):
+                body = self._decode_stage(sname).decode_item_bytes(name, body, bmeta, ctx)
+            name, value = self._decode_inner(body, ctx)
+            if self.decode_values:
+                for sname in reversed(header["v"]):
+                    value = self._decode_stage(sname).decode_item(name, value, ctx)
+            return name, value, 4 + hlen + n
+        if kind == "meta":
+            n = header["n"]
+            return META_ITEM, json.loads(bytes(buf[4 + hlen:4 + hlen + n])), 4 + hlen + n
+        return ser.deserialize_item(buf)
+
+    def _decode_inner(self, body: bytes, ctx: WireContext) -> tuple[str, Any]:
+        (hlen,) = _U32.unpack_from(body, 0)
+        header = json.loads(bytes(body[4:4 + hlen]).decode())
+        if header.get("kind") == "meta":
+            n = header["n"]
+            return META_ITEM, json.loads(bytes(body[4 + hlen:4 + hlen + n]))
+        name, value, _ = ser.deserialize_item(body)
+        return name, value
+
+    def end_decode(self, message: Message, ctx: WireContext) -> Message:
+        for s in reversed(self.stages):
+            message = s.end_decode(message, ctx)
+        return message
+
+
+class WireDecoder:
+    """Receiver-side state for one transfer: collects payload items and
+    the transmitted meta item, then assembles the final Message."""
+
+    def __init__(self, pipeline: WirePipeline) -> None:
+        self.pipeline = pipeline
+        self.ctx = WireContext({}, pipeline.decode_values)
+        self.payload: dict[str, Any] = {}
+        self.meta: Optional[dict[str, Any]] = None
+
+    # plugs into ContainerReceiver(decode_item=...)
+    def decode_item(self, buf: bytes) -> tuple[str, Any, int]:
+        return self.pipeline.decode_wire_item(buf, self.ctx)
+
+    # plugs into ContainerReceiver(consume=...)
+    def on_item(self, name: str, value: Any) -> None:
+        if name == META_ITEM:
+            self.meta = value
+            self.ctx.headers.update(value.get("headers", {}))
+        else:
+            self.payload[name] = value
+
+    # plugs into BlobReceiver(decode_container=...)
+    def decode_blob(self, blob: bytes) -> dict[str, Any]:
+        (n,) = _U32.unpack_from(blob, 0)
+        off = 4
+        for _ in range(n):
+            name, value, consumed = self.decode_item(blob[off:])
+            self.on_item(name, value)
+            off += consumed
+        return self.payload
+
+    def finish(self, fallback_kind: MessageKind,
+               local_headers: Optional[Mapping[str, Any]] = None) -> Message:
+        """Assemble the received Message and run ``end_decode`` hooks.
+        ``local_headers`` are non-wire-safe headers the in-process wire
+        carries around the transport; transmitted headers win."""
+        headers = dict(local_headers or {})
+        kind = fallback_kind
+        if self.meta is not None:
+            headers.update(self.meta.get("headers", {}))
+            kind = MessageKind(self.meta.get("kind", fallback_kind.value))
+        msg = Message(kind, self.payload, headers)
+        self.ctx.headers = msg.headers
+        return self.pipeline.end_decode(msg, self.ctx)
+
+
+def _json_safe(headers: Mapping[str, Any]) -> tuple[dict[str, Any], dict[str, Any]]:
+    safe: dict[str, Any] = {}
+    local: dict[str, Any] = {}
+    for k, v in headers.items():
+        try:
+            json.dumps(v)
+        except (TypeError, ValueError):
+            local[k] = v
+        else:
+            safe[k] = v
+    return safe, local
+
+
+def build_pipeline(specs: Optional[list[StageSpec]], *, decode_values: bool = True) -> WirePipeline:
+    """Declarative constructor: ``["quantize:nf4", "zlib", "crc32"]``."""
+    return WirePipeline(list(specs or []), decode_values=decode_values)

@@ -21,7 +21,8 @@ applied only at the four filter points (see ``repro.core.filters``).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Mapping, Optional, Tuple
+from collections.abc import Mapping
+from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
@@ -42,7 +43,7 @@ class QuantizedTensor:
     payload: jnp.ndarray                 # int8 / uint8(packed) / fp16 / bf16 / fp32
     absmax: Optional[jnp.ndarray]        # per-block absmax (blocked formats)
     fmt: str
-    orig_shape: Tuple[int, ...]
+    orig_shape: tuple[int, ...]
     orig_dtype: Any
 
     # -- pytree protocol (so messages can cross jit/shard_map) -------------
@@ -102,15 +103,15 @@ def dequantize(qt: QuantizedTensor) -> jnp.ndarray:
 # state-dict level (what the FL filters actually transform)
 # ---------------------------------------------------------------------------
 
-def quantize_state_dict(sd: Mapping[str, jnp.ndarray], fmt: str) -> Dict[str, QuantizedTensor]:
+def quantize_state_dict(sd: Mapping[str, jnp.ndarray], fmt: str) -> dict[str, QuantizedTensor]:
     return {name: quantize(arr, fmt) for name, arr in sd.items()}
 
 
-def dequantize_state_dict(qsd: Mapping[str, QuantizedTensor]) -> Dict[str, jnp.ndarray]:
+def dequantize_state_dict(qsd: Mapping[str, QuantizedTensor]) -> dict[str, jnp.ndarray]:
     return {name: dequantize(qt) for name, qt in qsd.items()}
 
 
-def message_size_report(sd: Mapping[str, jnp.ndarray], fmt: str) -> Dict[str, float]:
+def message_size_report(sd: Mapping[str, jnp.ndarray], fmt: str) -> dict[str, float]:
     """Byte accounting for one message under ``fmt`` **without** running
 
     the quantizer — pure arithmetic over shapes, used by the Table II

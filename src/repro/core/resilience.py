@@ -18,12 +18,18 @@ Components:
 
 Works with every streamer/receiver pair unchanged — resilience is a
 transport concern, invisible to the container/file layers above
-(the SFM layering claim of the paper).
+(the SFM layering claim of the paper). The simulator wire composes these
+end-to-end: set ``chunk_drop_prob``/``chunk_dup_prob``/
+``chunk_reorder_window`` on :class:`~repro.fl.simulator.SimulationConfig`
+and every hop runs through LossyDriver + ReliableTransfer, with
+retransmitted chunks counted into the true wire bytes that drive the
+async runtime's simulated transfer time.
 """
 from __future__ import annotations
 
 import random
-from typing import Callable, Dict, List, Optional, Set
+from collections.abc import Callable
+from typing import Optional
 
 from repro.core import streaming as sm
 
@@ -45,7 +51,7 @@ class LossyDriver(sm.Driver):
         self.dup_prob = dup_prob
         self.reorder_window = reorder_window
         self._rng = random.Random(seed)
-        self._pending: List[sm.Chunk] = []
+        self._pending: list[sm.Chunk] = []
 
     def connect(self, on_chunk: Callable[[sm.Chunk], None]) -> None:
         self.inner.connect(on_chunk)
@@ -85,7 +91,7 @@ class OrderedDeliveryBuffer:
 
     def __init__(self, on_chunk: Callable[[sm.Chunk], None]) -> None:
         self._on_chunk = on_chunk
-        self._buffer: Dict[int, sm.Chunk] = {}
+        self._buffer: dict[int, sm.Chunk] = {}
         self._next_seq = 0
         self._eof_seq: Optional[int] = None
         self.complete = False
@@ -103,7 +109,7 @@ class OrderedDeliveryBuffer:
         if self._eof_seq is not None and self._next_seq > self._eof_seq:
             self.complete = True
 
-    def missing(self) -> Set[int]:
+    def missing(self) -> set[int]:
         """Known gaps below the highest seq seen (or below eof)."""
         high = self._eof_seq if self._eof_seq is not None else (
             max(self._buffer) if self._buffer else self._next_seq - 1
@@ -114,23 +120,19 @@ class OrderedDeliveryBuffer:
 
 
 class ReliableTransfer:
-    """Record-and-repair send of one container/file stream."""
+    """Record-and-repair send of one container/blob/file stream."""
 
     def __init__(self, driver: sm.Driver, chunk_size: int = sm.DEFAULT_CHUNK_SIZE) -> None:
         self.driver = driver
         self.chunk_size = chunk_size
         self.retransmits = 0
 
-    def send_container(
-        self,
-        sd,
-        receiver,
-        *,
-        mode: str = "container",
-        max_rounds: int = 20,
-    ) -> bool:
-        """Returns True when the receiver's stream completed."""
-        sent: Dict[int, sm.Chunk] = {}
+    def _send(self, stream_fn: Callable[[sm.Driver], None], receiver, max_rounds: int) -> bool:
+        """Stream through a recording wrapper, then repair gaps the
+        receiver-side :class:`OrderedDeliveryBuffer` reports until the
+        stream completes or ``max_rounds`` retransmission rounds pass.
+        Returns True when the receiver's stream completed."""
+        sent: dict[int, sm.Chunk] = {}
         buffer = OrderedDeliveryBuffer(receiver.on_chunk)
 
         class _Recording(sm.Driver):
@@ -145,11 +147,7 @@ class ReliableTransfer:
                 self.inner.send(chunk)
 
         self.driver.connect(buffer.on_chunk)
-        recording = _Recording(self.driver)
-        if mode == "container":
-            sm.ContainerStreamer(recording, self.chunk_size).send_container(sd)
-        else:
-            sm.ObjectStreamer(recording, self.chunk_size).send_container(sd)
+        stream_fn(_Recording(self.driver))
         if hasattr(self.driver, "flush"):
             self.driver.flush()
 
@@ -166,3 +164,33 @@ class ReliableTransfer:
                 self.driver.flush()
             rounds += 1
         return buffer.complete
+
+    def send_container(
+        self,
+        sd,
+        receiver,
+        *,
+        mode: str = "container",
+        max_rounds: int = 20,
+    ) -> bool:
+        """Returns True when the receiver's stream completed."""
+        if mode == "container":
+            fn = lambda d: sm.ContainerStreamer(d, self.chunk_size).send_container(sd)
+        else:
+            fn = lambda d: sm.ObjectStreamer(d, self.chunk_size).send_container(sd)
+        return self._send(fn, receiver, max_rounds)
+
+    def send_items(self, items, total: int, receiver, *, max_rounds: int = 20) -> bool:
+        """Container-mode send of pre-encoded (name, bytes) items — the
+        wire-pipeline path: stage transforms ran upstream, per item."""
+        return self._send(
+            lambda d: sm.ContainerStreamer(d, self.chunk_size).send_items(items, total),
+            receiver, max_rounds,
+        )
+
+    def send_blob(self, blob: bytes, receiver, *, max_rounds: int = 20) -> bool:
+        """Regular-mode send of one pre-encoded blob."""
+        return self._send(
+            lambda d: sm.ObjectStreamer(d, self.chunk_size).send_blob(blob),
+            receiver, max_rounds,
+        )

@@ -18,7 +18,8 @@ masked messages via :class:`SecureAggregator`.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, List, Sequence
+from collections.abc import Sequence
+from typing import Any
 
 import numpy as np
 
@@ -56,7 +57,7 @@ class SecureMaskFilter(Filter):
 
     def process(self, message: Message) -> Message:
         rnd = int(message.headers.get("round", 0))
-        out: Dict[str, Any] = {}
+        out: dict[str, Any] = {}
         for name, value in message.payload.items():
             arr = np.asarray(value)
             if not np.issubdtype(arr.dtype, np.floating):
@@ -87,9 +88,9 @@ class SecureAggregator:
 
     def __init__(self, num_clients: int) -> None:
         self.num_clients = num_clients
-        self._sum: Dict[str, np.ndarray] = {}
-        self._weights: List[float] = []
-        self._extra: Dict[str, Any] = {}
+        self._sum: dict[str, np.ndarray] = {}
+        self._weights: list[float] = []
+        self._extra: dict[str, Any] = {}
 
     def accept(self, result: Message) -> None:
         assert result.headers.get("secure_masked"), "SecureAggregator needs masked results"
@@ -105,7 +106,7 @@ class SecureAggregator:
                 self._extra[name] = value
         self._weights.append(float(result.headers.get("num_samples", 1)))
 
-    def finish(self) -> Dict[str, np.ndarray]:
+    def finish(self) -> dict[str, np.ndarray]:
         if len(self._weights) != self.num_clients:
             raise RuntimeError(
                 f"SecAgg needs all {self.num_clients} clients, got {len(self._weights)}"

@@ -10,12 +10,20 @@ The header carries name/shape/dtype plus quantization metadata for
 :class:`~repro.core.quantization.QuantizedTensor` items. Payload bytes are
 the raw array buffer (C-order). No pickling — wire format is portable and
 safe to parse from untrusted peers.
+
+This module is the *inner* codec only. When a
+:class:`~repro.core.pipeline.WirePipeline` carries per-item transforms
+(quantize, compress, checksum), each item here becomes the body of a
+self-describing pipeline **envelope** whose header records the stage
+stack and per-stage metadata — see ``repro.core.pipeline`` for that
+outer framing.
 """
 from __future__ import annotations
 
 import json
 import struct
-from typing import Any, Dict, Iterator, Mapping, Tuple
+from collections.abc import Iterator, Mapping
+from typing import Any
 
 import numpy as np
 
@@ -55,14 +63,14 @@ def serialize_item(name: str, value: Any) -> bytes:
             "dtype": str(arr.dtype),
         }
         body = _arr_bytes(arr)
-    hbytes = json.dumps(header, sort_keys=True).encode("utf-8")
+    hbytes = json.dumps(header, sort_keys=True).encode()
     return _U32.pack(len(hbytes)) + hbytes + body
 
 
-def deserialize_item(buf: bytes) -> Tuple[str, Any, int]:
+def deserialize_item(buf: bytes) -> tuple[str, Any, int]:
     """Parse one item from the head of ``buf``; returns (name, value, consumed)."""
     (hlen,) = _U32.unpack_from(buf, 0)
-    header = json.loads(buf[4 : 4 + hlen].decode("utf-8"))
+    header = json.loads(buf[4 : 4 + hlen].decode())
     off = 4 + hlen
     if header["kind"] == "qtensor":
         pshape = tuple(header["payload_shape"])
@@ -73,10 +81,13 @@ def deserialize_item(buf: bytes) -> Tuple[str, Any, int]:
         absmax = None
         if header["absmax_len"]:
             ashape = tuple(header["absmax_shape"])
-            absmax = np.frombuffer(buf, np.float32, count=int(np.prod(ashape)), offset=off).reshape(ashape)
+            absmax = np.frombuffer(
+                buf, np.float32, count=int(np.prod(ashape)), offset=off
+            ).reshape(ashape)
             off += header["absmax_len"]
         value: Any = QuantizedTensor(
-            payload, absmax, header["fmt"], tuple(header["orig_shape"]), np.dtype(header["orig_dtype"])
+            payload, absmax, header["fmt"], tuple(header["orig_shape"]),
+            np.dtype(header["orig_dtype"]),
         )
         return header["name"], value, off
     shape = tuple(header["shape"])
@@ -97,9 +108,9 @@ def serialize_container(sd: Mapping[str, Any]) -> bytes:
     return blob
 
 
-def deserialize_container(blob: bytes) -> Dict[str, Any]:
+def deserialize_container(blob: bytes) -> dict[str, Any]:
     (n,) = _U32.unpack_from(blob, 0)
-    out: Dict[str, Any] = {}
+    out: dict[str, Any] = {}
     off = 4
     for _ in range(n):
         name, value, consumed = deserialize_item(blob[off:])
@@ -108,7 +119,7 @@ def deserialize_container(blob: bytes) -> Dict[str, Any]:
     return out
 
 
-def iter_serialized_items(sd: Mapping[str, Any]) -> Iterator[Tuple[str, bytes]]:
+def iter_serialized_items(sd: Mapping[str, Any]) -> Iterator[tuple[str, bytes]]:
     """Container-streaming producer: yields one serialized item at a time
 
     (peak live bytes = largest single item, the paper's §III claim)."""

@@ -4,7 +4,9 @@ Layering (mirrors NVFlare):
 
 * **Frames** — :class:`Chunk`: fixed-size (default 1 MiB) framed slices of
   a logical stream, carrying (stream_id, seq, eof) headers.
-* **Drivers** — transport plugins. Upper layers never see the transport
+* **Drivers** — transport plugins, looked up by name through
+  :func:`register_driver`/:func:`make_driver` so third-party transports
+  plug in without touching core. Upper layers never see the transport
   (paper: "switch between gRPC, TCP, HTTP ... without any changes"):
   :class:`LoopbackDriver` (in-process queue), :class:`FileSpoolDriver`
   (spools frames to disk — models a store-and-forward relay),
@@ -12,15 +14,24 @@ Layering (mirrors NVFlare):
 * **Streamers** — three transmission modes with distinct peak-memory
   envelopes (paper Fig. 3):
 
-  - :class:`ObjectStreamer` (*regular*): serialize whole dict -> one blob
-    lives in memory (peak ~ model size).
-  - :class:`ContainerStreamer`: serialize one dict item at a time (peak ~
+  - :class:`ObjectStreamer` (*regular*): one pre-encoded blob lives in
+    memory (peak ~ model size).
+  - :class:`ContainerStreamer`: one encoded dict item at a time (peak ~
     largest item).
   - :class:`FileStreamer`: stream a file chunk-by-chunk (peak ~ chunk).
 
 * **ObjectRetriever** — pull-mode API: the holder registers an object, the
   peer retrieves it over any streamer; eases integration with existing
   workflows (paper contribution 2).
+
+Streamers and receivers are codec-agnostic: how an item becomes bytes is
+pluggable (``ContainerStreamer.send_items`` / the receivers'
+``decode_item``/``decode_container`` hooks), and the default codec is
+plain :mod:`repro.core.serialization`. The
+:class:`~repro.core.pipeline.WirePipeline` plugs its per-item transforms
+(quantize, compress, checksum, ...) into exactly these seams, so stage
+execution happens *inside* the streaming loop and the container-mode
+peak stays ~one item even with a full transform stack enabled.
 
 Every buffer the layer holds live registers with the active
 :class:`~repro.utils.mem.MemoryMeter`, which is how the Table III
@@ -34,7 +45,8 @@ import socket
 import struct
 import threading
 import uuid
-from typing import Any, Callable, Dict, Iterator, Mapping, Optional, Tuple
+from collections.abc import Callable, Iterable, Iterator, Mapping
+from typing import Any, Optional
 
 from repro.core import serialization as ser
 from repro.utils import mem
@@ -57,7 +69,7 @@ class Chunk:
         return _HDR.pack(self.stream_id, self.seq, len(self.payload), self.flags) + self.payload
 
     @classmethod
-    def decode(cls, buf: bytes) -> "Chunk":
+    def decode(cls, buf: bytes) -> Chunk:
         sid, seq, plen, flags = _HDR.unpack_from(buf, 0)
         return cls(sid, seq, buf[_HDR.size : _HDR.size + plen], flags)
 
@@ -87,6 +99,39 @@ class Driver:
         pass
 
 
+_DRIVERS: dict[str, Callable[..., Driver]] = {}
+
+
+def register_driver(name: str) -> Callable[[Callable[..., Driver]], Callable[..., Driver]]:
+    """Class/factory decorator: bind ``name`` to a transport so job specs
+    and :class:`~repro.fl.simulator.SimulationConfig` can select it by
+    string — the same registry pattern as
+    :func:`repro.core.pipeline.register_stage`."""
+
+    def deco(factory: Callable[..., Driver]) -> Callable[..., Driver]:
+        if name in _DRIVERS:
+            raise ValueError(f"driver name {name!r} already registered ({_DRIVERS[name]})")
+        _DRIVERS[name] = factory
+        return factory
+
+    return deco
+
+
+def registered_drivers() -> tuple[str, ...]:
+    return tuple(sorted(_DRIVERS))
+
+
+def make_driver(name: str, **kwargs: Any) -> Driver:
+    try:
+        factory = _DRIVERS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown driver {name!r}; registered: {registered_drivers()}"
+        ) from None
+    return factory(**kwargs)
+
+
+@register_driver("loopback")
 class LoopbackDriver(Driver):
     """Synchronous in-process delivery (the simulator default)."""
 
@@ -94,6 +139,7 @@ class LoopbackDriver(Driver):
         self._on_chunk(chunk)
 
 
+@register_driver("spool")
 class FileSpoolDriver(Driver):
     """Spools every frame to a directory, then replays on ``flush()``.
 
@@ -126,6 +172,7 @@ class FileSpoolDriver(Driver):
         self._count = 0
 
 
+@register_driver("tcp")
 class TCPDriver(Driver):
     """Real localhost sockets: sender connects to a receiver thread.
 
@@ -200,12 +247,21 @@ class TCPDriver(Driver):
 # ---------------------------------------------------------------------------
 
 class BlobReceiver:
-    """Regular transmission receiver: accumulates the whole blob."""
+    """Regular transmission receiver: accumulates the whole blob.
 
-    def __init__(self) -> None:
+    ``decode_container`` turns the reassembled blob into the result dict;
+    the default is the plain serialization codec, and the wire pipeline
+    substitutes its envelope-aware decoder.
+    """
+
+    def __init__(
+        self,
+        decode_container: Optional[Callable[[bytes], dict[str, Any]]] = None,
+    ) -> None:
         self._parts: list[bytes] = []
         self._size = 0
-        self.result: Optional[Dict[str, Any]] = None
+        self._decode = decode_container or ser.deserialize_container
+        self.result: Optional[dict[str, Any]] = None
 
     def on_chunk(self, chunk: Chunk) -> None:
         self._parts.append(chunk.payload)
@@ -214,7 +270,7 @@ class BlobReceiver:
         if chunk.eof:
             blob = b"".join(self._parts)
             mem.record_alloc(len(blob))  # join materializes a second copy
-            self.result = ser.deserialize_container(blob)
+            self.result = self._decode(blob)
             mem.record_free(len(blob) + self._size)
             self._parts.clear()
 
@@ -227,13 +283,23 @@ class ContainerReceiver:
     without ever materializing the full dict. If ``consume`` is omitted the
     items are collected into ``result`` (arrays themselves must live
     somewhere; the *transmission* overhead stays one item).
+
+    ``decode_item`` turns one reassembled item's bytes into ``(name,
+    value, consumed)``; the default is the plain serialization codec, and
+    the wire pipeline substitutes its envelope-aware decoder — stage
+    decode then runs here, inside the streaming loop.
     """
 
-    def __init__(self, consume: Optional[Callable[[str, Any], None]] = None) -> None:
+    def __init__(
+        self,
+        consume: Optional[Callable[[str, Any], None]] = None,
+        decode_item: Optional[Callable[[bytes], tuple[str, Any, int]]] = None,
+    ) -> None:
         self._parts: list[bytes] = []
         self._size = 0
         self._consume = consume
-        self.result: Dict[str, Any] = {}
+        self._decode = decode_item or ser.deserialize_item
+        self.result: dict[str, Any] = {}
         self.done = False
 
     def on_chunk(self, chunk: Chunk) -> None:
@@ -242,7 +308,7 @@ class ContainerReceiver:
         self._size += len(chunk.payload)
         if chunk.item_end:
             buf = b"".join(self._parts)
-            name, value, _ = ser.deserialize_item(buf)
+            name, value, _ = self._decode(buf)
             mem.record_free(self._size)
             self._parts.clear()
             self._size = 0
@@ -274,7 +340,7 @@ class FileReceiver:
 # Streamers (senders)
 # ---------------------------------------------------------------------------
 
-def _chunk_iter(blob: bytes, chunk_size: int) -> Iterator[Tuple[bytes, bool]]:
+def _chunk_iter(blob: bytes, chunk_size: int) -> Iterator[tuple[bytes, bool]]:
     for off in range(0, len(blob), chunk_size):
         part = blob[off : off + chunk_size]
         yield part, off + chunk_size >= len(blob)
@@ -283,15 +349,16 @@ def _chunk_iter(blob: bytes, chunk_size: int) -> Iterator[Tuple[bytes, bool]]:
 
 
 class ObjectStreamer:
-    """Regular transmission: whole container serialized, then chunked."""
+    """Regular transmission: whole container encoded, then chunked."""
 
     def __init__(self, driver: Driver, chunk_size: int = DEFAULT_CHUNK_SIZE) -> None:
         self.driver = driver
         self.chunk_size = chunk_size
 
-    def send_container(self, sd: Mapping[str, Any]) -> bytes:
+    def send_blob(self, blob: bytes) -> bytes:
+        """Chunk out an already-encoded blob (the caller registered its
+        allocation; the streamer frees it once fully sent)."""
         sid = uuid.uuid4().bytes
-        blob = ser.serialize_container(sd)  # registers full-blob alloc
         seq = 0
         for part, last in _chunk_iter(blob, self.chunk_size):
             self.driver.send(Chunk(sid, seq, part, FLAG_EOF if last else 0))
@@ -299,20 +366,28 @@ class ObjectStreamer:
         mem.record_free(len(blob))
         return sid
 
+    def send_container(self, sd: Mapping[str, Any]) -> bytes:
+        return self.send_blob(ser.serialize_container(sd))  # registers full-blob alloc
+
 
 class ContainerStreamer:
-    """Paper §III: serialize **one parameter-dict item at a time**."""
+    """Paper §III: transmit **one parameter-dict item at a time**."""
 
     def __init__(self, driver: Driver, chunk_size: int = DEFAULT_CHUNK_SIZE) -> None:
         self.driver = driver
         self.chunk_size = chunk_size
 
-    def send_container(self, sd: Mapping[str, Any]) -> bytes:
+    def send_items(self, items: Iterable[tuple[str, bytes]], total: int) -> bytes:
+        """Stream ``total`` pre-encoded items, framing item boundaries.
+
+        The item source is any (name, bytes) iterator — the plain
+        serialization codec or a wire pipeline's envelope encoder — and
+        is consumed lazily, so peak live bytes stays ~one encoded item.
+        """
         sid = uuid.uuid4().bytes
         seq = 0
-        names = list(sd.keys())
-        for i, (name, item) in enumerate(ser.iter_serialized_items(sd)):
-            last_item = i == len(names) - 1
+        for i, (_name, item) in enumerate(items):
+            last_item = i == total - 1
             for part, item_last in _chunk_iter(item, self.chunk_size):
                 flags = 0
                 if item_last:
@@ -322,6 +397,9 @@ class ContainerStreamer:
                 self.driver.send(Chunk(sid, seq, part, flags))
                 seq += 1
         return sid
+
+    def send_container(self, sd: Mapping[str, Any]) -> bytes:
+        return self.send_items(ser.iter_serialized_items(sd), len(sd))
 
 
 class FileStreamer:
@@ -362,7 +440,7 @@ class ObjectRetriever:
 
     def __init__(self, chunk_size: int = DEFAULT_CHUNK_SIZE) -> None:
         self.chunk_size = chunk_size
-        self._registry: Dict[str, Tuple[str, Any]] = {}
+        self._registry: dict[str, tuple[str, Any]] = {}
 
     def register_container(self, obj_id: str, sd: Mapping[str, Any]) -> str:
         self._registry[obj_id] = ("container", sd)

@@ -6,7 +6,6 @@ standard label-skew analogue for LM streams.
 """
 from __future__ import annotations
 
-from typing import List
 
 import numpy as np
 
@@ -15,7 +14,7 @@ from repro.data.pipeline import SyntheticLMDataset
 
 def iid_partition(
     vocab_size: int, seq_len: int, num_clients: int, *, seed: int = 0
-) -> List[SyntheticLMDataset]:
+) -> list[SyntheticLMDataset]:
     """Every client samples the same chain (different streams)."""
     return [
         SyntheticLMDataset(vocab_size, seq_len, seed=seed, num_modes=1, mode=0)
@@ -31,7 +30,7 @@ def dirichlet_partition(
     alpha: float = 0.5,
     num_modes: int = 4,
     seed: int = 0,
-) -> List[SyntheticLMDataset]:
+) -> list[SyntheticLMDataset]:
     """Each client's stream comes from a Dirichlet-sampled dominant mode."""
     rng = np.random.default_rng(seed)
     out = []

@@ -14,7 +14,7 @@ bit-identical to dequantize-then-average (tests assert this).
 """
 from __future__ import annotations
 
-from typing import Any, Dict, List, Tuple
+from typing import Any
 
 import jax.numpy as jnp
 import numpy as np
@@ -28,7 +28,7 @@ class FedAvgAggregator:
     """Sample-weighted incremental FedAvg at original precision."""
 
     def __init__(self) -> None:
-        self._sum: Dict[str, np.ndarray] = {}
+        self._sum: dict[str, np.ndarray] = {}
         self._weight = 0.0
         self.accepted = 0
 
@@ -53,7 +53,7 @@ class FedAvgAggregator:
         else:
             self._sum[name] = arr
 
-    def finish(self) -> Dict[str, np.ndarray]:
+    def finish(self) -> dict[str, np.ndarray]:
         if self._weight <= 0:
             raise RuntimeError("no results accepted")
         out = {name: (arr / self._weight).astype(np.float32) for name, arr in self._sum.items()}
@@ -71,7 +71,7 @@ class QuantizedFedAvgAggregator:
     """
 
     def __init__(self) -> None:
-        self._q: Dict[str, List[Tuple[QuantizedTensor, float]]] = {}
+        self._q: dict[str, list[tuple[QuantizedTensor, float]]] = {}
         self._plain = FedAvgAggregator()
         self._plain_names: set[str] = set()
         self._weight = 0.0
@@ -92,8 +92,8 @@ class QuantizedFedAvgAggregator:
         self._weight += w
         self.accepted += 1
 
-    def finish(self) -> Dict[str, np.ndarray]:
-        out: Dict[str, np.ndarray] = {}
+    def finish(self) -> dict[str, np.ndarray]:
+        out: dict[str, np.ndarray] = {}
         for name, contribs in self._q.items():
             qs = jnp.stack([np.asarray(qt.payload) for qt, _ in contribs])
             ams = jnp.stack([np.asarray(qt.absmax) for qt, _ in contribs])

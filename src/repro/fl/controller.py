@@ -9,7 +9,8 @@ drivers, or the mesh view.
 """
 from __future__ import annotations
 
-from typing import Any, Callable, Dict, List, Mapping, Optional, Sequence
+from collections.abc import Callable, Mapping, Sequence
+from typing import Any, Optional
 
 from repro.core.messages import Message, MessageKind
 
@@ -43,7 +44,7 @@ class ScatterAndGather:
         clients: Sequence[ClientProxy],
         aggregator: Any,
         num_rounds: int,
-        on_round_end: Optional[Callable[[int, Dict[str, Any], List[Message]], None]] = None,
+        on_round_end: Optional[Callable[[int, dict[str, Any], list[Message]], None]] = None,
     ) -> None:
         if not clients:
             raise ValueError("need at least one client")
@@ -52,13 +53,13 @@ class ScatterAndGather:
         self.num_rounds = num_rounds
         self.on_round_end = on_round_end
 
-    def run(self, initial_weights: Dict[str, Any]) -> Dict[str, Any]:
+    def run(self, initial_weights: dict[str, Any]) -> dict[str, Any]:
         """The Controller's run() method (paper §II-A): task distribution
 
         and aggregation of returns."""
         global_weights = dict(initial_weights)
         for rnd in range(self.num_rounds):
-            results: List[Message] = []
+            results: list[Message] = []
             for client in self.clients:
                 task = make_task(rnd, global_weights)
                 result = client.submit_task(task)

@@ -7,7 +7,8 @@ filters, quantization or streaming.
 """
 from __future__ import annotations
 
-from typing import Any, Callable, Dict, Tuple
+from collections.abc import Callable
+from typing import Any
 
 from repro.core.messages import Message, MessageKind
 
@@ -19,7 +20,7 @@ class Executor:
         raise NotImplementedError
 
 
-TrainFn = Callable[[Dict[str, Any], int], Tuple[Dict[str, Any], int, Dict[str, float]]]
+TrainFn = Callable[[dict[str, Any], int], tuple[dict[str, Any], int, dict[str, float]]]
 
 
 class TrainExecutor(Executor):
@@ -45,7 +46,9 @@ class TrainExecutor(Executor):
 class EvalExecutor(Executor):
     """Evaluation-only client: returns metrics, no weights."""
 
-    def __init__(self, name: str, eval_fn: Callable[[Dict[str, Any], int], Dict[str, float]]) -> None:
+    def __init__(
+        self, name: str, eval_fn: Callable[[dict[str, Any], int], dict[str, float]]
+    ) -> None:
         self.name = name
         self.eval_fn = eval_fn
 

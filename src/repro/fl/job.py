@@ -11,11 +11,13 @@ only the job spec.
       "arch": "llama3.2-1b", "smoke": true,
       "rounds": 5, "local_steps": 4, "batch": 8, "seq": 64, "lr": 3e-3,
       "clients": 3, "partition": "dirichlet", "alpha": 0.5,
-      "quantization": {"fmt": "blockwise8", "error_feedback": false},
-      "dp_sigma": 0.0,
+      "pipeline": {                      # per-direction wire stacks, by name
+        "task_data_out": ["quantize:nf4", "zlib"],
+        "task_result_out": ["quantize:nf4", "zlib", "crc32"]
+      },
       "transmission": "container", "driver": "loopback", "chunk_mb": 1,
       "runtime": {                       # optional: async scenario engine
-        "policy": "fedasync",            # sync | fedbuff | fedasync | tiered
+        "policy": "fedasync",            # any registered policy name
         "max_concurrency": 8, "dropout_prob": 0.1, "max_retries": 2,
         "total_tasks": 15,               # fedasync/fedbuff task budget
         "network": {"kind": "hetero", "tiers": ["fiber", "lte", "3g"]},
@@ -25,15 +27,28 @@ only the job spec.
     }
     result = run_job(spec)
 
-With ``"quantization": {"fmt": "adaptive"}`` and a runtime network, each
-client's wire precision tracks its simulated link (slow links get
-8-bit/NF4, fast links fp16/fp32) — see ``result["adaptive_fmts"]``.
+``"pipeline"`` entries are registered stage specs
+(:mod:`repro.core.pipeline`): strings like ``"quantize:nf4"`` /
+``"zlib:9"`` or dicts like ``{"stage": "adaptive", "budget_s": 0.5}``;
+stage transforms run per item inside the streaming loop, so a
+container-streamed quantized+compressed hop peaks at ~one item of
+transmission memory. Policy names resolve through the runtime's policy
+registry, driver names through the streaming driver registry — third-
+party stages/drivers/policies plug in by registering, no job.py edits.
+
+The older ``"quantization"``/``"dp_sigma"`` keys still work and build
+the legacy Filter chains (adapted through the deprecated whole-message
+shim); they are mutually exclusive with ``"pipeline"``. With
+``{"fmt": "adaptive"}`` (or an ``"adaptive"`` pipeline stage) and a
+runtime network, each client's wire precision tracks its simulated link
+(slow links get 8-bit/NF4, fast links fp16/fp32) — see
+``result["adaptive_fmts"]``.
 """
 from __future__ import annotations
 
 import dataclasses
 import json
-from typing import Any, Dict, List, Optional
+from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
@@ -50,6 +65,7 @@ from repro.core.filters import (
     QuantizeFilter,
     no_filters,
 )
+from repro.core.pipeline import AdaptiveQuantizeStage, build_pipeline
 from repro.data import dirichlet_partition, iid_partition
 from repro.fl.aggregator import FedAvgAggregator, QuantizedFedAvgAggregator
 from repro.fl.executor import TrainExecutor
@@ -58,7 +74,7 @@ from repro.models import create_model
 from repro.optim import adamw_init, adamw_update
 from repro.utils.trees import flatten_state_dict, unflatten_state_dict
 
-DEFAULTS: Dict[str, Any] = {
+DEFAULTS: dict[str, Any] = {
     "smoke": True,
     "rounds": 5,
     "local_steps": 4,
@@ -70,6 +86,7 @@ DEFAULTS: Dict[str, Any] = {
     "alpha": 0.5,
     "quantization": None,
     "dp_sigma": 0.0,
+    "pipeline": None,
     "transmission": "container",
     "driver": "loopback",
     "chunk_mb": 1,
@@ -78,10 +95,8 @@ DEFAULTS: Dict[str, Any] = {
     "seed": 0,
 }
 
-RUNTIME_POLICIES = ("sync", "fedbuff", "fedasync", "tiered")
 
-
-def _adaptive_filter(q: Dict[str, Any], network: Optional[Any]) -> AdaptiveQuantizeFilter:
+def _adaptive_filter(q: dict[str, Any], network: Optional[Any]) -> AdaptiveQuantizeFilter:
     f = AdaptiveQuantizeFilter(
         bandwidth_bps=float(q.get("bandwidth_mbps", 80.0)) * 1e6,  # wifi-class fallback
         budget_s=float(q.get("budget_s", 1.0)),
@@ -92,11 +107,65 @@ def _adaptive_filter(q: Dict[str, Any], network: Optional[Any]) -> AdaptiveQuant
     return f
 
 
-def _build_filters(spec: Dict[str, Any], network: Optional[Any] = None):
+_PIPELINE_DIRECTIONS = {
+    # canonical hop names + legacy four-point OUT aliases
+    "task_data": "task_data",
+    "task_data_out": "task_data",
+    "task_result": "task_result",
+    "task_result_out": "task_result",
+}
+
+
+def _build_pipelines(spec: dict[str, Any], network: Optional[Any]):
+    """Translate the ``"pipeline"`` spec block into FLSimulator pipelines.
+
+    Returns (pipelines dict, adaptive stages found) — adaptive stages get
+    the runtime network bound so per-client precision tracks the
+    simulated link, and are reported in ``result["adaptive_fmts"]``.
+    """
+    p = spec["pipeline"]
+    if spec.get("quantization") or spec.get("dp_sigma"):
+        raise ValueError(
+            '"pipeline" replaces the legacy "quantization"/"dp_sigma" keys; '
+            'declare those transforms as stages (e.g. "quantize:nf4", '
+            '{"stage": "dp-noise", "sigma": 0.01})'
+        )
+    unknown = set(p) - set(_PIPELINE_DIRECTIONS)
+    if unknown:
+        raise ValueError(
+            f"unknown pipeline directions {sorted(unknown)}; "
+            f"valid: {sorted(_PIPELINE_DIRECTIONS)}"
+        )
+    specs: dict[str, list[Any]] = {"task_data": [], "task_result": []}
+    for key, stages in p.items():
+        specs[_PIPELINE_DIRECTIONS[key]] += list(stages or [])
+    # quantized server-side aggregation consumes wire-form (QuantizedTensor)
+    # payloads: leave the uplink undecoded
+    keep_wire = bool(spec.get("server_quantized_aggregation"))
+    pipelines = {
+        "task_data": build_pipeline(specs["task_data"]),
+        "task_result": build_pipeline(specs["task_result"], decode_values=not keep_wire),
+    }
+    adaptive: list[AdaptiveQuantizeStage] = []
+    for pl in pipelines.values():
+        for stage in pl.stages:
+            if isinstance(stage, AdaptiveQuantizeStage):
+                if keep_wire:
+                    raise ValueError(
+                        "server_quantized_aggregation does not compose with the "
+                        "adaptive stage: clients may ship mixed formats"
+                    )
+                if network is not None:
+                    stage.bind_network(network)
+                adaptive.append(stage)
+    return pipelines, adaptive
+
+
+def _build_filters(spec: dict[str, Any], network: Optional[Any] = None):
     """Two-way scheme (+optional EF / DP / link-adaptive) from the job spec."""
     server = no_filters()
     client = no_filters()
-    adaptive: List[AdaptiveQuantizeFilter] = []
+    adaptive: list[AdaptiveQuantizeFilter] = []
     q = spec.get("quantization")
     if q:
         fmt = q["fmt"]
@@ -122,7 +191,7 @@ def _build_filters(spec: Dict[str, Any], network: Optional[Any] = None):
                 return QuantizeFilter(fmt)
         server[FilterPoint.TASK_DATA_OUT] = FilterChain([mk()])
         client[FilterPoint.TASK_DATA_IN] = FilterChain([DequantizeFilter()])
-        out_chain: List[Any] = []
+        out_chain: list[Any] = []
         if spec.get("dp_sigma"):
             out_chain.append(DPGaussianNoiseFilter(spec["dp_sigma"], seed=spec["seed"]))
         out_chain.append(mk())
@@ -137,27 +206,23 @@ def _build_filters(spec: Dict[str, Any], network: Optional[Any] = None):
 
 
 def _build_runtime(
-    spec: Dict[str, Any], aggregator: Any, client_names: List[str]
-) -> Dict[str, Any]:
+    spec: dict[str, Any], aggregator: Any, client_names: list[str]
+) -> dict[str, Any]:
     """Translate the ``"runtime"`` spec block into FLSimulator kwargs."""
     r = spec.get("runtime")
     if not r:
         return {}
     # imported lazily, same circularity constraint as fl.simulator
     from repro.runtime import (
-        FedAsyncPolicy,
-        FedBuffPolicy,
         RuntimeConfig,
-        TieredPolicy,
         availability_from_spec,
         network_from_spec,
         polynomial_staleness,
     )
+    from repro.runtime.async_agg import build_policy
 
     r = dict(r)
     policy_name = r.get("policy", "sync")
-    if policy_name not in RUNTIME_POLICIES:
-        raise ValueError(f"unknown runtime policy {policy_name!r}; pick from {RUNTIME_POLICIES}")
     if policy_name in ("fedbuff", "fedasync") and spec.get("server_quantized_aggregation"):
         # these policies aggregate deltas/weights directly (not through the
         # aggregator) and skip QuantizedTensor payload items — quantized
@@ -178,31 +243,18 @@ def _build_runtime(
         dropout_prob=float(r.get("dropout_prob", 0.0)),
         max_retries=int(r.get("max_retries", 2)),
     )
-    total_tasks = int(r.get("total_tasks", spec["rounds"] * len(client_names)))
-    staleness = polynomial_staleness(float(r.get("staleness_alpha", 0.5)))
-    policy: Optional[Any] = None  # sync: FLSimulator's default SyncPolicy
-    if policy_name == "fedbuff":
-        policy = FedBuffPolicy(
-            total_tasks,
-            buffer_size=int(r.get("buffer_size", 4)),
-            server_lr=float(r.get("server_lr", 1.0)),
-            staleness_weight=staleness,
-        )
-    elif policy_name == "fedasync":
-        policy = FedAsyncPolicy(
-            total_tasks,
-            mixing_rate=float(r.get("mixing_rate", 0.6)),
-            staleness_weight=staleness,
-        )
-    elif policy_name == "tiered":
-        policy = TieredPolicy(
-            aggregator,
-            spec["rounds"],
-            num_tiers=int(r.get("num_tiers", 3)),
-            network=network,
-            credits=r.get("credits"),
-            seed=seed,
-        )
+    # policy names resolve through the runtime's registry (sync -> None ->
+    # the scheduler's default SyncPolicy), so registered third-party
+    # policies are addressable from specs without touching this module
+    policy = build_policy(policy_name, r, {
+        "aggregator": aggregator,
+        "rounds": spec["rounds"],
+        "client_names": client_names,
+        "network": network,
+        "seed": seed,
+        "total_tasks": int(r.get("total_tasks", spec["rounds"] * len(client_names))),
+        "staleness": polynomial_staleness(float(r.get("staleness_alpha", 0.5))),
+    })
     return {
         "runtime": config,
         "policy": policy,
@@ -215,13 +267,15 @@ def _build_runtime(
 class Job:
     """A fully-constructed federation, ready to run (or inspect)."""
 
-    spec: Dict[str, Any]
+    spec: dict[str, Any]
     sim: FLSimulator
-    init_weights: Dict[str, Any]
-    history: List[float]
-    adaptive_filters: List[AdaptiveQuantizeFilter]
+    init_weights: dict[str, Any]
+    history: list[float]
+    # legacy AdaptiveQuantizeFilter instances or adaptive pipeline stages —
+    # anything exposing last_fmt_by_client
+    adaptive_filters: list[Any]
 
-    def run(self) -> Dict[str, Any]:
+    def run(self) -> dict[str, Any]:
         final = self.sim.run(self.init_weights)
         out = {
             "final_weights": final,
@@ -234,14 +288,14 @@ class Job:
             out["runtime_stats"] = dataclasses.asdict(self.sim.scheduler.stats)
             out["policy"] = self.sim.scheduler.policy.name
         if self.adaptive_filters:
-            fmts: Dict[str, str] = {}
+            fmts: dict[str, str] = {}
             for f in self.adaptive_filters:
                 fmts.update(f.last_fmt_by_client)
             out["adaptive_fmts"] = fmts
         return out
 
 
-def build_job(spec: Dict[str, Any]) -> Job:
+def build_job(spec: dict[str, Any]) -> Job:
     """Construct the federation a spec describes, without running it.
 
     ``run_job`` is exactly ``build_job(spec).run()`` — tests use this to
@@ -264,7 +318,7 @@ def build_job(spec: Dict[str, Any]) -> Job:
         params, opt, _ = adamw_update(params, grads, opt, jnp.float32(spec["lr"]))
         return params, opt, loss
 
-    history: List[float] = []
+    history: list[float] = []
 
     def make_client(name, data):
         def train_fn(flat_params, rnd):
@@ -284,13 +338,19 @@ def build_job(spec: Dict[str, Any]) -> Job:
     client_names = [f"site-{i}" for i in range(len(datasets))]
     agg = (
         QuantizedFedAvgAggregator()
-        if spec.get("server_quantized_aggregation") and spec.get("quantization")
+        if spec.get("server_quantized_aggregation")
+        and (spec.get("quantization") or spec.get("pipeline"))
         else FedAvgAggregator()
     )
     runtime_kwargs = _build_runtime(spec, agg, client_names)
-    server_filters, client_filters, adaptive = _build_filters(
-        spec, network=runtime_kwargs.get("network")
-    )
+    if spec.get("pipeline"):
+        pipelines, adaptive = _build_pipelines(spec, runtime_kwargs.get("network"))
+        wire_kwargs: dict[str, Any] = {"pipelines": pipelines}
+    else:
+        server_filters, client_filters, adaptive = _build_filters(
+            spec, network=runtime_kwargs.get("network")
+        )
+        wire_kwargs = {"server_filters": server_filters, "client_filters": client_filters}
     sim = FLSimulator(
         [make_client(n, d) for n, d in zip(client_names, datasets)],
         agg,
@@ -300,18 +360,17 @@ def build_job(spec: Dict[str, Any]) -> Job:
             chunk_size=int(spec["chunk_mb"] * (1 << 20)),
             driver=spec["driver"],
         ),
-        server_filters=server_filters,
-        client_filters=client_filters,
+        **wire_kwargs,
         **runtime_kwargs,
     )
     init = flatten_state_dict(model.init(jax.random.PRNGKey(spec["seed"])))
     return Job(spec, sim, init, history, adaptive)
 
 
-def run_job(spec: Dict[str, Any]) -> Dict[str, Any]:
+def run_job(spec: dict[str, Any]) -> dict[str, Any]:
     return build_job(spec).run()
 
 
-def run_job_file(path: str) -> Dict[str, Any]:
+def run_job_file(path: str) -> dict[str, Any]:
     with open(path) as fh:
         return run_job(json.load(fh))

@@ -1,9 +1,32 @@
-"""In-process FL simulator: wires Controller, Executors, the four filter
-
-points and the streaming transport into one runnable federation —
+"""In-process FL simulator: wires Controller, Executors, the wire
+pipelines and the streaming transport into one runnable federation —
 NVFlare's simulator analogue. Every message physically crosses the
-streaming layer (serialized, framed, chunked, reassembled), so byte
-counts and peak transmission memory are real, not estimated.
+streaming layer (encoded, framed, chunked, reassembled), so byte counts
+and peak transmission memory are real, not estimated.
+
+Message transforms are :class:`~repro.core.pipeline.WirePipeline` stacks,
+one per hop direction (``task_data`` server->client, ``task_result``
+client->server); stages execute *inside* the streaming loop, so a
+container-streamed quantized+compressed transfer peaks at ~one item of
+transmission memory. The legacy four-point ``Filter``/``FilterChain``
+configuration (``server_filters=``/``client_filters=``) still works — it
+is adapted onto whole-message pipeline stages via
+:func:`~repro.core.pipeline.legacy_wire_pipelines`, bitwise identical
+but materializing the full transformed payload (deprecated; prefer
+``pipelines=``).
+
+Wire accounting is honest: :class:`TrafficStats` counts every byte that
+crosses a driver — frame headers, pipeline envelopes, and the
+transmitted message-header item included — not just tensor payloads, so
+compression stages report true ratios and the async runtime's simulated
+transfer times are driven by real bytes (retransmissions included).
+
+Chunk-level fault injection composes underneath: set
+``chunk_drop_prob``/``chunk_dup_prob``/``chunk_reorder_window`` on
+:class:`SimulationConfig` and every hop runs through
+:class:`~repro.core.resilience.LossyDriver` +
+:class:`~repro.core.resilience.ReliableTransfer`, with retransmitted
+chunks feeding back into the byte counts (and hence simulated time).
 
 Two runtimes drive the same proxies:
 
@@ -16,16 +39,23 @@ Two runtimes drive the same proxies:
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import threading
-from typing import Any, Callable, Dict, List, Optional, Sequence
+from collections.abc import Callable, Sequence
+from typing import Any, Optional, Union
 
+from repro.core import resilience as rs
 from repro.core import streaming as sm
 from repro.core.filters import FilterChain, FilterPoint, no_filters
 from repro.core.messages import Message
+from repro.core.pipeline import StageSpec, WirePipeline, legacy_wire_pipelines
 from repro.fl.controller import ClientProxy, ScatterAndGather
 from repro.fl.executor import Executor
+from repro.utils import mem
 from repro.utils.mem import MemoryMeter
+
+PipelineLike = Union[WirePipeline, list[StageSpec], None]
 
 
 @dataclasses.dataclass
@@ -33,13 +63,37 @@ class SimulationConfig:
     num_rounds: int = 1
     transmission: str = "container"     # regular | container | file
     chunk_size: int = sm.DEFAULT_CHUNK_SIZE
-    driver: str = "loopback"            # loopback | tcp | spool
+    driver: str = "loopback"            # any registered driver name
     spool_dir: Optional[str] = None
+    # chunk-level fault injection (loopback/spool drivers): every hop then
+    # runs LossyDriver + ReliableTransfer, and retransmitted chunks are
+    # counted into the wire bytes that drive simulated transfer time
+    chunk_drop_prob: float = 0.0
+    chunk_dup_prob: float = 0.0
+    chunk_reorder_window: int = 0
+    fault_seed: int = 0
+    max_repair_rounds: int = 40
+
+    @property
+    def faulty(self) -> bool:
+        return (
+            self.chunk_drop_prob > 0
+            or self.chunk_dup_prob > 0
+            or self.chunk_reorder_window > 0
+        )
 
 
 @dataclasses.dataclass
 class TrafficStats:
-    """Wire-level message/byte counters.
+    """Wire-level counters.
+
+    ``bytes_sent`` is **true bytes on the wire**: frame headers, pipeline
+    envelopes, the transmitted message-header item, and chunk
+    retransmissions all included — what a packet capture would total.
+    ``payload_bytes`` is the logical **pre-transform** tensor-payload
+    size (before any quantize/compress stage or legacy filter ran), so
+    ``bytes_sent / payload_bytes`` is the honest end-to-end wire ratio
+    on both the pipeline and legacy-shim paths.
 
     Thread-safe: the async runtime transmits from a pool of worker
     threads, so ``add`` must be atomic (a bare ``+=`` on two fields loses
@@ -48,110 +102,203 @@ class TrafficStats:
 
     messages: int = 0
     bytes_sent: int = 0
+    payload_bytes: int = 0
+    retransmits: int = 0
 
     def __post_init__(self) -> None:
         self._lock = threading.Lock()
 
-    def add(self, nbytes: int) -> None:
+    def add(self, nbytes: int, payload_nbytes: int = 0, retransmits: int = 0) -> None:
         with self._lock:
             self.messages += 1
-            self.bytes_sent += nbytes
+            self.bytes_sent += int(nbytes)
+            self.payload_bytes += int(payload_nbytes)
+            self.retransmits += int(retransmits)
+
+
+class CountingDriver(sm.Driver):
+    """Transparent driver wrapper totalling encoded frame bytes — the
+    sender's egress NIC view: dropped chunks were still transmitted,
+    retransmissions count again, network-made duplicates don't."""
+
+    def __init__(self, inner: sm.Driver) -> None:
+        self.inner = inner
+        self.bytes_sent = 0
+
+    def connect(self, on_chunk: Callable[[sm.Chunk], None]) -> None:
+        self.inner.connect(on_chunk)
+
+    def send(self, chunk: sm.Chunk) -> None:
+        self.bytes_sent += sm._HDR.size + len(chunk.payload)
+        self.inner.send(chunk)
+
+    def flush(self) -> None:
+        if hasattr(self.inner, "flush"):
+            self.inner.flush()
+
+    def close(self) -> None:
+        self.inner.close()
 
 
 class _Wire:
-    """One filtered, streamed hop: serialize -> frames -> reassemble.
+    """One pipelined, streamed hop: stage-encode -> frames -> reassemble
+    -> stage-decode, all inside the streaming loop.
 
-    Stateless per transmit (a fresh driver/receiver pair each call), so
+    Stateless per transmit (a fresh driver/receiver/decoder per call), so
     concurrent transmits from different scheduler threads don't share
-    buffers.
+    buffers. Stateful pipelines additionally serialize their encode/
+    decode under the caller-provided lock.
     """
 
     def __init__(self, cfg: SimulationConfig, stats: TrafficStats) -> None:
         self.cfg = cfg
         self.stats = stats
+        if cfg.faulty and cfg.driver == "tcp":
+            raise ValueError(
+                "chunk fault injection is not supported over the tcp driver "
+                "(its receiver thread stops at EOF, so gap repair cannot "
+                "complete); use loopback or spool"
+            )
 
     def _driver(self) -> sm.Driver:
-        if self.cfg.driver == "tcp":
-            return sm.TCPDriver()
+        kwargs: dict[str, Any] = {}
         if self.cfg.driver == "spool":
             assert self.cfg.spool_dir is not None
-            return sm.FileSpoolDriver(self.cfg.spool_dir)
-        return sm.LoopbackDriver()
+            kwargs["spool_dir"] = self.cfg.spool_dir
+        return sm.make_driver(self.cfg.driver, **kwargs)
 
-    def transmit(self, message: Message) -> Message:
-        self.stats.add(message.payload_bytes())
-        driver = self._driver()
-        if self.cfg.transmission == "regular":
-            recv: Any = sm.BlobReceiver()
-            driver.connect(recv.on_chunk)
-            sm.ObjectStreamer(driver, self.cfg.chunk_size).send_container(message.payload)
+    def _fault_key(self, message: Message) -> str:
+        # stable across runs and thread interleavings: keyed by message
+        # identity, not by wall-clock send order
+        h = message.headers
+        return (
+            f"wirefault:{self.cfg.fault_seed}:{h.get('client', '')}:"
+            f"{message.kind.value}:{h.get('round', h.get('model_version', ''))}"
+        )
+
+    def transmit(
+        self,
+        message: Message,
+        pipeline: WirePipeline,
+        lock: Optional[threading.Lock] = None,
+    ) -> tuple[Message, int]:
+        """Send ``message`` through ``pipeline`` over one fresh driver;
+        returns the received message and the true bytes put on the wire.
+        """
+        cfg = self.cfg
+        base = self._driver()
+        if cfg.faulty:
+            base = rs.LossyDriver(
+                base,
+                drop_prob=cfg.chunk_drop_prob,
+                dup_prob=cfg.chunk_dup_prob,
+                reorder_window=cfg.chunk_reorder_window,
+                seed=self._fault_key(message),
+            )
+        driver = CountingDriver(base)
+        decoder = pipeline.decoder()
+        regular = cfg.transmission == "regular"
+        if regular:
+            recv: Any = sm.BlobReceiver(decode_container=decoder.decode_blob)
         else:
             # container streaming is also the carrier for "file" payloads in
             # the simulator; true file transfer is exercised by FileStreamer
             # paths in the streaming demo / Table III benchmark.
-            recv = sm.ContainerReceiver()
-            driver.connect(recv.on_chunk)
-            sm.ContainerStreamer(driver, self.cfg.chunk_size).send_container(message.payload)
-        if isinstance(driver, sm.FileSpoolDriver):
-            driver.flush()
-        driver.close()
-        payload = recv.result
-        return Message(message.kind, payload, dict(message.headers))
+            recv = sm.ContainerReceiver(consume=decoder.on_item,
+                                        decode_item=decoder.decode_item)
+        hold = lock if (lock is not None and pipeline.stateful) else contextlib.nullcontext()
+        with hold:
+            msg, ctx = pipeline.begin_encode(message)
+            held = int(ctx.state.get("held_bytes", 0))
+            if held:  # legacy whole-message transform: charge the full payload
+                mem.record_alloc(held)
+            try:
+                if cfg.faulty:
+                    xfer = rs.ReliableTransfer(driver, cfg.chunk_size)
+                    if regular:
+                        ok = xfer.send_blob(pipeline.encode_blob(msg, ctx), recv,
+                                            max_rounds=cfg.max_repair_rounds)
+                    else:
+                        ok = xfer.send_items(pipeline.iter_encode(msg, ctx),
+                                             pipeline.n_items(msg), recv,
+                                             max_rounds=cfg.max_repair_rounds)
+                    retransmits = xfer.retransmits
+                    if not ok:
+                        raise RuntimeError(
+                            f"wire stream failed to complete within "
+                            f"{cfg.max_repair_rounds} repair rounds "
+                            f"(chunk_drop_prob={cfg.chunk_drop_prob})"
+                        )
+                else:
+                    retransmits = 0
+                    driver.connect(recv.on_chunk)
+                    if regular:
+                        sm.ObjectStreamer(driver, cfg.chunk_size).send_blob(
+                            pipeline.encode_blob(msg, ctx)
+                        )
+                    else:
+                        sm.ContainerStreamer(driver, cfg.chunk_size).send_items(
+                            pipeline.iter_encode(msg, ctx), pipeline.n_items(msg)
+                        )
+                    driver.flush()  # no-op unless a spool driver is underneath
+                driver.close()
+            finally:
+                if held:
+                    mem.record_free(held)
+            out = decoder.finish(msg.kind, pipeline.unsent_headers(msg))
+        # payload_bytes is the *pre-transform* logical size on both wire
+        # paths (the legacy shim replaces msg's payload in begin_encode),
+        # so bytes_sent / payload_bytes is an honest end-to-end ratio
+        self.stats.add(driver.bytes_sent, message.payload_bytes(), retransmits)
+        return out, driver.bytes_sent
 
 
 class _SimClientProxy(ClientProxy):
-    """Server-side handle for one simulated client; runs the full filtered
+    """Server-side handle for one simulated client; runs the full
+    pipelined round trip (both hop directions) over the wire.
 
-    round trip (the four filter points of paper §II-B) over the wire.
-
-    ``filter_lock`` (async runtime only) serializes filter processing so
-    stateful filters (error feedback, DP noise) stay consistent under
-    concurrent round trips; the wire transfers themselves run unlocked.
+    ``filter_lock`` (async runtime only) serializes stateful pipelines
+    (error feedback, DP noise, legacy filter stages) so their state stays
+    consistent under concurrent round trips; stateless pipelines stream
+    fully concurrently.
     """
 
     def __init__(
         self,
         executor: Executor,
-        server_filters: Dict[FilterPoint, FilterChain],
-        client_filters: Dict[FilterPoint, FilterChain],
+        pipelines: dict[str, WirePipeline],
         wire: _Wire,
         filter_lock: Optional[threading.Lock] = None,
     ) -> None:
         self.name = executor.name
         self.executor = executor
-        self.server_filters = server_filters
-        self.client_filters = client_filters
+        self.pipelines = pipelines
         self.wire = wire
         self.filter_lock = filter_lock
 
-    def _filter(self, chain: FilterChain, message: Message) -> Message:
-        if self.filter_lock is None:
-            return chain.process(message)
-        with self.filter_lock:
-            return chain.process(message)
-
     def submit_task(self, task: Message) -> Message:
-        # destination goes in the headers so egress filters can be
-        # link-aware (AdaptiveQuantizeFilter picks per-client precision)
+        # destination goes in the headers so egress stages can be
+        # link-aware (the adaptive stage picks per-client precision)
         task.headers.setdefault("client", self.name)
-        # 1. before Task Data leaves server
-        task = self._filter(self.server_filters[FilterPoint.TASK_DATA_OUT], task)
-        wire_bytes_down = task.payload_bytes()
-        task = self.wire.transmit(task)
-        # 2. before client accepts Task Data
-        task = self._filter(self.client_filters[FilterPoint.TASK_DATA_IN], task)
+        task, wire_bytes_down = self.wire.transmit(
+            task, self.pipelines["task_data"], self.filter_lock
+        )
         result = self.executor.execute(task)
-        # 3. before Task Result leaves client
-        result = self._filter(self.client_filters[FilterPoint.TASK_RESULT_OUT], result)
-        wire_bytes_up = result.payload_bytes()
-        result = self.wire.transmit(result)
-        # 4. before server accepts Task Result
-        result = self._filter(self.server_filters[FilterPoint.TASK_RESULT_IN], result)
-        # actual on-the-wire sizes of both hops, for the runtime's network
-        # model (quantized payloads => measurably shorter simulated rounds)
+        result, wire_bytes_up = self.wire.transmit(
+            result, self.pipelines["task_result"], self.filter_lock
+        )
+        # actual on-the-wire sizes of both hops (frames + envelopes +
+        # retransmissions), for the runtime's network model: quantized or
+        # compressed payloads => measurably shorter simulated rounds
         result.headers["wire_bytes_down"] = wire_bytes_down
         result.headers["wire_bytes_up"] = wire_bytes_up
         return result
+
+
+def _as_pipeline(value: PipelineLike) -> WirePipeline:
+    if isinstance(value, WirePipeline):
+        return value
+    return WirePipeline(list(value or []))
 
 
 class FLSimulator:
@@ -160,17 +307,40 @@ class FLSimulator:
         executors: Sequence[Executor],
         aggregator: Any,
         config: Optional[SimulationConfig] = None,
-        server_filters: Optional[Dict[FilterPoint, FilterChain]] = None,
-        client_filters: Optional[Dict[FilterPoint, FilterChain]] = None,
-        on_round_end: Optional[Callable[[int, Dict[str, Any], List[Message]], None]] = None,
+        server_filters: Optional[dict[FilterPoint, FilterChain]] = None,
+        client_filters: Optional[dict[FilterPoint, FilterChain]] = None,
+        pipelines: Optional[dict[str, PipelineLike]] = None,
+        on_round_end: Optional[Callable[[int, dict[str, Any], list[Message]], None]] = None,
         runtime: Optional[Any] = None,   # repro.runtime.RuntimeConfig -> async scheduler
         policy: Optional[Any] = None,    # repro.runtime.AggregationPolicy override
         network: Optional[Any] = None,   # repro.runtime.NetworkModel override
         availability: Optional[Any] = None,  # repro.runtime.AvailabilityTrace
     ) -> None:
+        """``pipelines`` maps hop direction -> wire stack: ``{"task_data":
+        ["quantize:nf4", "zlib"], "task_result": WirePipeline([...])}``
+        (missing directions get the identity pipeline).
+
+        ``server_filters``/``client_filters`` are the deprecated
+        four-point Filter configuration; they are adapted onto
+        whole-message pipeline stages (bitwise-identical results, but the
+        full transformed payload is materialized before streaming).
+        Mutually exclusive with ``pipelines``.
+        """
         self.config = config or SimulationConfig()
-        self.server_filters = server_filters or no_filters()
-        self.client_filters = client_filters or no_filters()
+        if pipelines is not None and (server_filters is not None or client_filters is not None):
+            raise ValueError("pass either pipelines= or the legacy *_filters=, not both")
+        if pipelines is not None:
+            self.pipelines = {
+                "task_data": _as_pipeline(pipelines.get("task_data")),
+                "task_result": _as_pipeline(pipelines.get("task_result")),
+            }
+            unknown = set(pipelines) - {"task_data", "task_result"}
+            if unknown:
+                raise ValueError(f"unknown pipeline directions {sorted(unknown)}")
+        else:
+            self.pipelines = legacy_wire_pipelines(
+                server_filters or no_filters(), client_filters or no_filters()
+            )
         self.stats = TrafficStats()
         self.meter = MemoryMeter()
         use_async = (
@@ -180,7 +350,7 @@ class FLSimulator:
         wire = _Wire(self.config, self.stats)
         filter_lock = threading.Lock() if use_async else None
         self.proxies = [
-            _SimClientProxy(ex, self.server_filters, self.client_filters, wire, filter_lock)
+            _SimClientProxy(ex, self.pipelines, wire, filter_lock)
             for ex in executors
         ]
         self.controller: Optional[ScatterAndGather] = None
@@ -203,7 +373,7 @@ class FLSimulator:
                 self.proxies, aggregator, self.config.num_rounds, on_round_end=on_round_end
             )
 
-    def run(self, initial_weights: Dict[str, Any]) -> Dict[str, Any]:
+    def run(self, initial_weights: dict[str, Any]) -> dict[str, Any]:
         driver = self.scheduler if self.scheduler is not None else self.controller
         with self.meter.activate():
             return driver.run(initial_weights)

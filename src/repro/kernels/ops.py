@@ -8,7 +8,6 @@ from __future__ import annotations
 
 import functools
 import os
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp
@@ -61,7 +60,7 @@ def get_backend() -> str:
     return "pallas" if jax.default_backend() == "tpu" else "ref"
 
 
-def _pad_to_blocks(flat: jnp.ndarray, block: int) -> Tuple[jnp.ndarray, int]:
+def _pad_to_blocks(flat: jnp.ndarray, block: int) -> tuple[jnp.ndarray, int]:
     """Pad a flat fp32 vector to a whole number of quant blocks.
 
     Wire-format padding is one block max (<=16 KiB for int8, <=256 B for
@@ -76,7 +75,7 @@ def _pad_to_blocks(flat: jnp.ndarray, block: int) -> Tuple[jnp.ndarray, int]:
     return flat.reshape(padded // block, block), n
 
 
-def _pad_rows(x2d: jnp.ndarray, row_multiple: int) -> Tuple[jnp.ndarray, int]:
+def _pad_rows(x2d: jnp.ndarray, row_multiple: int) -> tuple[jnp.ndarray, int]:
     nblocks = x2d.shape[0]
     padded = int(np.ceil(nblocks / row_multiple)) * row_multiple
     if padded != nblocks:
@@ -88,7 +87,7 @@ def _pad_rows(x2d: jnp.ndarray, row_multiple: int) -> Tuple[jnp.ndarray, int]:
 # blockwise int8
 # ---------------------------------------------------------------------------
 
-def quantize_blockwise8(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+def quantize_blockwise8(x: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Any-shape float array -> ((nblocks, 4096) int8, (nblocks,) absmax)."""
     x2d, _ = _pad_to_blocks(x.reshape(-1).astype(jnp.float32), BLOCK8)
     backend = get_backend()
@@ -100,7 +99,9 @@ def quantize_blockwise8(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
     return q[:nblocks], am[:nblocks]
 
 
-def dequantize_blockwise8(q: jnp.ndarray, absmax: jnp.ndarray, shape, dtype=jnp.float32) -> jnp.ndarray:
+def dequantize_blockwise8(
+    q: jnp.ndarray, absmax: jnp.ndarray, shape, dtype=jnp.float32
+) -> jnp.ndarray:
     backend = get_backend()
     if backend == "ref":
         out = _REF_D8(q, absmax)
@@ -118,7 +119,7 @@ def dequantize_blockwise8(q: jnp.ndarray, absmax: jnp.ndarray, shape, dtype=jnp.
 # 4-bit (fp4 / nf4)
 # ---------------------------------------------------------------------------
 
-def quantize_4bit(x: jnp.ndarray, fmt: str) -> Tuple[jnp.ndarray, jnp.ndarray]:
+def quantize_4bit(x: jnp.ndarray, fmt: str) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Any-shape float array -> ((nblocks, 32) packed uint8, (nblocks,) absmax)."""
     x2d, _ = _pad_to_blocks(x.reshape(-1).astype(jnp.float32), BLOCK4)
     backend = get_backend()
@@ -130,7 +131,9 @@ def quantize_4bit(x: jnp.ndarray, fmt: str) -> Tuple[jnp.ndarray, jnp.ndarray]:
     return p[:nblocks], am[:nblocks]
 
 
-def dequantize_4bit(packed: jnp.ndarray, absmax: jnp.ndarray, fmt: str, shape, dtype=jnp.float32) -> jnp.ndarray:
+def dequantize_4bit(
+    packed: jnp.ndarray, absmax: jnp.ndarray, fmt: str, shape, dtype=jnp.float32
+) -> jnp.ndarray:
     backend = get_backend()
     if backend == "ref":
         out = _REF_D4[fmt](packed, absmax)
@@ -138,7 +141,9 @@ def dequantize_4bit(packed: jnp.ndarray, absmax: jnp.ndarray, fmt: str, shape, d
         nblocks = packed.shape[0]
         packed, _ = _pad_rows(packed, ROWS4)
         absmax = jnp.pad(absmax, (0, packed.shape[0] - nblocks))
-        out = dequantize_4bit_pallas(packed, absmax, fmt=fmt, interpret=(backend == "pallas_interpret"))
+        out = dequantize_4bit_pallas(
+            packed, absmax, fmt=fmt, interpret=(backend == "pallas_interpret")
+        )
         out = out[:nblocks]
     n = int(np.prod(shape))
     return out.reshape(-1)[:n].reshape(shape).astype(dtype)
@@ -148,7 +153,9 @@ def dequantize_4bit(packed: jnp.ndarray, absmax: jnp.ndarray, fmt: str, shape, d
 # fused server-side aggregation
 # ---------------------------------------------------------------------------
 
-def dequant_accumulate8(qs: jnp.ndarray, absmaxes: jnp.ndarray, weights: jnp.ndarray) -> jnp.ndarray:
+def dequant_accumulate8(
+    qs: jnp.ndarray, absmaxes: jnp.ndarray, weights: jnp.ndarray
+) -> jnp.ndarray:
     backend = get_backend()
     if backend == "ref":
         return _REF_AGG(qs, absmaxes, weights)

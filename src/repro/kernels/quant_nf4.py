@@ -99,7 +99,9 @@ def quantize_4bit_pallas(x2d: jnp.ndarray, *, fmt: str, interpret: bool = False)
 
 
 @functools.partial(jax.jit, static_argnames=("fmt", "interpret"))
-def dequantize_4bit_pallas(packed: jnp.ndarray, absmax: jnp.ndarray, *, fmt: str, interpret: bool = False):
+def dequantize_4bit_pallas(
+    packed: jnp.ndarray, absmax: jnp.ndarray, *, fmt: str, interpret: bool = False
+):
     nblocks = packed.shape[0]
     assert packed.shape[1] == BLOCK4 // 2 and nblocks % ROWS4 == 0, packed.shape
     grid = (nblocks // ROWS4,)

@@ -131,7 +131,9 @@ def dequantize_4bit(packed: jnp.ndarray, absmax: jnp.ndarray, code: np.ndarray) 
 # materializing K fp32 copies)
 # ---------------------------------------------------------------------------
 
-def dequant_accumulate8(qs: jnp.ndarray, absmaxes: jnp.ndarray, weights: jnp.ndarray) -> jnp.ndarray:
+def dequant_accumulate8(
+    qs: jnp.ndarray, absmaxes: jnp.ndarray, weights: jnp.ndarray
+) -> jnp.ndarray:
     """qs: (K, nblocks, BLOCK8) int8, absmaxes: (K, nblocks), weights: (K,)
 
     -> (nblocks, BLOCK8) fp32 = sum_k w_k * dequant(qs[k]).

@@ -22,7 +22,7 @@ os.environ["XLA_FLAGS"] = (
 import argparse  # noqa: E402
 import json  # noqa: E402
 import time  # noqa: E402
-from typing import Any, Dict, Optional  # noqa: E402
+from typing import Any, Optional  # noqa: E402
 
 import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
@@ -117,7 +117,7 @@ def run_one(
     tag: str = "baseline",
     save: bool = True,
     mesh=None,
-) -> Dict[str, Any]:
+) -> dict[str, Any]:
     cfg = get_config(arch).with_overrides(
         param_dtype=jnp.bfloat16, activ_dtype=jnp.bfloat16
     )

@@ -18,7 +18,7 @@ from __future__ import annotations
 
 import argparse
 import time
-from typing import Any, Dict
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -85,7 +85,7 @@ def make_fl_round(model, *, local_steps: int, lr: float, agg: str, mesh):
     return jax.jit(fl_round_sm, donate_argnums=(0, 1))
 
 
-def run(args) -> Dict[str, Any]:
+def run(args) -> dict[str, Any]:
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     model = create_model(cfg)
     mesh = make_mesh((args.pods, jax.device_count() // args.pods), ("pod", "data"))

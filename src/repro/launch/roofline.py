@@ -16,7 +16,7 @@ remat/dispatch/redundancy waste.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Optional
+from typing import Any, Optional
 
 from repro.models.base import ModelConfig, active_param_count
 from repro.utils import hlo as hlo_utils
@@ -42,10 +42,10 @@ class RooflineReport:
     collective_s: float
     bottleneck: str
     useful_flop_ratio: float
-    collective_detail: Dict[str, Dict[str, float]]
-    memory_per_device: Optional[Dict[str, float]] = None
+    collective_detail: dict[str, dict[str, float]]
+    memory_per_device: Optional[dict[str, float]] = None
 
-    def to_dict(self) -> Dict[str, Any]:
+    def to_dict(self) -> dict[str, Any]:
         return dataclasses.asdict(self)
 
 
@@ -72,9 +72,9 @@ def analyze(
     kind: str,
     seq_len: int,
     global_batch: int,
-    cost: Dict[str, float],
+    cost: dict[str, float],
     hlo_text: str,
-    memory_per_device: Optional[Dict[str, float]] = None,
+    memory_per_device: Optional[dict[str, float]] = None,
 ) -> RooflineReport:
     # Loop-aware per-device quantities derived from the SPMD-partitioned
     # module (XLA's cost_analysis counts while bodies once — see

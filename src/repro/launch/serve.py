@@ -7,7 +7,7 @@ from __future__ import annotations
 
 import argparse
 import time
-from typing import Any, Dict, Optional
+from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
@@ -23,7 +23,7 @@ def generate(
     prompts: jnp.ndarray,
     *,
     gen_len: int,
-    extra: Optional[Dict[str, Any]] = None,
+    extra: Optional[dict[str, Any]] = None,
     greedy: bool = True,
     rng: Optional[jax.Array] = None,
 ):
@@ -43,7 +43,8 @@ def generate(
     # decode continues with a fresh right-sized cache warmed by replay when
     # needed; recurrent/window models continue from the returned state.
     tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
-    if hasattr(model, "init_cache") and model.__class__.__name__ == "DecoderLM" and model.cfg.sliding_window is None:
+    if (hasattr(model, "init_cache") and model.__class__.__name__ == "DecoderLM"
+            and model.cfg.sliding_window is None):
         # replay prompt into a (P+gen_len)-sized cache
         cache = model.init_cache(Bsz, P + gen_len)
         for t in range(P):

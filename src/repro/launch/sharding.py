@@ -8,7 +8,8 @@ recurrentgemma 10H) and batch=1 decode shapes lower cleanly everywhere.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+from collections.abc import Sequence
+from typing import Any, Optional
 
 import jax
 import numpy as np
@@ -17,7 +18,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.models import base as B
 
 # rule set: logical axis -> mesh axes (tried in order, dropped if indivisible)
-DEFAULT_RULES: Dict[str, Tuple[str, ...]] = {
+DEFAULT_RULES: dict[str, tuple[str, ...]] = {
     B.BATCH: ("pod", "data"),
     B.VOCAB: ("model",),
     B.EMBED: ("data",),      # FSDP: weights' d_model dim sharded over data
@@ -39,11 +40,11 @@ def spec_for(
     shape: Sequence[int],
     axes: Sequence[Optional[str]],
     mesh: Mesh,
-    rules: Dict[str, Tuple[str, ...]],
+    rules: dict[str, tuple[str, ...]],
 ) -> P:
     """Build a PartitionSpec for one array, honoring divisibility."""
     used: set = set()
-    entries: List[Any] = []
+    entries: list[Any] = []
     for dim, ax in zip(shape, axes):
         if ax is None or ax not in rules:
             entries.append(None)
@@ -69,7 +70,7 @@ def tree_shardings(
     shapes_tree: Any,
     axes_tree: Any,
     mesh: Mesh,
-    rules: Optional[Dict[str, Tuple[str, ...]]] = None,
+    rules: Optional[dict[str, tuple[str, ...]]] = None,
 ) -> Any:
     """shapes_tree: pytree of ShapeDtypeStruct/arrays; axes_tree: same
 

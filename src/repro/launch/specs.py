@@ -19,7 +19,7 @@ config skips it (DESIGN.md §5).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Optional
+from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
@@ -29,7 +29,7 @@ from repro.models.base import ModelConfig
 
 SWA_WINDOW = 4096
 
-INPUT_SHAPES: Dict[str, Dict[str, Any]] = {
+INPUT_SHAPES: dict[str, dict[str, Any]] = {
     "train_4k": {"seq_len": 4096, "global_batch": 256, "kind": "train"},
     "prefill_32k": {"seq_len": 32768, "global_batch": 32, "kind": "prefill"},
     "decode_32k": {"seq_len": 32768, "global_batch": 128, "kind": "decode"},
@@ -75,13 +75,13 @@ def _sds(shape, dtype) -> jax.ShapeDtypeStruct:
     return jax.ShapeDtypeStruct(tuple(shape), dtype)
 
 
-def input_specs(cfg: ModelConfig, plan: ShapePlan) -> Dict[str, Any]:
+def input_specs(cfg: ModelConfig, plan: ShapePlan) -> dict[str, Any]:
     """ShapeDtypeStruct stand-ins for every model input of the lowered step
 
     (weak-type-correct, shardable, no device allocation)."""
     Bsz, S = plan.global_batch, plan.seq_len
     if plan.kind == "train":
-        batch: Dict[str, Any] = {
+        batch: dict[str, Any] = {
             "tokens": _sds((Bsz, S), jnp.int32),
             "labels": _sds((Bsz, S), jnp.int32),
         }
@@ -91,7 +91,7 @@ def input_specs(cfg: ModelConfig, plan: ShapePlan) -> Dict[str, Any]:
             batch["patches"] = _sds((Bsz, cfg.num_patches, cfg.d_model), cfg.activ_dtype)
         return {"batch": batch}
     if plan.kind == "prefill":
-        out: Dict[str, Any] = {"tokens": _sds((Bsz, S), jnp.int32)}
+        out: dict[str, Any] = {"tokens": _sds((Bsz, S), jnp.int32)}
         if cfg.family == "encdec":
             out["frames"] = _sds((Bsz, cfg.encoder_seq, cfg.d_model), cfg.activ_dtype)
         if cfg.family == "vlm":

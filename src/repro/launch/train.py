@@ -10,7 +10,7 @@ from __future__ import annotations
 
 import argparse
 import time
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
@@ -43,8 +43,8 @@ def train_loop(
     dataset: Optional[SyntheticLMDataset] = None,
     params: Optional[Any] = None,
     log_every: int = 10,
-    extra_batch: Optional[Dict[str, np.ndarray]] = None,
-) -> Tuple[Any, list]:
+    extra_batch: Optional[dict[str, np.ndarray]] = None,
+) -> tuple[Any, list]:
     model = create_model(cfg)
     if params is None:
         params = model.init(jax.random.PRNGKey(seed))

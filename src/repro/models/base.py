@@ -16,7 +16,7 @@ runs on 1 CPU device (smoke tests) and the 512-chip production mesh
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Optional, Tuple
+from typing import Any, Optional
 
 import jax.numpy as jnp
 
@@ -54,7 +54,7 @@ class ModelConfig:
     use_rope: bool = True           # False -> sinusoidal absolute positions
     head_dim: Optional[int] = None
     # hybrid / recurrent details
-    block_pattern: Tuple[str, ...] = ()   # e.g. ("rglru","rglru","attn")
+    block_pattern: tuple[str, ...] = ()   # e.g. ("rglru","rglru","attn")
     local_window: int = 2048              # local-attention window (hybrid)
     rglru_width: Optional[int] = None     # RG-LRU recurrence width
     # long-context serving variant: replace full attention with
@@ -86,7 +86,7 @@ class ModelConfig:
     def kv_feat(self) -> int:
         return self.num_kv_heads * self.resolved_head_dim
 
-    def with_overrides(self, **kw) -> "ModelConfig":
+    def with_overrides(self, **kw) -> ModelConfig:
         return dataclasses.replace(self, **kw)
 
 

@@ -10,7 +10,7 @@ assigned input shapes don't require giant learned tables).
 """
 from __future__ import annotations
 
-from typing import Any, Dict
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -19,7 +19,7 @@ from repro.models import base as B
 from repro.models import layers as L
 
 
-def _enc_block_spec(cfg: B.ModelConfig) -> Dict[str, Any]:
+def _enc_block_spec(cfg: B.ModelConfig) -> dict[str, Any]:
     return {
         "attn_norm": L.norm_spec(cfg.d_model),
         "attn": L.attention_spec(cfg),
@@ -28,7 +28,7 @@ def _enc_block_spec(cfg: B.ModelConfig) -> Dict[str, Any]:
     }
 
 
-def _dec_block_spec(cfg: B.ModelConfig) -> Dict[str, Any]:
+def _dec_block_spec(cfg: B.ModelConfig) -> dict[str, Any]:
     return {
         "self_norm": L.norm_spec(cfg.d_model),
         "self_attn": L.attention_spec(cfg),
@@ -51,14 +51,14 @@ class EncDecModel:
             "dec_blocks": L.stack_spec(_dec_block_spec(cfg), cfg.num_layers),
         }
 
-    def init(self, rng: jax.Array) -> Dict[str, Any]:
+    def init(self, rng: jax.Array) -> dict[str, Any]:
         return L.build_params(rng, self._spec, self.cfg.param_dtype)
 
-    def param_axes(self) -> Dict[str, Any]:
+    def param_axes(self) -> dict[str, Any]:
         return L.build_axes(self._spec)
 
     # -- encoder ---------------------------------------------------------------
-    def encode(self, params: Dict[str, Any], frames: jnp.ndarray) -> jnp.ndarray:
+    def encode(self, params: dict[str, Any], frames: jnp.ndarray) -> jnp.ndarray:
         """frames: (B, S_enc, d) stub embeddings -> encoder memory."""
         cfg = self.cfg
         x = frames.astype(cfg.activ_dtype)
@@ -121,7 +121,7 @@ class EncDecModel:
         return lm, {"lm_loss": lm, "aux_loss": jnp.float32(0.0)}
 
     # -- serving ---------------------------------------------------------------
-    def init_cache(self, batch: int, max_len: int) -> Dict[str, Any]:
+    def init_cache(self, batch: int, max_len: int) -> dict[str, Any]:
         cfg = self.cfg
         kvf = cfg.kv_feat
         hd = cfg.resolved_head_dim
@@ -135,7 +135,7 @@ class EncDecModel:
             lambda *xs: jnp.stack(xs), *[one for _ in range(cfg.num_layers)]
         )
 
-    def cache_axes(self) -> Dict[str, Any]:
+    def cache_axes(self) -> dict[str, Any]:
         Lx, Bx = B.LAYER, B.BATCH
         return {
             "self_k": (Lx, Bx, B.SEQ, B.KV_FEAT),

@@ -8,7 +8,7 @@ a single source of truth consumed by ``repro.launch.sharding``.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
@@ -23,8 +23,8 @@ from repro.models import base as B
 
 @dataclasses.dataclass(frozen=True)
 class ParamDef:
-    shape: Tuple[int, ...]
-    axes: Tuple[Optional[str], ...]
+    shape: tuple[int, ...]
+    axes: tuple[Optional[str], ...]
     init: str = "normal"      # normal | zeros | ones
     scale: float = 0.02
 
@@ -32,8 +32,8 @@ class ParamDef:
         assert len(self.shape) == len(self.axes), (self.shape, self.axes)
 
 
-def build_params(rng: jax.Array, spec: Dict[str, Any], dtype) -> Dict[str, Any]:
-    flat: Dict[str, ParamDef] = {}
+def build_params(rng: jax.Array, spec: dict[str, Any], dtype) -> dict[str, Any]:
+    flat: dict[str, ParamDef] = {}
 
     def collect(node, path):
         if isinstance(node, ParamDef):
@@ -44,7 +44,7 @@ def build_params(rng: jax.Array, spec: Dict[str, Any], dtype) -> Dict[str, Any]:
 
     collect(spec, "")
     keys = jax.random.split(rng, max(len(flat), 1))
-    arrays: Dict[str, jnp.ndarray] = {}
+    arrays: dict[str, jnp.ndarray] = {}
     for (path, pd), key in zip(sorted(flat.items()), keys):
         if pd.init == "zeros":
             arr = jnp.zeros(pd.shape, dtype)
@@ -62,7 +62,7 @@ def build_params(rng: jax.Array, spec: Dict[str, Any], dtype) -> Dict[str, Any]:
     return rebuild(spec, "")
 
 
-def build_axes(spec: Dict[str, Any]) -> Dict[str, Any]:
+def build_axes(spec: dict[str, Any]) -> dict[str, Any]:
     if isinstance(spec, ParamDef):
         return spec.axes
     return {k: build_axes(v) for k, v in spec.items()}
@@ -73,7 +73,7 @@ def stacked(pd: ParamDef, num: int) -> ParamDef:
     return ParamDef((num,) + pd.shape, (B.LAYER,) + pd.axes, pd.init, pd.scale)
 
 
-def stack_spec(spec: Dict[str, Any], num: int) -> Dict[str, Any]:
+def stack_spec(spec: dict[str, Any], num: int) -> dict[str, Any]:
     if isinstance(spec, ParamDef):
         return stacked(spec, num)
     return {k: stack_spec(v, num) for k, v in spec.items()}
@@ -83,7 +83,7 @@ def stack_spec(spec: Dict[str, Any], num: int) -> Dict[str, Any]:
 # activation-sharding context (set by the launcher; no-op in smoke tests)
 # ---------------------------------------------------------------------------
 
-_SHARD_CTX: Optional[Tuple[Any, Dict[str, Tuple[str, ...]]]] = None
+_SHARD_CTX: Optional[tuple[Any, dict[str, tuple[str, ...]]]] = None
 
 
 def set_sharding_context(mesh, rules) -> None:
@@ -106,7 +106,7 @@ def _mesh_axis_size(axis: str) -> int:
     return size
 
 
-def constrain(x: jnp.ndarray, axes: Tuple[Optional[str], ...]) -> jnp.ndarray:
+def constrain(x: jnp.ndarray, axes: tuple[Optional[str], ...]) -> jnp.ndarray:
     """with_sharding_constraint by logical axes (divisibility-safe).
 
     REPRO_DISABLE_ACT_CONSTRAINTS=1 disables all activation constraints —
@@ -124,7 +124,7 @@ def constrain(x: jnp.ndarray, axes: Tuple[Optional[str], ...]) -> jnp.ndarray:
     return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
 
 
-def constrain_heads_qkv(q, k, v, cfg) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+def constrain_heads_qkv(q, k, v, cfg) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """Pick the attention parallelism by divisibility (perf iteration 1,
 
     EXPERIMENTS.md §Perf): shard heads over `model` when the head count
@@ -163,7 +163,9 @@ def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarr
     return ((x32 * jax.lax.rsqrt(var + eps)) * (1.0 + scale.astype(jnp.float32))).astype(dtype)
 
 
-def layer_norm(x: jnp.ndarray, scale: jnp.ndarray, bias: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+def layer_norm(
+    x: jnp.ndarray, scale: jnp.ndarray, bias: jnp.ndarray, eps: float = 1e-5
+) -> jnp.ndarray:
     dtype = x.dtype
     x32 = x.astype(jnp.float32)
     mu = jnp.mean(x32, axis=-1, keepdims=True)
@@ -179,7 +181,9 @@ def norm_spec(d: int) -> ParamDef:
 # rotary position embeddings
 # ---------------------------------------------------------------------------
 
-def rope_table(positions: jnp.ndarray, head_dim: int, theta: float) -> Tuple[jnp.ndarray, jnp.ndarray]:
+def rope_table(
+    positions: jnp.ndarray, head_dim: int, theta: float
+) -> tuple[jnp.ndarray, jnp.ndarray]:
     """positions: (...,) int -> cos/sin of shape positions.shape + (head_dim//2,)."""
     half = head_dim // 2
     freqs = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
@@ -200,9 +204,9 @@ def apply_rope(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray) -> jnp.ndarra
 # GQA attention
 # ---------------------------------------------------------------------------
 
-def attention_spec(cfg: B.ModelConfig) -> Dict[str, Any]:
+def attention_spec(cfg: B.ModelConfig) -> dict[str, Any]:
     d, qf, kvf = cfg.d_model, cfg.q_feat, cfg.kv_feat
-    spec: Dict[str, Any] = {
+    spec: dict[str, Any] = {
         "wq": ParamDef((d, qf), (B.EMBED, B.Q_FEAT)),
         "wk": ParamDef((d, kvf), (B.EMBED, B.KV_FEAT)),
         "wv": ParamDef((d, kvf), (B.EMBED, B.KV_FEAT)),
@@ -294,7 +298,7 @@ def sdpa_or_flash(q, k, v, cfg: B.ModelConfig, *, causal: bool, window: Optional
 
 def attn_forward(
     x: jnp.ndarray,
-    p: Dict[str, jnp.ndarray],
+    p: dict[str, jnp.ndarray],
     cfg: B.ModelConfig,
     *,
     causal: bool = True,
@@ -310,7 +314,7 @@ def attn_forward(
 
 # -- decode caches -----------------------------------------------------------
 
-def init_full_cache(cfg: B.ModelConfig, batch: int, max_len: int, dtype) -> Dict[str, jnp.ndarray]:
+def init_full_cache(cfg: B.ModelConfig, batch: int, max_len: int, dtype) -> dict[str, jnp.ndarray]:
     kvf = cfg.kv_feat
     return {
         "k": jnp.zeros((batch, max_len, kvf), dtype),
@@ -318,7 +322,7 @@ def init_full_cache(cfg: B.ModelConfig, batch: int, max_len: int, dtype) -> Dict
     }
 
 
-def init_window_cache(cfg: B.ModelConfig, batch: int, window: int, dtype) -> Dict[str, jnp.ndarray]:
+def init_window_cache(cfg: B.ModelConfig, batch: int, window: int, dtype) -> dict[str, jnp.ndarray]:
     kvf = cfg.kv_feat
     return {
         "k": jnp.zeros((batch, window, kvf), dtype),
@@ -329,13 +333,13 @@ def init_window_cache(cfg: B.ModelConfig, batch: int, window: int, dtype) -> Dic
 
 def attn_decode(
     x: jnp.ndarray,
-    p: Dict[str, jnp.ndarray],
-    cache: Dict[str, jnp.ndarray],
+    p: dict[str, jnp.ndarray],
+    cache: dict[str, jnp.ndarray],
     pos: jnp.ndarray,
     cfg: B.ModelConfig,
     *,
     window: Optional[int] = None,
-) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+) -> tuple[jnp.ndarray, dict[str, jnp.ndarray]]:
     """One-token decode step. x: (b, 1, d); pos: scalar int32 (current index).
 
     Full cache: writes k/v at ``pos`` and attends over [0, pos].
@@ -351,15 +355,19 @@ def attn_decode(
     k_flat = k_new.reshape(bsz, 1, kvf)
     v_flat = v_new.reshape(bsz, 1, kvf)
     if window is None:
-        k_cache = jax.lax.dynamic_update_slice(cache["k"], k_flat.astype(cache["k"].dtype), (0, pos, 0))
-        v_cache = jax.lax.dynamic_update_slice(cache["v"], v_flat.astype(cache["v"].dtype), (0, pos, 0))
+        k_cache = jax.lax.dynamic_update_slice(
+            cache["k"], k_flat.astype(cache["k"].dtype), (0, pos, 0))
+        v_cache = jax.lax.dynamic_update_slice(
+            cache["v"], v_flat.astype(cache["v"].dtype), (0, pos, 0))
         t = k_cache.shape[1]
         mask = (jnp.arange(t) <= pos)[None, None, None, None, :]  # (1,1,1,1,t)
         new_cache = {"k": k_cache, "v": v_cache}
     else:
         slot = pos % window
-        k_cache = jax.lax.dynamic_update_slice(cache["k"], k_flat.astype(cache["k"].dtype), (0, slot, 0))
-        v_cache = jax.lax.dynamic_update_slice(cache["v"], v_flat.astype(cache["v"].dtype), (0, slot, 0))
+        k_cache = jax.lax.dynamic_update_slice(
+            cache["k"], k_flat.astype(cache["k"].dtype), (0, slot, 0))
+        v_cache = jax.lax.dynamic_update_slice(
+            cache["v"], v_flat.astype(cache["v"].dtype), (0, slot, 0))
         pos_cache = jax.lax.dynamic_update_slice(
             cache["pos"], jnp.full((bsz, 1), pos, jnp.int32), (0, slot)
         )
@@ -378,10 +386,10 @@ def attn_decode(
 def cross_attn_forward(
     x: jnp.ndarray,
     memory: jnp.ndarray,
-    p: Dict[str, jnp.ndarray],
-    cfg: "B.ModelConfig",
-    kv: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None,
-) -> Tuple[jnp.ndarray, Tuple[jnp.ndarray, jnp.ndarray]]:
+    p: dict[str, jnp.ndarray],
+    cfg: B.ModelConfig,
+    kv: Optional[tuple[jnp.ndarray, jnp.ndarray]] = None,
+) -> tuple[jnp.ndarray, tuple[jnp.ndarray, jnp.ndarray]]:
     """Decoder cross-attention. q from ``x`` (b,s,d); k/v from ``memory``
 
     (b,t,d) — or from precomputed ``kv`` (decode path). No mask, no rope.
@@ -409,7 +417,7 @@ def cross_attn_forward(
 # gated MLP (SwiGLU)
 # ---------------------------------------------------------------------------
 
-def mlp_spec(cfg: B.ModelConfig) -> Dict[str, Any]:
+def mlp_spec(cfg: B.ModelConfig) -> dict[str, Any]:
     d, f = cfg.d_model, cfg.d_ff
     return {
         "w_gate": ParamDef((d, f), (B.EMBED, B.MLP)),
@@ -418,7 +426,7 @@ def mlp_spec(cfg: B.ModelConfig) -> Dict[str, Any]:
     }
 
 
-def mlp_forward(x: jnp.ndarray, p: Dict[str, jnp.ndarray]) -> jnp.ndarray:
+def mlp_forward(x: jnp.ndarray, p: dict[str, jnp.ndarray]) -> jnp.ndarray:
     g = jnp.einsum("bsd,df->bsf", x, p["w_gate"].astype(x.dtype))
     u = jnp.einsum("bsd,df->bsf", x, p["w_up"].astype(x.dtype))
     return jnp.einsum("bsf,fd->bsd", jax.nn.silu(g) * u, p["w_down"].astype(x.dtype))
@@ -428,7 +436,7 @@ def mlp_forward(x: jnp.ndarray, p: Dict[str, jnp.ndarray]) -> jnp.ndarray:
 # embeddings / head
 # ---------------------------------------------------------------------------
 
-def embed_spec(cfg: B.ModelConfig) -> Dict[str, Any]:
+def embed_spec(cfg: B.ModelConfig) -> dict[str, Any]:
     return {
         "embedding": ParamDef((cfg.vocab_size, cfg.d_model), (B.VOCAB, B.EMBED), scale=1.0),
         "lm_head": ParamDef((cfg.d_model, cfg.vocab_size), (B.EMBED, B.VOCAB)),
@@ -436,11 +444,11 @@ def embed_spec(cfg: B.ModelConfig) -> Dict[str, Any]:
     }
 
 
-def embed_tokens(tokens: jnp.ndarray, p: Dict[str, jnp.ndarray], dtype) -> jnp.ndarray:
+def embed_tokens(tokens: jnp.ndarray, p: dict[str, jnp.ndarray], dtype) -> jnp.ndarray:
     return p["embedding"].astype(dtype)[tokens]
 
 
-def lm_logits(x: jnp.ndarray, p: Dict[str, jnp.ndarray]) -> jnp.ndarray:
+def lm_logits(x: jnp.ndarray, p: dict[str, jnp.ndarray]) -> jnp.ndarray:
     x = rms_norm(x, p["final_norm"])
     return jnp.einsum("bsd,dv->bsv", x, p["lm_head"].astype(x.dtype))
 

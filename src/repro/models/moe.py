@@ -12,7 +12,7 @@ dispatch tensor cost.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Tuple
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -28,7 +28,7 @@ from repro.models.layers import ParamDef
 GROUP_T = 256
 
 
-def moe_spec(cfg: B.ModelConfig) -> Dict[str, Any]:
+def moe_spec(cfg: B.ModelConfig) -> dict[str, Any]:
     d, f, e = cfg.d_model, cfg.d_ff, cfg.num_experts
     return {
         "router": ParamDef((d, e), (B.EMBED, B.EXPERT)),
@@ -40,7 +40,7 @@ def moe_spec(cfg: B.ModelConfig) -> Dict[str, Any]:
 
 def _dispatch_tensors(
     gates: jnp.ndarray, k: int, capacity: int
-) -> Tuple[jnp.ndarray, jnp.ndarray]:
+) -> tuple[jnp.ndarray, jnp.ndarray]:
     """gates: (G, T, E) softmax probs -> (combine (G,T,E,C), aux per-group).
 
     Iterative top-k (k is 1..4 for every assigned arch): slot j picks the
@@ -83,8 +83,8 @@ def load_balance_loss(gates: jnp.ndarray, k: int) -> jnp.ndarray:
 
 
 def moe_forward(
-    x: jnp.ndarray, p: Dict[str, jnp.ndarray], cfg: B.ModelConfig
-) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    x: jnp.ndarray, p: dict[str, jnp.ndarray], cfg: B.ModelConfig
+) -> tuple[jnp.ndarray, jnp.ndarray]:
     """x: (batch, seq, d) -> (output, aux_loss). Routing is per GROUP_T-token
 
     sequence chunk (decode: one group of the live tokens)."""

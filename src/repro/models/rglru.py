@@ -21,7 +21,7 @@ Block layout per layer (Griffin):
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
@@ -39,7 +39,7 @@ RGLRU_C = 8.0
 # ---------------------------------------------------------------------------
 
 def rglru_scan(x: jnp.ndarray, r: jnp.ndarray, i: jnp.ndarray, lam: jnp.ndarray,
-               h0: Optional[jnp.ndarray] = None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+               h0: Optional[jnp.ndarray] = None) -> tuple[jnp.ndarray, jnp.ndarray]:
     """x, r, i: (B,S,W); lam: (W,). Returns (h (B,S,W), h_last (B,W))."""
     log_a = -RGLRU_C * jax.nn.softplus(lam.astype(jnp.float32)) * r.astype(jnp.float32)
     a = jnp.exp(log_a)
@@ -81,7 +81,7 @@ def rglru_step(h_prev: jnp.ndarray, x: jnp.ndarray, r: jnp.ndarray, i: jnp.ndarr
 # recurrent temporal block
 # ---------------------------------------------------------------------------
 
-def rec_block_spec(cfg: B.ModelConfig) -> Dict[str, Any]:
+def rec_block_spec(cfg: B.ModelConfig) -> dict[str, Any]:
     d = cfg.d_model
     w = cfg.rglru_width or cfg.d_model
     return {
@@ -99,8 +99,10 @@ def rec_block_spec(cfg: B.ModelConfig) -> Dict[str, Any]:
 
 
 def _rec_gates(u, p, dtype):
-    r = jax.nn.sigmoid(jnp.einsum("bsw,wv->bsv", u, p["w_r"].astype(dtype)) + p["b_r"].astype(dtype))
-    i = jax.nn.sigmoid(jnp.einsum("bsw,wv->bsv", u, p["w_i"].astype(dtype)) + p["b_i"].astype(dtype))
+    r = jax.nn.sigmoid(
+        jnp.einsum("bsw,wv->bsv", u, p["w_r"].astype(dtype)) + p["b_r"].astype(dtype))
+    i = jax.nn.sigmoid(
+        jnp.einsum("bsw,wv->bsv", u, p["w_i"].astype(dtype)) + p["b_i"].astype(dtype))
     return r, i
 
 
@@ -141,7 +143,7 @@ def rec_block_decode(x, p, state, cfg):
     return out, {"conv": conv_new, "h": h}
 
 
-def rec_init_state(cfg: B.ModelConfig, batch: int) -> Dict[str, jnp.ndarray]:
+def rec_init_state(cfg: B.ModelConfig, batch: int) -> dict[str, jnp.ndarray]:
     w = cfg.rglru_width or cfg.d_model
     return {
         "conv": jnp.zeros((batch, CONV_K - 1, w), cfg.activ_dtype),
@@ -153,7 +155,7 @@ def rec_init_state(cfg: B.ModelConfig, batch: int) -> Dict[str, jnp.ndarray]:
 # MLP block (gated GeLU) and attention temporal block reuse
 # ---------------------------------------------------------------------------
 
-def mlp_block_spec(cfg: B.ModelConfig) -> Dict[str, Any]:
+def mlp_block_spec(cfg: B.ModelConfig) -> dict[str, Any]:
     return {"norm": L.norm_spec(cfg.d_model), "mlp": L.mlp_spec(cfg)}
 
 
@@ -164,7 +166,7 @@ def mlp_block_forward(x, p, cfg):
     return x + jnp.einsum("bsf,fd->bsd", jax.nn.gelu(g) * u, p["mlp"]["w_down"].astype(x.dtype))
 
 
-def attn_block_spec(cfg: B.ModelConfig) -> Dict[str, Any]:
+def attn_block_spec(cfg: B.ModelConfig) -> dict[str, Any]:
     return {"norm": L.norm_spec(cfg.d_model), "attn": L.attention_spec(cfg)}
 
 
@@ -181,12 +183,12 @@ class GriffinModel:
         self.n_super = cfg.num_layers // len(pat)
         self.tail_pattern = pat[: cfg.num_layers % len(pat)]
 
-        def layer_spec(kind: str) -> Dict[str, Any]:
+        def layer_spec(kind: str) -> dict[str, Any]:
             temporal = rec_block_spec(cfg) if kind == "rglru" else attn_block_spec(cfg)
             return {"temporal": temporal, "mlp_block": mlp_block_spec(cfg)}
 
         super_spec = {f"{i}_{k}": layer_spec(k) for i, k in enumerate(pat)}
-        self._spec: Dict[str, Any] = {
+        self._spec: dict[str, Any] = {
             "embed": L.embed_spec(cfg),
             "blocks": L.stack_spec(super_spec, self.n_super),
         }
@@ -195,10 +197,10 @@ class GriffinModel:
                 f"{i}_{k}": layer_spec(k) for i, k in enumerate(self.tail_pattern)
             }
 
-    def init(self, rng: jax.Array) -> Dict[str, Any]:
+    def init(self, rng: jax.Array) -> dict[str, Any]:
         return L.build_params(rng, self._spec, self.cfg.param_dtype)
 
-    def param_axes(self) -> Dict[str, Any]:
+    def param_axes(self) -> dict[str, Any]:
         return L.build_axes(self._spec)
 
     # -- layer application helpers ------------------------------------------
@@ -277,13 +279,13 @@ class GriffinModel:
             return rec_init_state(cfg, batch)
         return L.init_window_cache(cfg, batch, min(cfg.local_window, max_len), cfg.activ_dtype)
 
-    def init_cache(self, batch: int, max_len: int) -> Dict[str, Any]:
+    def init_cache(self, batch: int, max_len: int) -> dict[str, Any]:
         pat = self.cfg.block_pattern
         one = {f"{i}_{k}": self._layer_state(k, batch, max_len) for i, k in enumerate(pat)}
         stacked = jax.tree_util.tree_map(
             lambda *xs: jnp.stack(xs), *[one for _ in range(self.n_super)]
         )
-        cache: Dict[str, Any] = {"blocks": stacked}
+        cache: dict[str, Any] = {"blocks": stacked}
         if self.tail_pattern:
             cache["tail"] = {
                 f"{i}_{k}": self._layer_state(k, batch, max_len)
@@ -291,7 +293,7 @@ class GriffinModel:
             }
         return cache
 
-    def cache_axes(self) -> Dict[str, Any]:
+    def cache_axes(self) -> dict[str, Any]:
         def layer_axes(kind: str, with_layer: bool):
             pre = (B.LAYER,) if with_layer else ()
             if kind == "rglru":
@@ -306,7 +308,7 @@ class GriffinModel:
             }
 
         pat = self.cfg.block_pattern
-        axes: Dict[str, Any] = {
+        axes: dict[str, Any] = {
             "blocks": {f"{i}_{k}": layer_axes(k, True) for i, k in enumerate(pat)}
         }
         if self.tail_pattern:
@@ -330,7 +332,7 @@ class GriffinModel:
         if cfg.remat:
             body = jax.checkpoint(body)
         x, stacked = jax.lax.scan(body, x, params["blocks"])
-        cache: Dict[str, Any] = {"blocks": stacked}
+        cache: dict[str, Any] = {"blocks": stacked}
         if self.tail_pattern:
             cache["tail"] = {}
             for i, kind in enumerate(self.tail_pattern):
@@ -356,7 +358,7 @@ class GriffinModel:
             return x, new_states
 
         x, new_stacked = jax.lax.scan(body, x, (params["blocks"], cache["blocks"]))
-        new_cache: Dict[str, Any] = {"blocks": new_stacked}
+        new_cache: dict[str, Any] = {"blocks": new_stacked}
         if self.tail_pattern:
             new_cache["tail"] = {}
             for i, kind in enumerate(self.tail_pattern):

@@ -19,7 +19,7 @@ paper's appendix.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
@@ -35,10 +35,10 @@ from repro.models.layers import ParamDef
 # ---------------------------------------------------------------------------
 
 def mlstm_step(
-    state: Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray],
+    state: tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray],
     q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
     logi: jnp.ndarray, logf: jnp.ndarray,
-) -> Tuple[Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray], jnp.ndarray]:
+) -> tuple[tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray], jnp.ndarray]:
     """One decode step. state = (C (...,hd,hd), n (...,hd), m (...,)).
 
     q,k,v: (..., hd); logi/logf: (...,) per-head scalars.
@@ -70,7 +70,7 @@ def mlstm_parallel(q, k, v, logi, logf):
 
 
 def mlstm_chunkwise(q, k, v, logi, logf, chunk: int = 256,
-                    state: Optional[Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]] = None):
+                    state: Optional[tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]] = None):
     """Chunked parallel mLSTM. q,k,v: (B,H,S,hd); logi/logf: (B,H,S).
 
     Returns (h (B,H,S,hd), final_state). S must be a multiple of ``chunk``.
@@ -80,7 +80,9 @@ def mlstm_chunkwise(q, k, v, logi, logf, chunk: int = 256,
     nc = S // chunk
 
     def to_chunks(x):
-        return x.reshape(Bsz, H, nc, chunk, *x.shape[4:]) if x.ndim > 3 else x.reshape(Bsz, H, nc, chunk)
+        if x.ndim > 3:
+            return x.reshape(Bsz, H, nc, chunk, *x.shape[4:])
+        return x.reshape(Bsz, H, nc, chunk)
 
     qc = q.reshape(Bsz, H, nc, chunk, hd).transpose(2, 0, 1, 3, 4)
     kc = k.reshape(Bsz, H, nc, chunk, hd).transpose(2, 0, 1, 3, 4)
@@ -138,13 +140,13 @@ def mlstm_chunkwise(q, k, v, logi, logf, chunk: int = 256,
 CONV_K = 4  # causal depthwise conv kernel width (paper's conv4)
 
 
-def _mlstm_dims(cfg: B.ModelConfig) -> Tuple[int, int, int]:
+def _mlstm_dims(cfg: B.ModelConfig) -> tuple[int, int, int]:
     d_inner = 2 * cfg.d_model
     H = cfg.num_heads
     return d_inner, H, d_inner // H
 
 
-def mlstm_spec(cfg: B.ModelConfig) -> Dict[str, Any]:
+def mlstm_spec(cfg: B.ModelConfig) -> dict[str, Any]:
     d = cfg.d_model
     d_inner, H, hd = _mlstm_dims(cfg)
     return {
@@ -197,7 +199,7 @@ def _mlstm_project(xm, p, cfg):
     )
 
 
-def mlstm_block_forward(x: jnp.ndarray, p: Dict[str, Any], cfg: B.ModelConfig,
+def mlstm_block_forward(x: jnp.ndarray, p: dict[str, Any], cfg: B.ModelConfig,
                         chunk: int = 256) -> jnp.ndarray:
     d_inner, H, hd = _mlstm_dims(cfg)
     Bsz, S, _ = x.shape
@@ -217,7 +219,7 @@ def mlstm_block_forward(x: jnp.ndarray, p: Dict[str, Any], cfg: B.ModelConfig,
     return x + jnp.einsum("bse,ed->bsd", h, p["w_down"].astype(x.dtype))
 
 
-def mlstm_init_state(cfg: B.ModelConfig, batch: int) -> Dict[str, jnp.ndarray]:
+def mlstm_init_state(cfg: B.ModelConfig, batch: int) -> dict[str, jnp.ndarray]:
     d_inner, H, hd = _mlstm_dims(cfg)
     return {
         "C": jnp.zeros((batch, H, hd, hd), jnp.float32),
@@ -251,12 +253,12 @@ def mlstm_block_decode(x, p, state, cfg):
 # sLSTM block (scalar memory, block-diagonal recurrence, post-FFN)
 # ---------------------------------------------------------------------------
 
-def _slstm_dims(cfg: B.ModelConfig) -> Tuple[int, int]:
+def _slstm_dims(cfg: B.ModelConfig) -> tuple[int, int]:
     H = cfg.num_heads
     return H, cfg.d_model // H
 
 
-def slstm_spec(cfg: B.ModelConfig) -> Dict[str, Any]:
+def slstm_spec(cfg: B.ModelConfig) -> dict[str, Any]:
     d = cfg.d_model
     H, hd = _slstm_dims(cfg)
     f_in = int(round(4 * d / 3 / 64)) * 64  # pf 4/3, rounded to lanes
@@ -284,7 +286,7 @@ def slstm_spec(cfg: B.ModelConfig) -> Dict[str, Any]:
     }
 
 
-def slstm_gate_x(xin: jnp.ndarray, p: Dict[str, Any], cfg: B.ModelConfig) -> Dict[str, jnp.ndarray]:
+def slstm_gate_x(xin: jnp.ndarray, p: dict[str, Any], cfg: B.ModelConfig) -> dict[str, jnp.ndarray]:
     """Hoisted input projections: one GEMM per gate over the WHOLE
 
     sequence, outside the time scan (cuDNN-LSTM-style; perf iteration 2).
@@ -329,13 +331,13 @@ def _slstm_cell(state, gx_t, p, cfg):
     return {"c": cstr(c), "n": cstr(n), "h": cstr(h), "m": cstr(m_new)}
 
 
-def slstm_init_state(cfg: B.ModelConfig, batch: int) -> Dict[str, jnp.ndarray]:
+def slstm_init_state(cfg: B.ModelConfig, batch: int) -> dict[str, jnp.ndarray]:
     H, hd = _slstm_dims(cfg)
     z = lambda: jnp.zeros((batch, H, hd), jnp.float32)
     return {"c": z(), "n": z(), "h": z(), "m": jnp.full((batch, H, hd), -1e30)}
 
 
-def slstm_block_forward(x: jnp.ndarray, p: Dict[str, Any], cfg: B.ModelConfig) -> jnp.ndarray:
+def slstm_block_forward(x: jnp.ndarray, p: dict[str, Any], cfg: B.ModelConfig) -> jnp.ndarray:
     Bsz, S, d = x.shape
     H, hd = _slstm_dims(cfg)
     xin = L.rms_norm(x, p["norm"])
@@ -385,10 +387,10 @@ class XLSTMModel:
             "blocks": L.stack_spec(super_spec, self.n_super),
         }
 
-    def init(self, rng: jax.Array) -> Dict[str, Any]:
+    def init(self, rng: jax.Array) -> dict[str, Any]:
         return L.build_params(rng, self._spec, self.cfg.param_dtype)
 
-    def param_axes(self) -> Dict[str, Any]:
+    def param_axes(self) -> dict[str, Any]:
         return L.build_axes(self._spec)
 
     def forward(self, params, tokens, patches=None):
@@ -411,7 +413,7 @@ class XLSTMModel:
         return lm, {"lm_loss": lm, "aux_loss": jnp.float32(0.0)}
 
     # -- serving (O(1) state; no KV cache — the long_500k native path) ------
-    def init_cache(self, batch: int, max_len: int) -> Dict[str, Any]:
+    def init_cache(self, batch: int, max_len: int) -> dict[str, Any]:
         del max_len
         cfg = self.cfg
         one = {
@@ -421,7 +423,7 @@ class XLSTMModel:
         states = [one for _ in range(self.n_super)]
         return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *states)
 
-    def cache_axes(self) -> Dict[str, Any]:
+    def cache_axes(self) -> dict[str, Any]:
         Lx, Bx, ST, MLP = B.LAYER, B.BATCH, B.STATE, B.MLP
         return {
             "mlstm": {

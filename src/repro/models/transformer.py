@@ -8,7 +8,7 @@ consuming stub patch embeddings as a prefix (the carve-out in the brief).
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
@@ -18,8 +18,8 @@ from repro.models import layers as L
 from repro.models import moe as M
 
 
-def _block_spec(cfg: B.ModelConfig) -> Dict[str, Any]:
-    spec: Dict[str, Any] = {
+def _block_spec(cfg: B.ModelConfig) -> dict[str, Any]:
+    spec: dict[str, Any] = {
         "attn_norm": L.norm_spec(cfg.d_model),
         "attn": L.attention_spec(cfg),
         "mlp_norm": L.norm_spec(cfg.d_model),
@@ -32,8 +32,8 @@ def _block_spec(cfg: B.ModelConfig) -> Dict[str, Any]:
 
 
 def _block_forward(
-    x: jnp.ndarray, bp: Dict[str, Any], cfg: B.ModelConfig, *, window: Optional[int]
-) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    x: jnp.ndarray, bp: dict[str, Any], cfg: B.ModelConfig, *, window: Optional[int]
+) -> tuple[jnp.ndarray, jnp.ndarray]:
     h = L.attn_forward(L.rms_norm(x, bp["attn_norm"]), bp["attn"], cfg, causal=True, window=window)
     x = x + h
     aux = jnp.float32(0.0)
@@ -46,13 +46,13 @@ def _block_forward(
 
 def _block_decode(
     x: jnp.ndarray,
-    bp: Dict[str, Any],
-    cache: Dict[str, jnp.ndarray],
+    bp: dict[str, Any],
+    cache: dict[str, jnp.ndarray],
     pos: jnp.ndarray,
     cfg: B.ModelConfig,
     *,
     window: Optional[int],
-) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+) -> tuple[jnp.ndarray, dict[str, jnp.ndarray]]:
     h, new_cache = L.attn_decode(
         L.rms_norm(x, bp["attn_norm"]), bp["attn"], cache, pos, cfg, window=window
     )
@@ -76,14 +76,14 @@ class DecoderLM:
         }
 
     # -- params ------------------------------------------------------------
-    def init(self, rng: jax.Array) -> Dict[str, Any]:
+    def init(self, rng: jax.Array) -> dict[str, Any]:
         return L.build_params(rng, self._spec, self.cfg.param_dtype)
 
-    def param_axes(self) -> Dict[str, Any]:
+    def param_axes(self) -> dict[str, Any]:
         return L.build_axes(self._spec)
 
     # -- forward / loss ------------------------------------------------------
-    def _backbone(self, params: Dict[str, Any], x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    def _backbone(self, params: dict[str, Any], x: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
         cfg = self.cfg
         window = cfg.sliding_window
 
@@ -99,10 +99,10 @@ class DecoderLM:
 
     def forward(
         self,
-        params: Dict[str, Any],
+        params: dict[str, Any],
         tokens: jnp.ndarray,
         patches: Optional[jnp.ndarray] = None,
-    ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    ) -> tuple[jnp.ndarray, jnp.ndarray]:
         cfg = self.cfg
         x = L.embed_tokens(tokens, params["embed"], cfg.activ_dtype)
         n_prefix = 0
@@ -113,7 +113,9 @@ class DecoderLM:
         logits = L.lm_logits(x[:, n_prefix:], params["embed"])
         return logits, aux
 
-    def loss(self, params: Dict[str, Any], batch: Dict[str, jnp.ndarray]) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    def loss(
+        self, params: dict[str, Any], batch: dict[str, jnp.ndarray]
+    ) -> tuple[jnp.ndarray, dict[str, jnp.ndarray]]:
         cfg = self.cfg
         logits, aux = self.forward(params, batch["tokens"], batch.get("patches"))
         lm = L.causal_lm_loss(logits[:, :-1], batch["labels"][:, 1:], cfg.z_loss)
@@ -121,7 +123,7 @@ class DecoderLM:
         return total, {"lm_loss": lm, "aux_loss": aux}
 
     # -- serving -------------------------------------------------------------
-    def init_cache(self, batch: int, max_len: int) -> Dict[str, Any]:
+    def init_cache(self, batch: int, max_len: int) -> dict[str, Any]:
         cfg = self.cfg
         window = cfg.sliding_window
 
@@ -134,7 +136,7 @@ class DecoderLM:
         caches = [one_layer(i) for i in range(cfg.num_layers)]
         return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *caches)
 
-    def cache_axes(self) -> Dict[str, Any]:
+    def cache_axes(self) -> dict[str, Any]:
         """Logical axes for the decode cache (mirrors init_cache)."""
         base = {
             "k": (B.LAYER, B.BATCH, B.SEQ, B.KV_FEAT),
@@ -146,10 +148,10 @@ class DecoderLM:
 
     def prefill(
         self,
-        params: Dict[str, Any],
+        params: dict[str, Any],
         tokens: jnp.ndarray,
         patches: Optional[jnp.ndarray] = None,
-    ) -> Tuple[jnp.ndarray, Dict[str, Any]]:
+    ) -> tuple[jnp.ndarray, dict[str, Any]]:
         """Run the full prompt, returning last-position logits and a cache
 
         sized to the prompt (decode continues from pos = S)."""
@@ -196,11 +198,11 @@ class DecoderLM:
 
     def decode_step(
         self,
-        params: Dict[str, Any],
-        cache: Dict[str, Any],
+        params: dict[str, Any],
+        cache: dict[str, Any],
         tokens: jnp.ndarray,
         pos: jnp.ndarray,
-    ) -> Tuple[jnp.ndarray, Dict[str, Any]]:
+    ) -> tuple[jnp.ndarray, dict[str, Any]]:
         """serve_step: one new token for the whole batch. tokens: (B, 1)."""
         cfg = self.cfg
         window = cfg.sliding_window

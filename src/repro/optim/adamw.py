@@ -8,7 +8,7 @@ launcher via ``state_dtype``).
 """
 from __future__ import annotations
 
-from typing import Any, Dict, NamedTuple, Optional, Tuple
+from typing import Any, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -29,11 +29,13 @@ def adamw_init(params: Any, state_dtype=jnp.float32) -> AdamWState:
     )
 
 
-def clip_by_global_norm(grads: Any, max_norm: float) -> Tuple[Any, jnp.ndarray]:
+def clip_by_global_norm(grads: Any, max_norm: float) -> tuple[Any, jnp.ndarray]:
     leaves = jax.tree_util.tree_leaves(grads)
     gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves))
     scale = jnp.minimum(1.0, max_norm / jnp.maximum(gnorm, 1e-9))
-    return jax.tree_util.tree_map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), gnorm
+    clipped = jax.tree_util.tree_map(
+        lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads)
+    return clipped, gnorm
 
 
 def adamw_update(
@@ -47,7 +49,7 @@ def adamw_update(
     eps: float = 1e-8,
     weight_decay: float = 0.1,
     max_grad_norm: Optional[float] = 1.0,
-) -> Tuple[Any, AdamWState, Dict[str, jnp.ndarray]]:
+) -> tuple[Any, AdamWState, dict[str, jnp.ndarray]]:
     if max_grad_norm is not None:
         grads, gnorm = clip_by_global_norm(grads, max_grad_norm)
     else:

@@ -40,7 +40,8 @@ from __future__ import annotations
 
 import dataclasses
 from random import Random
-from typing import Any, Callable, Dict, List, Mapping, Optional, Sequence
+from collections.abc import Callable, Mapping, Sequence
+from typing import Any, Optional
 
 import numpy as np
 
@@ -63,13 +64,13 @@ class AggregationPolicy:
 
     name = "policy"
 
-    def begin(self, initial_weights: Mapping[str, Any], clients: Sequence[str]) -> List[Dispatch]:
+    def begin(self, initial_weights: Mapping[str, Any], clients: Sequence[str]) -> list[Dispatch]:
         raise NotImplementedError
 
-    def on_result(self, dispatch: Dispatch, result: Message) -> List[Dispatch]:
+    def on_result(self, dispatch: Dispatch, result: Message) -> list[Dispatch]:
         raise NotImplementedError
 
-    def on_client_failed(self, dispatch: Dispatch) -> List[Dispatch]:
+    def on_client_failed(self, dispatch: Dispatch) -> list[Dispatch]:
         """Called when a client exhausted its dropout retries."""
         return []
 
@@ -81,7 +82,7 @@ class AggregationPolicy:
     def model_version(self) -> int:
         raise NotImplementedError
 
-    def finish(self) -> Dict[str, Any]:
+    def finish(self) -> dict[str, Any]:
         raise NotImplementedError
 
 
@@ -104,16 +105,16 @@ class SyncPolicy(AggregationPolicy):
         self,
         aggregator: Any,
         num_rounds: int,
-        on_round_end: Optional[Callable[[int, Dict[str, Any], List[Message]], None]] = None,
+        on_round_end: Optional[Callable[[int, dict[str, Any], list[Message]], None]] = None,
     ) -> None:
         self.aggregator = aggregator
         self.num_rounds = num_rounds
         self.on_round_end = on_round_end
-        self._clients: List[str] = []
-        self._round_clients: List[str] = []
+        self._clients: list[str] = []
+        self._round_clients: list[str] = []
         self._round = 0
-        self._weights: Dict[str, Any] = {}
-        self._results: Dict[str, Message] = {}
+        self._weights: dict[str, Any] = {}
+        self._results: dict[str, Message] = {}
         self._failed: set = set()
 
     def begin(self, initial_weights, clients):
@@ -124,11 +125,11 @@ class SyncPolicy(AggregationPolicy):
             return []
         return self._dispatch_round()
 
-    def _select_round_clients(self) -> List[str]:
+    def _select_round_clients(self) -> list[str]:
         """The cohort for the round about to start (default: everyone)."""
         return list(self._clients)
 
-    def _dispatch_round(self) -> List[Dispatch]:
+    def _dispatch_round(self) -> list[Dispatch]:
         self._results = {}
         self._failed = set()
         self._round_clients = self._select_round_clients()
@@ -140,7 +141,7 @@ class SyncPolicy(AggregationPolicy):
     def _round_done(self) -> bool:
         return len(self._results) + len(self._failed) >= len(self._round_clients)
 
-    def _close_round(self) -> List[Dispatch]:
+    def _close_round(self) -> list[Dispatch]:
         ordered = [self._results[c] for c in self._round_clients if c in self._results]
         for result in ordered:
             self.aggregator.accept(result)
@@ -195,15 +196,15 @@ class _BudgetedAsyncPolicy(AggregationPolicy):
 
     def __init__(self, total_tasks: int) -> None:
         self.total_tasks = total_tasks
-        self._weights: Dict[str, np.ndarray] = {}
+        self._weights: dict[str, np.ndarray] = {}
         self._version = 0
         self._dispatched = 0
         self._done = 0          # results processed
         self._lost = 0          # permanently failed clients' tasks
-        self.staleness_seen: List[int] = []
+        self.staleness_seen: list[int] = []
 
     # -- dispatch helpers ---------------------------------------------------
-    def _next_task(self, client: str) -> List[Dispatch]:
+    def _next_task(self, client: str) -> list[Dispatch]:
         if self._dispatched >= self.total_tasks:
             return []
         self._dispatched += 1
@@ -215,7 +216,7 @@ class _BudgetedAsyncPolicy(AggregationPolicy):
             else v
             for n, v in initial_weights.items()
         }
-        out: List[Dispatch] = []
+        out: list[Dispatch] = []
         for c in clients:
             out.extend(self._next_task(c))
         return out
@@ -252,7 +253,7 @@ class FedBuffPolicy(_BudgetedAsyncPolicy):
         buffer_size: int = 4,
         server_lr: float = 1.0,
         staleness_weight: Optional[Callable[[int], float]] = None,
-        on_update: Optional[Callable[[int, Dict[str, Any]], None]] = None,
+        on_update: Optional[Callable[[int, dict[str, Any]], None]] = None,
     ) -> None:
         if buffer_size < 1:
             raise ValueError("buffer_size must be >= 1")
@@ -261,7 +262,7 @@ class FedBuffPolicy(_BudgetedAsyncPolicy):
         self.server_lr = server_lr
         self.staleness_weight = staleness_weight or polynomial_staleness()
         self.on_update = on_update
-        self._delta_sum: Dict[str, np.ndarray] = {}
+        self._delta_sum: dict[str, np.ndarray] = {}
         self._wsum = 0.0
         self._buffered = 0
 
@@ -329,7 +330,7 @@ class FedAsyncPolicy(_BudgetedAsyncPolicy):
         total_tasks: int,
         mixing_rate: float = 0.6,
         staleness_weight: Optional[Callable[[int], float]] = None,
-        on_update: Optional[Callable[[int, Dict[str, Any]], None]] = None,
+        on_update: Optional[Callable[[int, dict[str, Any]], None]] = None,
     ) -> None:
         if not 0.0 < mixing_rate <= 1.0:
             raise ValueError("mixing_rate must be in (0, 1]")
@@ -388,7 +389,7 @@ class TieredPolicy(SyncPolicy):
         probe_bytes: int = 1 << 20,
         credits: Optional[int] = None,
         seed: int = 0,
-        on_round_end: Optional[Callable[[int, Dict[str, Any], List[Message]], None]] = None,
+        on_round_end: Optional[Callable[[int, dict[str, Any], list[Message]], None]] = None,
     ) -> None:
         if num_tiers < 1:
             raise ValueError("num_tiers must be >= 1")
@@ -399,11 +400,11 @@ class TieredPolicy(SyncPolicy):
         self.probe_bytes = probe_bytes
         self.credits = credits
         self._rng = Random(f"tiered:{seed}")
-        self.tiers: List[List[str]] = []
-        self.tier_of: Dict[str, int] = {}
-        self.profiled_latency: Dict[str, float] = {}
-        self.selected_tiers: List[int] = []
-        self._credits_left: List[int] = []
+        self.tiers: list[list[str]] = []
+        self.tier_of: dict[str, int] = {}
+        self.profiled_latency: dict[str, float] = {}
+        self.selected_tiers: list[int] = []
+        self._credits_left: list[int] = []
 
     def _estimate_latency(self, client: str) -> float:
         if self.latency_fn is not None:
@@ -426,7 +427,7 @@ class TieredPolicy(SyncPolicy):
         self.selected_tiers = []
         return super().begin(initial_weights, clients)
 
-    def _select_round_clients(self) -> List[str]:
+    def _select_round_clients(self) -> list[str]:
         eligible = [i for i, left in enumerate(self._credits_left) if left > 0]
         if not eligible:  # no credit scheme, or all spent: every tier eligible
             eligible = list(range(len(self.tiers)))
@@ -435,3 +436,83 @@ class TieredPolicy(SyncPolicy):
             self._credits_left[idx] -= 1
         self.selected_tiers.append(idx)
         return list(self.tiers[idx])
+
+
+# ---------------------------------------------------------------------------
+# Policy registry (the job system resolves "runtime.policy" names here)
+# ---------------------------------------------------------------------------
+
+#: name -> builder(r, ctx) -> Optional[AggregationPolicy]. ``r`` is the raw
+#: job-spec ``"runtime"`` dict; ``ctx`` carries what the job system already
+#: built (aggregator, rounds, client_names, network, seed, total_tasks,
+#: staleness). Returning None selects the scheduler's default SyncPolicy.
+_POLICIES: dict[str, Callable[[Mapping[str, Any], Mapping[str, Any]],
+                              Optional[AggregationPolicy]]] = {}
+
+
+def register_policy(name: str):
+    """Decorator binding a spec name to a policy builder — the same
+    registry pattern as ``repro.core.pipeline.register_stage``; third-
+    party policies become addressable from job specs without touching
+    :mod:`repro.fl.job`."""
+
+    def deco(builder):
+        if name in _POLICIES:
+            raise ValueError(f"policy name {name!r} already registered ({_POLICIES[name]})")
+        _POLICIES[name] = builder
+        return builder
+
+    return deco
+
+
+def registered_policies() -> tuple:
+    return tuple(sorted(_POLICIES))
+
+
+def build_policy(name: str, r: Mapping[str, Any],
+                 ctx: Mapping[str, Any]) -> Optional[AggregationPolicy]:
+    try:
+        builder = _POLICIES[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown runtime policy {name!r}; pick from {registered_policies()}"
+        ) from None
+    return builder(r, ctx)
+
+
+@register_policy("sync")
+def _build_sync(r, ctx):
+    # None -> FLSimulator installs its default SyncPolicy (which carries
+    # the simulator's on_round_end callback)
+    return None
+
+
+@register_policy("fedbuff")
+def _build_fedbuff(r, ctx):
+    return FedBuffPolicy(
+        ctx["total_tasks"],
+        buffer_size=int(r.get("buffer_size", 4)),
+        server_lr=float(r.get("server_lr", 1.0)),
+        staleness_weight=ctx["staleness"],
+    )
+
+
+@register_policy("fedasync")
+def _build_fedasync(r, ctx):
+    return FedAsyncPolicy(
+        ctx["total_tasks"],
+        mixing_rate=float(r.get("mixing_rate", 0.6)),
+        staleness_weight=ctx["staleness"],
+    )
+
+
+@register_policy("tiered")
+def _build_tiered(r, ctx):
+    return TieredPolicy(
+        ctx["aggregator"],
+        ctx["rounds"],
+        num_tiers=int(r.get("num_tiers", 3)),
+        network=ctx["network"],
+        credits=r.get("credits"),
+        seed=ctx["seed"],
+    )

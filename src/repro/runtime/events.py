@@ -23,7 +23,8 @@ import heapq
 import json
 import math
 from random import Random
-from typing import Any, Dict, Iterator, List, Mapping, Optional, Sequence, Tuple
+from collections.abc import Iterator, Mapping, Sequence
+from typing import Any, Optional
 
 
 class EventKind(enum.Enum):
@@ -43,7 +44,7 @@ class Event:
     seq: int
     kind: EventKind
     client: Optional[str] = None
-    data: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    data: dict[str, Any] = dataclasses.field(default_factory=dict)
 
     def sort_key(self):
         return (self.time, self.seq)
@@ -54,9 +55,9 @@ class EventLoop:
 
     def __init__(self) -> None:
         self.now = 0.0
-        self._heap: List[tuple] = []
+        self._heap: list[tuple] = []
         self._seq = 0
-        self.history: List[Event] = []
+        self.history: list[Event] = []
 
     def __len__(self) -> int:
         return len(self._heap)
@@ -129,9 +130,9 @@ class AvailabilityTrace:
     them (:func:`periodic_availability`, :func:`random_availability`).
     """
 
-    def __init__(self, intervals: Mapping[str, Sequence[Tuple[float, float]]]) -> None:
-        self._starts: Dict[str, List[float]] = {}
-        self._ends: Dict[str, List[float]] = {}
+    def __init__(self, intervals: Mapping[str, Sequence[tuple[float, float]]]) -> None:
+        self._starts: dict[str, list[float]] = {}
+        self._ends: dict[str, list[float]] = {}
         for client, wins in intervals.items():
             merged = _merge_windows(wins)
             self._starts[client] = [s for s, _ in merged]
@@ -167,17 +168,17 @@ class AvailabilityTrace:
             return t
         return self._ends[client][i]
 
-    def clients(self) -> List[str]:
+    def clients(self) -> list[str]:
         return list(self._starts)
 
-    def windows(self, client: str) -> List[Tuple[float, float]]:
+    def windows(self, client: str) -> list[tuple[float, float]]:
         if client not in self._starts:
             return [(0.0, math.inf)]
         return list(zip(self._starts[client], self._ends[client]))
 
     # -- (de)serialization -------------------------------------------------
     @classmethod
-    def from_file(cls, path: str) -> "AvailabilityTrace":
+    def from_file(cls, path: str) -> AvailabilityTrace:
         """Load a trace: JSON ``{"client": [[start, end], ...]}`` or CSV
         lines ``client,start,end`` (``end`` may be ``inf``); ``#`` comments
         and blank lines are skipped in CSV."""
@@ -186,7 +187,7 @@ class AvailabilityTrace:
         if text.lstrip().startswith("{"):
             raw = json.loads(text)
             return cls({c: [(float(s), float(e)) for s, e in wins] for c, wins in raw.items()})
-        intervals: Dict[str, List[Tuple[float, float]]] = {}
+        intervals: dict[str, list[tuple[float, float]]] = {}
         for line in text.splitlines():
             line = line.strip()
             if not line or line.startswith("#"):
@@ -204,9 +205,9 @@ class AvailabilityTrace:
             json.dump(payload, fh, indent=1)
 
 
-def _merge_windows(wins: Sequence[Tuple[float, float]]) -> List[Tuple[float, float]]:
+def _merge_windows(wins: Sequence[tuple[float, float]]) -> list[tuple[float, float]]:
     """Sort, validate, and merge overlapping/adjacent online windows."""
-    out: List[Tuple[float, float]] = []
+    out: list[tuple[float, float]] = []
     for start, end in sorted((float(s), float(e)) for s, e in wins):
         if end <= start:
             raise ValueError(f"empty availability window [{start}, {end})")
@@ -233,10 +234,10 @@ def periodic_availability(
         raise ValueError("duty_cycle must be in (0, 1]")
     if not math.isfinite(horizon_s) or horizon_s <= 0:
         raise ValueError("horizon_s must be finite and positive")
-    intervals: Dict[str, List[Tuple[float, float]]] = {}
+    intervals: dict[str, list[tuple[float, float]]] = {}
     for i, client in enumerate(clients):
         offset = (i / max(1, len(clients))) * period_s if stagger else 0.0
-        wins: List[Tuple[float, float]] = []
+        wins: list[tuple[float, float]] = []
         # the tail of the previous (phase-shifted) on-window may cover t=0
         head_end = offset - (1.0 - duty_cycle) * period_s
         if offset > 0.0 and head_end > 0.0:
@@ -306,10 +307,10 @@ def random_availability(
                          "(for an always-online fleet, omit the trace)")
     if not math.isfinite(horizon_s) or horizon_s <= 0:
         raise ValueError("horizon_s must be finite and positive")
-    intervals: Dict[str, List[Tuple[float, float]]] = {}
+    intervals: dict[str, list[tuple[float, float]]] = {}
     for client in clients:
         rng = Random(f"avail:{seed}:{client}")
-        wins: List[Tuple[float, float]] = []
+        wins: list[tuple[float, float]] = []
         duty = mean_online_s / (mean_online_s + mean_offline_s)
         t = 0.0 if rng.random() < duty else rng.expovariate(1.0 / mean_offline_s)
         while t < horizon_s:

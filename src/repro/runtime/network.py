@@ -18,7 +18,8 @@ from __future__ import annotations
 
 import dataclasses
 from random import Random
-from typing import Dict, Mapping, Optional, Sequence, Tuple
+from collections.abc import Mapping, Sequence
+from typing import Optional
 
 
 @dataclasses.dataclass(frozen=True)
@@ -34,7 +35,7 @@ class LinkProfile:
         return self.latency_ms / 1e3 + (nbytes * 8.0) / (self.bandwidth_mbps * 1e6)
 
 
-PROFILES: Dict[str, LinkProfile] = {
+PROFILES: dict[str, LinkProfile] = {
     "fiber": LinkProfile("fiber", bandwidth_mbps=1000.0, latency_ms=2.0, jitter=0.01),
     "cable": LinkProfile("cable", bandwidth_mbps=200.0, latency_ms=10.0, jitter=0.05),
     "wifi": LinkProfile("wifi", bandwidth_mbps=80.0, latency_ms=5.0, jitter=0.10),
@@ -74,7 +75,7 @@ class NetworkModel:
         self.compute = dict(compute or {})
         self.default_compute = default_compute or ComputeProfile()
         self.seed = seed
-        self._rngs: Dict[str, Random] = {}
+        self._rngs: dict[str, Random] = {}
 
     def _rng(self, client: str) -> Random:
         rng = self._rngs.get(client)
@@ -105,7 +106,7 @@ class NetworkModel:
         prof = self.compute.get(client, self.default_compute)
         return self._jittered(client, prof.base_seconds, prof.jitter)
 
-    def floor_seconds(self, client: str) -> Tuple[float, float]:
+    def floor_seconds(self, client: str) -> tuple[float, float]:
         """(min transfer time, min compute time) for ``client`` — hard
         lower bounds regardless of payload size or jitter draw (jitter
         only ever slows transfers down). The scheduler uses these to

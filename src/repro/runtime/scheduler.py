@@ -29,8 +29,13 @@ Fault injection: each dispatch attempt may drop out (seeded Bernoulli,
 re-dispatches up to ``max_retries`` times, then reports the client as
 failed to the policy (`SyncPolicy` renormalizes over survivors,
 `FedBuffPolicy` simply loses the contribution). Chunk-level faults
-compose underneath via :class:`~repro.core.resilience.LossyDriver` +
-``ReliableTransfer`` in the wire, invisible up here.
+compose underneath: set ``chunk_drop_prob``/``chunk_dup_prob``/
+``chunk_reorder_window`` on the simulator's ``SimulationConfig`` and
+every hop runs through :class:`~repro.core.resilience.LossyDriver` +
+``ReliableTransfer``. The wire counts retransmitted chunks into the
+``wire_bytes_down``/``wire_bytes_up`` headers this scheduler feeds to
+the network model, so a lossy link's repairs lengthen simulated
+transfer time — measured, not assumed.
 
 Client availability: an optional :class:`AvailabilityTrace` gives each
 client arrival/departure windows. A dispatch to an offline client is
@@ -46,7 +51,8 @@ import dataclasses
 import math
 from concurrent.futures import Future, ThreadPoolExecutor
 from random import Random
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+from collections.abc import Sequence
+from typing import Any, Optional
 
 from repro.core.messages import Message
 from repro.fl.controller import ClientProxy
@@ -92,7 +98,7 @@ class AsyncFLScheduler:
     ) -> None:
         if not proxies:
             raise ValueError("need at least one client proxy")
-        self.proxies: Dict[str, ClientProxy] = {p.name: p for p in proxies}
+        self.proxies: dict[str, ClientProxy] = {p.name: p for p in proxies}
         if len(self.proxies) != len(proxies):
             raise ValueError("client proxy names must be unique")
         self.policy = policy
@@ -103,7 +109,7 @@ class AsyncFLScheduler:
         self.stats = RuntimeStats()
         self._drop_rng = Random(f"dropout:{self.config.seed}")
         # (dispatch, dispatch_sim_time, future) in launch order
-        self._inflight: List[Tuple[Dispatch, float, Future]] = []
+        self._inflight: list[tuple[Dispatch, float, Future]] = []
 
     # -- real execution (worker threads) ------------------------------------
     def _execute(self, dispatch: Dispatch) -> Message:
@@ -171,6 +177,9 @@ class AsyncFLScheduler:
         """
         for dispatch, t0, future in self._inflight:
             result = future.result()
+            # true bytes-on-wire (frames + envelopes + retransmissions) as
+            # stamped by the simulator wire; payload size is the fallback
+            # for proxies that don't measure their transport
             down = int(result.headers.get("wire_bytes_down", dispatch.task.payload_bytes()))
             up = int(result.headers.get("wire_bytes_up", result.payload_bytes()))
             t_down = self.network.transfer_seconds(dispatch.client, down)
@@ -242,7 +251,7 @@ class AsyncFLScheduler:
         # DISPATCH / ARRIVAL / RETRY / MODEL_UPDATE are timeline markers
 
     # -- main loop -----------------------------------------------------------
-    def run(self, initial_weights: Dict[str, Any]) -> Dict[str, Any]:
+    def run(self, initial_weights: dict[str, Any]) -> dict[str, Any]:
         with ThreadPoolExecutor(max_workers=self.config.max_concurrency) as pool:
             for d in self.policy.begin(dict(initial_weights), list(self.proxies)):
                 self._launch(d, pool)
@@ -261,6 +270,6 @@ class AsyncFLScheduler:
         return self.policy.finish()
 
     @property
-    def timeline(self) -> List[Event]:
+    def timeline(self) -> list[Event]:
         """Processed events in simulated-time order (the run's trace)."""
         return list(self.loop.history)

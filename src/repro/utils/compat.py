@@ -10,7 +10,8 @@ call site goes through these helpers instead of feature-testing inline.
 from __future__ import annotations
 
 import inspect
-from typing import Any, Sequence
+from collections.abc import Sequence
+from typing import Any
 
 import jax
 

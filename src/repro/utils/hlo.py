@@ -24,7 +24,7 @@ from __future__ import annotations
 
 import dataclasses
 import re
-from typing import Dict, List, Optional, Tuple
+from typing import Optional
 
 _DTYPE_BYTES = {
     "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
@@ -61,9 +61,9 @@ _SKIP_TRAFFIC = {
 _SLICE_LIKE = {"dynamic-slice", "gather", "slice"}
 
 
-def _shape_elems_bytes(type_str: str) -> Tuple[List[int], int]:
+def _shape_elems_bytes(type_str: str) -> tuple[list[int], int]:
     total = 0
-    dims_all: List[int] = []
+    dims_all: list[int] = []
     for dtype, dims in _SHAPE_RE.findall(type_str):
         if dtype not in _DTYPE_BYTES:
             continue
@@ -90,13 +90,13 @@ class Op:
 @dataclasses.dataclass
 class Computation:
     name: str
-    ops: List[Op]
+    ops: list[Op]
 
 
-def parse_module(text: str) -> Tuple[Dict[str, Computation], str, Dict[str, str]]:
+def parse_module(text: str) -> tuple[dict[str, Computation], str, dict[str, str]]:
     """Returns (computations, entry_name, symbol->result_type)."""
-    comps: Dict[str, Computation] = {}
-    symbols: Dict[str, str] = {}
+    comps: dict[str, Computation] = {}
+    symbols: dict[str, str] = {}
     entry = ""
     cur: Optional[Computation] = None
     for line in text.splitlines():
@@ -126,7 +126,7 @@ def parse_module(text: str) -> Tuple[Dict[str, Computation], str, Dict[str, str]
     return comps, entry, symbols
 
 
-def _callees(op: Op) -> List[Tuple[str, str]]:
+def _callees(op: Op) -> list[tuple[str, str]]:
     """[(attr_kind, computation_name)] for this op."""
     out = []
     for m in _CALL_ATTR_RE.finditer(op.line):
@@ -152,11 +152,11 @@ def _trip_count(while_line: str, cond: Optional[Computation]) -> int:
 
 
 def compute_multipliers(
-    comps: Dict[str, Computation], entry: str
-) -> Tuple[Dict[str, float], Dict[str, bool]]:
+    comps: dict[str, Computation], entry: str
+) -> tuple[dict[str, float], dict[str, bool]]:
     """computation -> multiplier; computation -> executable?"""
-    mult: Dict[str, float] = {entry: 1.0}
-    execu: Dict[str, bool] = {entry: True}
+    mult: dict[str, float] = {entry: 1.0}
+    execu: dict[str, bool] = {entry: True}
     stack = [entry]
     seen = set()
     while stack:
@@ -197,7 +197,7 @@ def compute_multipliers(
 # FLOPs
 # ---------------------------------------------------------------------------
 
-def _dot_flops(op: Op, symbols: Dict[str, str]) -> float:
+def _dot_flops(op: Op, symbols: dict[str, str]) -> float:
     result_dims, _ = _shape_elems_bytes(op.result_type)
     n_out = 1
     for d in result_dims:
@@ -245,18 +245,18 @@ def _fusion_root(comp: Computation) -> Optional[Op]:
     return comp.ops[-1] if comp.ops else None
 
 
-def _fusion_param_access(comp: Computation) -> Dict[int, str]:
+def _fusion_param_access(comp: Computation) -> dict[int, str]:
     """param index -> access kind ('slice' if only consumed via an internal
 
     dynamic-slice/gather, else 'full'). Scan-body fusions slice their
     residual-stack operands — HBM reads are page-sized, not full-tensor."""
-    param_syms: Dict[str, int] = {}
+    param_syms: dict[str, int] = {}
     for op in comp.ops:
         if op.kind == "parameter":
             m = re.search(r"parameter\((\d+)\)", op.line)
             if m:
                 param_syms[op.name] = int(m.group(1))
-    sliced: Dict[int, bool] = {}
+    sliced: dict[int, bool] = {}
     for op in comp.ops:
         mm = re.search(rf"{op.kind}(?:-start|-done)?\(([^)]*)\)", op.line)
         if not mm:
@@ -274,7 +274,7 @@ def _fusion_param_access(comp: Computation) -> Dict[int, str]:
     return {i: ("slice" if v else "full") for i, v in sliced.items()}
 
 
-def _dus_update_bytes(root: Op, symbols: Dict[str, str]) -> Optional[float]:
+def _dus_update_bytes(root: Op, symbols: dict[str, str]) -> Optional[float]:
     """If `root` is a dynamic-update-slice, bytes of its update operand."""
     if root is None or root.kind != "dynamic-update-slice":
         return None
@@ -360,11 +360,11 @@ def _group_size(line: str) -> int:
     return 2
 
 
-def collective_stats(text: str) -> Dict[str, Dict[str, float]]:
+def collective_stats(text: str) -> dict[str, dict[str, float]]:
     """Loop-aware per-op-kind {count, result_bytes, wire_bytes} per device."""
     comps, entry, symbols = parse_module(text)
     mult, _ = compute_multipliers(comps, entry)
-    stats: Dict[str, Dict[str, float]] = {}
+    stats: dict[str, dict[str, float]] = {}
     for cname, comp in comps.items():
         m = mult.get(cname)
         if not m:
@@ -399,7 +399,7 @@ def count_op(hlo_text: str, opname: str) -> int:
     return len(re.findall(rf"\b{re.escape(opname)}\(", hlo_text))
 
 
-def analyze_module(text: str) -> Dict[str, float]:
+def analyze_module(text: str) -> dict[str, float]:
     return {
         "flops": module_flops(text),
         "traffic_bytes": module_traffic_bytes(text),

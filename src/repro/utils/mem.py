@@ -15,7 +15,8 @@ from __future__ import annotations
 
 import threading
 from contextlib import contextmanager
-from typing import Iterator, Optional
+from collections.abc import Iterator
+from typing import Optional
 
 
 class MemoryMeter:
@@ -26,7 +27,7 @@ class MemoryMeter:
     (per-instance so independent meters don't contend).
     """
 
-    _active: Optional["MemoryMeter"] = None
+    _active: Optional[MemoryMeter] = None
 
     def __init__(self) -> None:
         self.live = 0
@@ -54,11 +55,11 @@ class MemoryMeter:
 
     # -- active-meter plumbing --------------------------------------------
     @classmethod
-    def current(cls) -> Optional["MemoryMeter"]:
+    def current(cls) -> Optional[MemoryMeter]:
         return cls._active
 
     @contextmanager
-    def activate(self) -> Iterator["MemoryMeter"]:
+    def activate(self) -> Iterator[MemoryMeter]:
         prev = MemoryMeter._active
         MemoryMeter._active = self
         try:

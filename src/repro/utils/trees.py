@@ -9,7 +9,8 @@ benchmarks.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Mapping
+from collections.abc import Mapping
+from typing import Any
 
 import jax
 import numpy as np
@@ -30,17 +31,19 @@ def tree_bytes(tree: Any) -> int:
 
 
 def tree_param_count(tree: Any) -> int:
-    return sum(int(np.prod(l.shape)) for l in jax.tree_util.tree_leaves(tree) if hasattr(l, "shape"))
+    return sum(
+        int(np.prod(l.shape)) for l in jax.tree_util.tree_leaves(tree) if hasattr(l, "shape")
+    )
 
 
-def flatten_state_dict(tree: Any, prefix: str = "") -> Dict[str, Any]:
+def flatten_state_dict(tree: Any, prefix: str = "") -> dict[str, Any]:
     """Flatten a nested dict/pytree of arrays to ``{dotted.name: array}``.
 
     Ordering is deterministic (sorted at each level) so that sender and
     receiver agree on the container-streaming item order without
     negotiation.
     """
-    out: Dict[str, Any] = {}
+    out: dict[str, Any] = {}
 
     def rec(node: Any, path: str) -> None:
         if isinstance(node, Mapping):
@@ -58,12 +61,12 @@ def flatten_state_dict(tree: Any, prefix: str = "") -> Dict[str, Any]:
     return out
 
 
-def unflatten_state_dict(flat: Mapping[str, Any]) -> Dict[str, Any]:
+def unflatten_state_dict(flat: Mapping[str, Any]) -> dict[str, Any]:
     """Inverse of :func:`flatten_state_dict` (lists come back as dicts of
 
     int-keyed entries converted to lists when keys are contiguous ints).
     """
-    nested: Dict[str, Any] = {}
+    nested: dict[str, Any] = {}
     for name, value in flat.items():
         parts = name.split(SEP)
         node = nested

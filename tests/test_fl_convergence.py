@@ -42,7 +42,8 @@ def _run_federation(fmt, num_clients=4, seed=0):
 
     def make_client(name, data):
         def train_fn(flat_params, rnd):
-            p = unflatten_state_dict({k: jnp.asarray(np.asarray(v)) for k, v in flat_params.items()})
+            p = unflatten_state_dict(
+                {k: jnp.asarray(np.asarray(v)) for k, v in flat_params.items()})
             opt = adamw_init(p)
             loss = None
             for _ in range(LOCAL_STEPS):

@@ -101,7 +101,8 @@ def test_quantized_fedavg_matches_dequant_then_average():
     qagg = QuantizedFedAvgAggregator()
     ref_agg = FedAvgAggregator()
     for w, n in zip(ws, samples):
-        qm = QuantizeFilter("blockwise8").process(_msg({"w": w, "bias": np.float32([1.0])}, num_samples=n))
+        qm = QuantizeFilter("blockwise8").process(
+            _msg({"w": w, "bias": np.float32([1.0])}, num_samples=n))
         qm.headers["num_samples"] = n
         qagg.accept(qm)
         dm = DequantizeFilter().process(qm)

@@ -99,7 +99,8 @@ def test_collective_parsing_iota_groups_and_loops():
 }
 ENTRY %main (p: f32[128]) -> f32[128] {
   %p = f32[128]{0} parameter(0)
-  %w = (s32[], f32[128]) while(%p), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"10"}}
+  %w = (s32[], f32[128]) while(%p), condition=%cond, body=%body,\
+ backend_config={"known_trip_count":{"n":"10"}}
   ROOT %o = f32[128]{0} get-tuple-element(%w), index=1
 }
 """

@@ -24,7 +24,8 @@ BASE = {
 }
 
 
-@pytest.mark.parametrize("path", sorted(glob.glob(os.path.join(ROOT, "examples", "jobs", "*.json"))))
+@pytest.mark.parametrize(
+    "path", sorted(glob.glob(os.path.join(ROOT, "examples", "jobs", "*.json"))))
 def test_example_jobs_run(path):
     out = run_job_file(path)
     assert out["messages"] > 0 and out["wire_bytes"] > 0
@@ -41,7 +42,8 @@ def test_quantization_config_changes_wire_bytes():
 def test_fused_server_aggregation_matches_plain():
     plain = run_job({**BASE, "quantization": {"fmt": "blockwise8"}, "seed": 3})
     fused = run_job(
-        {**BASE, "quantization": {"fmt": "blockwise8"}, "server_quantized_aggregation": True, "seed": 3}
+        {**BASE, "quantization": {"fmt": "blockwise8"},
+         "server_quantized_aggregation": True, "seed": 3}
     )
     for k in plain["final_weights"]:
         np.testing.assert_allclose(
@@ -144,7 +146,8 @@ def test_dp_sigma_changes_result():
     a = run_job({**BASE, "seed": 1})
     b = run_job({**BASE, "dp_sigma": 0.01, "seed": 1})
     diffs = [
-        float(np.max(np.abs(np.asarray(a["final_weights"][k], np.float32) - np.asarray(b["final_weights"][k], np.float32))))
+        float(np.max(np.abs(np.asarray(a["final_weights"][k], np.float32)
+                            - np.asarray(b["final_weights"][k], np.float32))))
         for k in a["final_weights"]
     ]
     assert max(diffs) > 1e-4  # noise visibly applied

@@ -55,7 +55,8 @@ def test_mlstm_parallel_matches_recurrent():
     )
     hs = []
     for t in range(S):
-        state, h = ssm.mlstm_step(state, q[:, :, t], k[:, :, t], v[:, :, t], logi[:, :, t], logf[:, :, t])
+        state, h = ssm.mlstm_step(
+            state, q[:, :, t], k[:, :, t], v[:, :, t], logi[:, :, t], logf[:, :, t])
         hs.append(h)
     h_rec = jnp.stack(hs, axis=2)
     np.testing.assert_allclose(np.asarray(h_par), np.asarray(h_rec), rtol=2e-4, atol=2e-5)
@@ -77,7 +78,8 @@ def test_mlstm_chunkwise_state_continuation():
         q[:, :, :16], k[:, :, :16], v[:, :, :16], logi[:, :, :16], logf[:, :, :16], chunk=8
     )
     h2, st2 = ssm.mlstm_chunkwise(
-        q[:, :, 16:], k[:, :, 16:], v[:, :, 16:], logi[:, :, 16:], logf[:, :, 16:], chunk=8, state=st1
+        q[:, :, 16:], k[:, :, 16:], v[:, :, 16:], logi[:, :, 16:], logf[:, :, 16:],
+        chunk=8, state=st1
     )
     np.testing.assert_allclose(np.asarray(h1), np.asarray(h_full[:, :, :16]), rtol=2e-4, atol=2e-5)
     np.testing.assert_allclose(np.asarray(h2), np.asarray(h_full[:, :, 16:]), rtol=2e-4, atol=2e-5)

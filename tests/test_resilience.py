@@ -47,7 +47,8 @@ def test_missing_reports_gaps():
     assert buf.missing() == {1, 2}
 
 
-@pytest.mark.parametrize("drop,dup,reorder", [(0.3, 0.0, 0), (0.0, 0.4, 0), (0.0, 0.0, 5), (0.25, 0.25, 4)])
+@pytest.mark.parametrize(
+    "drop,dup,reorder", [(0.3, 0.0, 0), (0.0, 0.4, 0), (0.0, 0.0, 5), (0.25, 0.25, 4)])
 def test_reliable_transfer_through_faults(drop, dup, reorder):
     sd = _sd()
     driver = LossyDriver(

@@ -6,8 +6,8 @@ with the FL simulator and DP filters (paper §V compatibility claims).
 import numpy as np
 import pytest
 
-from repro.core.filters import DPGaussianNoiseFilter, FilterChain, FilterPoint, no_filters
 from repro.core.messages import Message, MessageKind
+from repro.core.pipeline import DPNoiseStage, SecureMaskStage, WirePipeline
 from repro.core.secure_agg import MOD, SCALE, SecureAggregator, SecureMaskFilter
 from repro.fl import FLSimulator, SimulationConfig, TrainExecutor
 
@@ -53,7 +53,9 @@ def test_missing_client_fails_closed():
 def test_secure_agg_through_simulator_with_dp():
     """Full stack: DP noise -> pairwise masking -> streamed wire ->
 
-    SecureAggregator; federation average equals the DP-noised average."""
+    SecureAggregator; federation average equals the DP-noised average.
+    The DP and masking transforms run as per-item pipeline stages inside
+    the streaming loop (client-specific -> install per-proxy uplinks)."""
     clients = [0, 1, 2]
     rng = np.random.default_rng(1)
     locals_ = [rng.standard_normal((64,)).astype(np.float32) for _ in clients]
@@ -64,23 +66,19 @@ def test_secure_agg_through_simulator_with_dp():
 
         return TrainExecutor(f"site-{i}", train_fn)
 
-    server_filters = no_filters()
-    sims = []
     executors = [make_exec(i) for i in clients]
     sim = FLSimulator(
         executors,
         SecureAggregator(num_clients=3),
         SimulationConfig(num_rounds=1, transmission="container", chunk_size=512),
-        server_filters=server_filters,
-        client_filters=no_filters(),
     )
-    # per-client egress chains: DP then mask (client-specific -> install
-    # directly on each proxy's filter dict copy)
     for i, proxy in enumerate(sim.controller.clients):
-        proxy.client_filters = dict(proxy.client_filters)
-        proxy.client_filters[FilterPoint.TASK_RESULT_OUT] = FilterChain(
-            [DPGaussianNoiseFilter(sigma=0.001, seed=i), SecureMaskFilter(i, clients)]
-        )
+        proxy.pipelines = {
+            **proxy.pipelines,
+            "task_result": WirePipeline(
+                [DPNoiseStage(sigma=0.001, seed=i), SecureMaskStage(i, clients)]
+            ),
+        }
     final = sim.run({"w": np.zeros(64, np.float32)})
     want = np.mean(locals_, axis=0)
     np.testing.assert_allclose(final["w"], want, atol=0.01)

@@ -114,7 +114,8 @@ def test_checkpoint_quantized_at_rest(tmp_path, fmt):
 
 
 def test_checkpoint_streaming_load_bounded_memory(tmp_path):
-    tree = {f"layer.{i}": np.random.default_rng(i).standard_normal((256, 64)).astype(np.float32) for i in range(8)}
+    tree = {f"layer.{i}": np.random.default_rng(i).standard_normal((256, 64)).astype(np.float32)
+            for i in range(8)}
     path = str(tmp_path / "big.stream")
     save_checkpoint(path, tree)
     meter = MemoryMeter()
