@@ -1,0 +1,98 @@
+"""Server aggregation-plane peak memory: batch vs streaming (Table
+III-style rows, ISSUE 4 tentpole).
+
+N concurrent clients upload a quantized+compressed model through the
+container wire into one FedAvg aggregator. The *batch* plane decodes
+each client's payload dict before aggregating — one model resident per
+in-flight client, the O(model x clients) bottleneck container streaming
+exists to remove. The *streaming* plane folds each item through
+``begin/accept_item`` inside the receive loop — peak is ~one item per
+sender. Byte-exact accounting via MemoryMeter, like table3.
+"""
+from __future__ import annotations
+
+import threading
+import time
+
+import numpy as np
+
+from repro.core import pipeline as pl
+from repro.core import streaming as sm
+from repro.core.messages import Message, MessageKind
+from repro.fl import CollectingSink, FedAvgAggregator
+from repro.utils import mem
+from repro.utils.mem import MemoryMeter
+
+SENDERS = 8
+STAGES = ("quantize:blockwise8", "zlib")
+
+
+def model_dict(items: int = 64, elems: int = 16384):
+    rng = np.random.default_rng(0)
+    return {f"layers.{i}.w": rng.standard_normal(elems).astype(np.float32)
+            for i in range(items)}
+
+
+def _stream_one(sink, sd, client):
+    p = pl.build_pipeline(list(STAGES))
+    msg = Message(MessageKind.TASK_RESULT, dict(sd),
+                  {"num_samples": 1, "client": client})
+    enc, ctx = p.begin_encode(msg)
+    dec = p.decoder(sink=sink)
+    recv = sm.ContainerReceiver(consume=dec.on_item, decode_item=dec.decode_item)
+    driver = sm.LoopbackDriver()
+    driver.connect(recv.on_chunk)
+    sm.ContainerStreamer(driver, 1 << 16).send_items(
+        p.iter_encode(enc, ctx), p.n_items(enc)
+    )
+    return dec.finish(msg.kind, p.unsent_headers(enc))
+
+
+def _run_mode(sd, streaming: bool):
+    agg = FedAvgAggregator()
+    meter = MemoryMeter()
+
+    def send(i):
+        client = f"site-{i}"
+        if streaming:
+            _stream_one(agg, sd, client)
+        else:
+            sink = CollectingSink()
+            out = _stream_one(sink, sd, client)
+            held = sum(v.nbytes for v in sink.payload.values())
+            mem.record_alloc(held)  # decoded model resident until accept
+            agg.accept(Message(out.kind, sink.payload, out.headers))
+            mem.record_free(held)
+
+    t0 = time.perf_counter()
+    with meter.activate():
+        threads = [threading.Thread(target=send, args=(i,)) for i in range(SENDERS)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+    agg.finish()
+    return meter.peak, (time.perf_counter() - t0) * 1e6
+
+
+def run() -> list[str]:
+    sd = model_dict()
+    model_bytes = sum(v.nbytes for v in sd.values())
+    max_item = max(v.nbytes for v in sd.values())
+    rows = []
+    peaks = {}
+    for mode, streaming in (("batch", False), ("streaming", True)):
+        peak, us = _run_mode(sd, streaming)
+        peaks[mode] = peak
+        rows.append(
+            f"agg_memory/{mode},{us:.0f},peak_bytes={peak};model_bytes={model_bytes};"
+            f"max_item_bytes={max_item};senders={SENDERS}"
+        )
+    ok = peaks["streaming"] < model_bytes < peaks["batch"]
+    rows.append(
+        f"agg_memory/ordering,0,streaming<model<batch={ok};"
+        f"batch_over_streaming={peaks['batch'] / max(1, peaks['streaming']):.1f}x;"
+        f"streaming_items_per_sender="
+        f"{peaks['streaming'] / (SENDERS * max_item):.2f}"
+    )
+    return rows

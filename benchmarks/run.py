@@ -31,12 +31,15 @@ SUITES: dict[str, str] = {
     "async": "benchmarks.async_throughput",
     "hetero": "benchmarks.hetero_fleet",
     "envelope": "benchmarks.pipeline_envelope",
+    "agg_memory": "benchmarks.agg_memory",
 }
 
 # fast subset for the nightly smoke run (skips the convergence sweeps);
 # "envelope" keeps the wire pipeline's O(largest item) peak-memory claim
-# under regression watch in BENCH_*.json
-SMOKE_SUITES = ("table2", "table3", "kernels", "chunks", "async", "hetero", "envelope")
+# under regression watch in BENCH_*.json, and "agg_memory" does the same
+# for the streaming aggregation plane's O(item) server peak
+SMOKE_SUITES = ("table2", "table3", "kernels", "chunks", "async", "hetero",
+                "envelope", "agg_memory")
 
 
 def main(argv: list[str] | None = None) -> int:

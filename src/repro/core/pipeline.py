@@ -58,6 +58,7 @@ from __future__ import annotations
 
 import json
 import struct
+import threading
 import zlib as _zlib
 from collections.abc import Callable, Iterator, Mapping
 from typing import Any, Optional, Union
@@ -69,7 +70,13 @@ from repro.core import secure_agg as sa
 from repro.core.filters import AdaptiveQuantizeFilter, Filter, FilterChain, FilterPoint
 from repro.core.messages import Message, MessageKind
 from repro.core.quantization import QuantizedTensor, dequantize, quantize
+from repro.core.sparse import SparseTensor, topk_sparsify
 from repro.utils import mem
+
+try:  # optional dependency: the zstd stage registers only when importable
+    import zstandard as _zstd_mod
+except ImportError:  # pragma: no cover - environment-dependent
+    _zstd_mod = None
 
 _U32 = struct.Struct("<I")
 
@@ -88,15 +95,21 @@ class WireContext:
     the transmitted headers on the decode side); ``state`` is stage
     scratch space (e.g. the adaptive stage parks its per-message format
     choice); ``decode_values`` mirrors the owning pipeline's setting so
-    value stages know whether their decode hook will run.
+    value stages know whether their decode hook will run. ``vmeta`` is
+    the *current item's* per-stage metadata dict: a value stage may write
+    wire-visible keys into it during ``encode_item`` (the pipeline swaps
+    in a fresh dict per stage per item) and reads the transmitted dict
+    back during ``decode_item`` — how e.g. the ``delta`` stage keeps both
+    ends of its residual stream in verified lockstep.
     """
 
-    __slots__ = ("headers", "state", "decode_values")
+    __slots__ = ("headers", "state", "decode_values", "vmeta")
 
     def __init__(self, headers: dict[str, Any], decode_values: bool = True) -> None:
         self.headers = headers
         self.state: dict[str, Any] = {}
         self.decode_values = decode_values
+        self.vmeta: dict[str, Any] = {}
 
 
 # ---------------------------------------------------------------------------
@@ -228,18 +241,56 @@ class QuantizeStage(Stage):
     neither side ever holds a whole quantized model for transmission.
     Small/integer tensors pass through (same skip rule as the legacy
     :class:`~repro.core.filters.QuantizeFilter`).
+
+    Per-layer precision (the :class:`~repro.core.filters.
+    SelectiveQuantizeFilter` policy as a stage): ``rules`` is an ordered
+    list of ``(substring, fmt)`` pairs — first matching rule decides the
+    tensor's format, ``fmt`` covers the rest, and a rule format of
+    ``None`` keeps the tensor at original precision. Spec forms::
+
+        "quantize:nf4"                           # uniform
+        "quantize:norm=fp16,embed=keep,nf4"      # rules + default
+        {"stage": "quantize", "rules": [["norm", "fp16"], ["embed", null]],
+         "fmt": "nf4"}
+
+    (string rules: ``pattern=fmt`` entries, ``=keep``/empty fmt keeps
+    original precision, a bare trailing token is the default format).
     """
 
-    def __init__(self, fmt: str, min_params: int = 0) -> None:
+    def __init__(self, fmt: Optional[str] = None, min_params: int = 0,
+                 rules: Optional[list] = None) -> None:
+        if not fmt and not rules:
+            raise ValueError(
+                'quantize stage needs a format and/or rules, e.g. "quantize:nf4"'
+            )
         self.fmt = fmt
         self.min_params = min_params
+        self.rules: list[tuple[str, Optional[str]]] = [
+            (str(pat), f) for pat, f in (rules or [])
+        ]
 
     @classmethod
     def from_spec(cls, arg: Optional[str] = None, **kwargs: Any) -> QuantizeStage:
-        fmt = arg or kwargs.pop("fmt", None)
-        if not fmt:
-            raise ValueError('quantize stage needs a format, e.g. "quantize:nf4"')
-        return cls(fmt, **kwargs)
+        if arg and "=" in arg:
+            rules: list[list[Optional[str]]] = []
+            default: Optional[str] = None
+            for part in arg.split(","):
+                pat, eq, f = part.partition("=")
+                if eq:
+                    rules.append([pat, None if f in ("", "keep") else f])
+                elif default is not None:
+                    raise ValueError(
+                        f"quantize rules spec {arg!r} names two default "
+                        f"formats ({default!r} and {pat!r}); use pattern=fmt "
+                        "entries plus at most one bare default"
+                    )
+                else:
+                    default = pat or None
+            kwargs.setdefault("fmt", default)
+            kwargs.setdefault("rules", rules)
+        elif arg:
+            kwargs.setdefault("fmt", arg)
+        return cls(**kwargs)
 
     @classmethod
     def for_decode(cls) -> QuantizeStage:
@@ -247,8 +298,22 @@ class QuantizeStage(Stage):
         # format is irrelevant on the receiving end
         return cls("nf4")
 
+    def _fmt_for(self, name: str) -> Optional[str]:
+        for pat, fmt in self.rules:
+            if pat in name:
+                return fmt
+        return self.fmt
+
+    def _fmt_label(self) -> str:
+        if not self.rules:
+            return str(self.fmt)
+        fmts = {f for _, f in self.rules if f}
+        if self.fmt:
+            fmts.add(self.fmt)
+        return "mixed:" + ",".join(sorted(fmts))
+
     def begin_encode(self, message: Message, ctx: WireContext) -> Message:
-        ctx.headers["quantized_fmt"] = self.fmt
+        ctx.headers["quantized_fmt"] = self._fmt_label()
         return message
 
     def end_decode(self, message: Message, ctx: WireContext) -> Message:
@@ -257,9 +322,10 @@ class QuantizeStage(Stage):
         return message
 
     def encode_item(self, name: str, value: Any, ctx: WireContext) -> Any:
-        if not _is_quantizable(value, self.min_params):
+        fmt = self._fmt_for(name)
+        if fmt is None or not _is_quantizable(value, self.min_params):
             return value
-        return quantize(np.asarray(value), self.fmt)
+        return quantize(np.asarray(value), fmt)
 
     def decode_item(self, name: str, value: Any, ctx: WireContext) -> Any:
         return dequantize(value) if isinstance(value, QuantizedTensor) else value
@@ -509,6 +575,184 @@ class Crc32Stage(Stage):
         return blob
 
 
+def _is_plain_float(value: Any) -> bool:
+    if isinstance(value, (QuantizedTensor, SparseTensor)):
+        return False
+    return bool(np.issubdtype(np.asarray(value).dtype, np.floating))
+
+
+@register_stage("delta")
+class DeltaStage(Stage):
+    """Residual (delta) encoding against the previous round's payload,
+    keyed per (client, tensor): transmits ``x_t - x_{t-1}`` so a
+    near-converged federation ships near-zero tensors — stack ``zlib``
+    (or ``zstd``) after it and the wire cost collapses. Both ends are
+    stateful: the encoder keeps the last value it transmitted per key,
+    the decoder the last reconstruction; the envelope's per-item
+    ``vmeta`` records the stream position (``d``) and whether the item is
+    a full snapshot (``full``, the first transmission per key or a shape
+    change), so a desynchronized receiver raises
+    :class:`WireIntegrityError` instead of reconstructing garbage.
+
+    Compose with *lossless* downstream stages; after a lossy stage
+    (``quantize``) the decoder's reconstruction drifts over rounds — use
+    ``ef-quantize`` in that regime. Stateful (serialized under the
+    simulator's filter lock; not usable on the async scheduler's
+    streaming-aggregation path, which encodes every uplink twice).
+    """
+
+    stateful = True
+
+    def __init__(self) -> None:
+        self._prev_enc: dict[tuple[str, str], np.ndarray] = {}
+        self._prev_dec: dict[tuple[str, str], np.ndarray] = {}
+        self._seq_enc: dict[tuple[str, str], int] = {}
+        self._seq_dec: dict[tuple[str, str], int] = {}
+
+    def encode_item(self, name: str, value: Any, ctx: WireContext) -> Any:
+        if not _is_plain_float(value):
+            return value
+        key = (str(ctx.headers.get("client", "")), name)
+        arr = np.asarray(value, np.float32)
+        base = self._prev_enc.get(key)
+        seq = self._seq_enc.get(key, 0)
+        self._seq_enc[key] = seq + 1
+        ctx.vmeta["d"] = seq
+        if base is None or base.shape != arr.shape:
+            ctx.vmeta["full"] = 1
+            self._prev_enc[key] = arr.copy()
+            return arr
+        delta = arr - base
+        # track the *decoder's* reconstruction, not the raw stream: both
+        # ends stay bit-identical forever and the per-round float32
+        # rounding error never accumulates across rounds
+        self._prev_enc[key] = base + delta
+        return delta
+
+    def decode_item(self, name: str, value: Any, ctx: WireContext) -> Any:
+        if not _is_plain_float(value):
+            return value
+        key = (str(ctx.headers.get("client", "")), name)
+        seq = self._seq_dec.get(key, 0)
+        pos = ctx.vmeta.get("d")
+        if pos is None or int(pos) != seq:
+            raise WireIntegrityError(
+                f"delta stream for item {name!r} (client {key[0]!r}) is out "
+                f"of sync: wire position {pos}, local position {seq}"
+            )
+        self._seq_dec[key] = seq + 1
+        if ctx.vmeta.get("full"):
+            full = np.asarray(value, np.float32)
+        else:
+            base = self._prev_dec.get(key)
+            if base is None:
+                raise WireIntegrityError(
+                    f"delta stream for item {name!r} (client {key[0]!r}) "
+                    "carries a residual but no base reconstruction exists "
+                    "(missing 'full' snapshot)"
+                )
+            full = np.asarray(value, np.float32) + base
+        self._prev_dec[key] = full.copy()
+        return full
+
+
+@register_stage("topk")
+class TopKStage(Stage):
+    """Top-k magnitude sparsification — spec ``topk:0.05`` keeps the 5%
+    largest-|x| entries of each float tensor and ships them as a
+    :class:`~repro.core.sparse.SparseTensor` (indices + values); decode
+    densifies with zeros elsewhere. Small tensors (< ``min_params``)
+    pass through dense — sparsifying a bias vector costs more in indices
+    than it saves. The per-item ``vmeta`` records kept/total counts for
+    wire observability.
+    """
+
+    def __init__(self, fraction: float = 0.1, min_params: int = 256) -> None:
+        if not 0.0 < fraction <= 1.0:
+            raise ValueError(f"topk fraction must be in (0, 1], got {fraction}")
+        self.fraction = fraction
+        self.min_params = min_params
+
+    @classmethod
+    def from_spec(cls, arg: Optional[str] = None, **kwargs: Any) -> TopKStage:
+        if arg is not None:
+            kwargs.setdefault("fraction", float(arg))
+        return cls(**kwargs)
+
+    def encode_item(self, name: str, value: Any, ctx: WireContext) -> Any:
+        if not _is_plain_float(value):
+            return value
+        arr = np.asarray(value)
+        if int(np.prod(arr.shape)) < self.min_params:
+            return value
+        sp = topk_sparsify(arr, self.fraction)
+        ctx.vmeta["k"] = int(sp.values.size)
+        ctx.vmeta["n"] = int(np.prod(sp.orig_shape))
+        return sp
+
+    def decode_item(self, name: str, value: Any, ctx: WireContext) -> Any:
+        return value.to_dense() if isinstance(value, SparseTensor) else value
+
+
+if _zstd_mod is not None:
+    @register_stage("zstd")
+    class ZstdStage(Stage):
+        """Byte-level Zstandard compression of each serialized item —
+        spec ``zstd`` or ``zstd:9``. Registered only when the
+        ``zstandard`` package imports (the registry never advertises a
+        stage the environment cannot decode). Same bounded-decompression
+        discipline as :class:`ZlibStage`: the envelope-declared original
+        length caps expansion and any mismatch raises
+        :class:`WireIntegrityError`."""
+
+        def __init__(self, level: int = 3) -> None:
+            self.level = level
+            # zstd contexts are not thread-safe and cost real setup time;
+            # one stage instance serves concurrent transfers, so cache
+            # one compressor/decompressor per thread instead of per item
+            self._local = threading.local()
+
+        def _ctxs(self) -> tuple[Any, Any]:
+            if not hasattr(self._local, "c"):
+                self._local.c = _zstd_mod.ZstdCompressor(level=self.level)
+                self._local.d = _zstd_mod.ZstdDecompressor()
+            return self._local.c, self._local.d
+
+        @classmethod
+        def from_spec(cls, arg: Optional[str] = None, **kwargs: Any) -> ZstdStage:
+            if arg is not None:
+                kwargs.setdefault("level", int(arg))
+            return cls(**kwargs)
+
+        def encode_item_bytes(
+            self, name: str, blob: bytes, meta: dict[str, Any], ctx: WireContext
+        ) -> bytes:
+            meta["n"] = len(blob)
+            return self._ctxs()[0].compress(blob)
+
+        def decode_item_bytes(
+            self, name: str, blob: bytes, meta: Mapping[str, Any], ctx: WireContext
+        ) -> bytes:
+            n = meta.get("n")
+            if n is None:
+                return self._ctxs()[1].decompress(blob)
+            try:
+                out = self._ctxs()[1].decompress(blob, max_output_size=int(n))
+            except _zstd_mod.ZstdError as exc:
+                # oversize (or otherwise malformed) streams surface as the
+                # same wire-integrity fault undersize ones do
+                raise WireIntegrityError(
+                    f"zstd stream for item {name!r} does not decompress to "
+                    f"its declared length {n}: {exc}"
+                ) from exc
+            if len(out) != int(n):
+                raise WireIntegrityError(
+                    f"zstd stream for item {name!r} does not match its "
+                    f"declared length {n} (got {len(out)} bytes)"
+                )
+            return out
+
+
 # ---------------------------------------------------------------------------
 # Legacy Filter/FilterChain adapters (deprecated surface)
 # ---------------------------------------------------------------------------
@@ -652,12 +896,17 @@ class WirePipeline:
 
     def encode_wire_item(self, name: str, value: Any, ctx: WireContext) -> bytes:
         """One payload item -> envelope bytes (the per-item hot path)."""
+        vmetas: list[dict[str, Any]] = []
         for s in self._vstages:
+            ctx.vmeta = {}
             value = s.encode_item(name, value, ctx)
+            vmetas.append(ctx.vmeta)
         inner = ser.serialize_item(name, value)
-        return self._wrap(name, inner, [s.name for s in self._vstages], ctx)
+        return self._wrap(name, inner, [s.name for s in self._vstages], ctx,
+                          vmetas=vmetas)
 
-    def _wrap(self, name: str, inner: bytes, vnames: list[str], ctx: WireContext) -> bytes:
+    def _wrap(self, name: str, inner: bytes, vnames: list[str], ctx: WireContext,
+              vmetas: Optional[list[dict[str, Any]]] = None) -> bytes:
         if not self._vstages and not self._bstages:
             return inner
         body = inner
@@ -667,6 +916,11 @@ class WirePipeline:
             body = s.encode_item_bytes(name, body, bmeta, ctx)
             brecs.append([s.name, bmeta])
         header = {"kind": "wire", "name": name, "n": len(body), "v": vnames, "b": brecs}
+        if vmetas and any(vmetas):
+            # value-stage per-item metadata, aligned with "v"; omitted
+            # entirely when no stage wrote any (keeps pre-existing
+            # envelopes byte-identical)
+            header["vm"] = vmetas
         hb = json.dumps(header, sort_keys=True).encode()
         return _U32.pack(len(hb)) + hb + body
 
@@ -710,8 +964,12 @@ class WirePipeline:
         return _json_safe(message.headers)[1]
 
     # -- decode side --------------------------------------------------------
-    def decoder(self) -> WireDecoder:
-        return WireDecoder(self)
+    def decoder(self, sink: Optional[Any] = None) -> WireDecoder:
+        """A per-transfer decoder; pass ``sink`` (the streaming-aggregator
+        protocol: ``begin(meta) -> weight`` / ``accept_item(name, value,
+        weight)``) to fold each decoded item downstream immediately
+        instead of collecting a payload dict."""
+        return WireDecoder(self, sink=sink)
 
     def _decode_stage(self, name: str) -> Stage:
         stage = self._by_name.get(name)
@@ -735,7 +993,9 @@ class WirePipeline:
                 body = self._decode_stage(sname).decode_item_bytes(name, body, bmeta, ctx)
             name, value = self._decode_inner(body, ctx)
             if self.decode_values:
-                for sname in reversed(header["v"]):
+                vmetas = header.get("vm") or [{}] * len(header["v"])
+                for sname, vmeta in zip(reversed(header["v"]), reversed(vmetas)):
+                    ctx.vmeta = vmeta
                     value = self._decode_stage(sname).decode_item(name, value, ctx)
             return name, value, 4 + hlen + n
         if kind == "meta":
@@ -758,15 +1018,41 @@ class WirePipeline:
         return message
 
 
-class WireDecoder:
-    """Receiver-side state for one transfer: collects payload items and
-    the transmitted meta item, then assembles the final Message."""
+def _value_nbytes(value: Any) -> int:
+    """Live bytes of one decoded payload value (QuantizedTensor /
+    SparseTensor / array), for metering the streaming-fold hold."""
+    total = getattr(value, "total_bytes", None)
+    if total is not None:
+        return int(total)
+    try:
+        return int(np.asarray(value).nbytes)
+    except (TypeError, ValueError):
+        return 0
 
-    def __init__(self, pipeline: WirePipeline) -> None:
+
+class WireDecoder:
+    """Receiver-side state for one transfer.
+
+    Two consumption modes:
+
+    * **collect** (default): payload items accumulate in ``self.payload``
+      and ``finish`` assembles the full Message — the batch path.
+    * **sink**: each decoded item is handed to ``sink.accept_item(name,
+      value, weight)`` the moment it decodes, then dropped — the item is
+      live (and metered) only for the duration of the fold. The leading
+      meta item triggers ``sink.begin(headers) -> weight`` first, so the
+      sink knows the contribution's sample weight before any tensor
+      arrives. ``finish`` then returns a payload-less Message carrying
+      the transmitted headers.
+    """
+
+    def __init__(self, pipeline: WirePipeline, sink: Optional[Any] = None) -> None:
         self.pipeline = pipeline
         self.ctx = WireContext({}, pipeline.decode_values)
         self.payload: dict[str, Any] = {}
         self.meta: Optional[dict[str, Any]] = None
+        self._sink = sink
+        self._sink_weight: Optional[float] = None
 
     # plugs into ContainerReceiver(decode_item=...)
     def decode_item(self, buf: bytes) -> tuple[str, Any, int]:
@@ -777,6 +1063,17 @@ class WireDecoder:
         if name == META_ITEM:
             self.meta = value
             self.ctx.headers.update(value.get("headers", {}))
+            if self._sink is not None:
+                self._sink_weight = float(
+                    self._sink.begin(dict(value.get("headers", {})))
+                )
+        elif self._sink is not None:
+            if self._sink_weight is None:
+                # no meta item led the stream (bare pre-pipeline wire):
+                # open the contribution with what headers we have
+                self._sink_weight = float(self._sink.begin(dict(self.ctx.headers)))
+            with mem.record_hold(_value_nbytes(value)):
+                self._sink.accept_item(name, value, self._sink_weight)
         else:
             self.payload[name] = value
 

@@ -28,6 +28,7 @@ from typing import Any
 import numpy as np
 
 from repro.core.quantization import QuantizedTensor
+from repro.core.sparse import SparseTensor
 from repro.utils import mem
 
 _U32 = struct.Struct("<I")
@@ -38,7 +39,23 @@ def _arr_bytes(a: Any) -> bytes:
 
 
 def serialize_item(name: str, value: Any) -> bytes:
-    """Serialize one state-dict item (array or QuantizedTensor)."""
+    """Serialize one state-dict item (array, QuantizedTensor or
+    SparseTensor)."""
+    if isinstance(value, SparseTensor):
+        idx = _arr_bytes(value.indices)
+        vals = _arr_bytes(value.values)
+        header = {
+            "kind": "sparse",
+            "name": name,
+            "k": int(value.values.size),
+            "idx_dtype": str(np.asarray(value.indices).dtype),
+            "val_dtype": str(np.asarray(value.values).dtype),
+            "orig_shape": list(value.orig_shape),
+            "orig_dtype": str(np.dtype(value.orig_dtype)),
+        }
+        body = idx + vals
+        hbytes = json.dumps(header, sort_keys=True).encode()
+        return _U32.pack(len(hbytes)) + hbytes + body
     if isinstance(value, QuantizedTensor):
         payload = _arr_bytes(value.payload)
         absmax = _arr_bytes(value.absmax) if value.absmax is not None else b""
@@ -72,6 +89,17 @@ def deserialize_item(buf: bytes) -> tuple[str, Any, int]:
     (hlen,) = _U32.unpack_from(buf, 0)
     header = json.loads(buf[4 : 4 + hlen].decode())
     off = 4 + hlen
+    if header["kind"] == "sparse":
+        k = int(header["k"])
+        idx_dtype = np.dtype(header["idx_dtype"])
+        val_dtype = np.dtype(header["val_dtype"])
+        indices = np.frombuffer(buf, idx_dtype, count=k, offset=off)
+        off += k * idx_dtype.itemsize
+        values = np.frombuffer(buf, val_dtype, count=k, offset=off)
+        off += k * val_dtype.itemsize
+        sp = SparseTensor(indices, values, tuple(header["orig_shape"]),
+                          np.dtype(header["orig_dtype"]))
+        return header["name"], sp, off
     if header["kind"] == "qtensor":
         pshape = tuple(header["payload_shape"])
         pdtype = np.dtype(header["payload_dtype"])

@@ -431,15 +431,40 @@ class FileStreamer:
 # ObjectRetriever (pull-mode, paper contribution 2)
 # ---------------------------------------------------------------------------
 
+class _ConsumeSink:
+    """Adapts a plain ``consume(name, value)`` callback onto the
+    streaming-sink protocol the wire decoder drives."""
+
+    def __init__(self, consume: Callable[[str, Any], None]) -> None:
+        self._consume = consume
+
+    def begin(self, meta: Mapping[str, Any]) -> float:
+        return float(meta.get("num_samples", 1))
+
+    def accept_item(self, name: str, value: Any, weight: float) -> None:
+        self._consume(name, value)
+
+
 class ObjectRetriever:
     """Holder registers objects; peers retrieve them by id over a chosen
 
     streaming mode. This is the integration surface existing workflows use
     without restructuring their code around push-streaming callbacks.
+
+    Pull-mode transfers take the same transform stack as the push wire:
+    pass a :class:`~repro.core.pipeline.WirePipeline` (at construction or
+    per ``retrieve``) and every container item runs the stage encode
+    hooks on the holder side and the stage decode hooks on the retriever
+    side, *inside* the streaming loop — a quantized+compressed pull peaks
+    at ~one item, exactly like the push path. ``consume`` (incremental
+    per-item delivery) and ``sink`` (the streaming-aggregator
+    ``begin``/``accept_item`` protocol) both compose with a pipeline.
     """
 
-    def __init__(self, chunk_size: int = DEFAULT_CHUNK_SIZE) -> None:
+    def __init__(self, chunk_size: int = DEFAULT_CHUNK_SIZE,
+                 pipeline: Optional[Any] = None) -> None:
         self.chunk_size = chunk_size
+        self.pipeline = pipeline
         self._registry: dict[str, tuple[str, Any]] = {}
 
     def register_container(self, obj_id: str, sd: Mapping[str, Any]) -> str:
@@ -457,16 +482,35 @@ class ObjectRetriever:
         mode: str = "container",
         out_path: Optional[str] = None,
         consume: Optional[Callable[[str, Any], None]] = None,
+        pipeline: Optional[Any] = None,
+        sink: Optional[Any] = None,
     ) -> Any:
         kind, obj = self._registry[obj_id]
         driver = driver or LoopbackDriver()
+        pipeline = pipeline if pipeline is not None else self.pipeline
+        if consume is not None and sink is not None:
+            raise ValueError("pass either consume= or sink=, not both")
         if kind == "file":
+            if pipeline is not None:
+                raise ValueError(
+                    "file retrieval streams raw chunks; per-item pipeline "
+                    "stages apply to container retrievals only"
+                )
             assert out_path is not None, "file retrieval needs out_path"
             receiver: Any = FileReceiver(out_path)
             driver.connect(receiver.on_chunk)
             FileStreamer(driver, self.chunk_size).send_file(obj)
             driver.close()
             return out_path
+        if pipeline is not None:
+            return self._retrieve_pipelined(obj, driver, mode, pipeline, consume, sink)
+        if mode != "container" and (consume is not None or sink is not None):
+            raise ValueError(
+                "regular (blob) retrieval reassembles the whole container; "
+                "incremental consume=/sink= delivery needs mode='container'"
+            )
+        if sink is not None:
+            consume = _SinkConsume(sink)
         if mode == "container":
             receiver = ContainerReceiver(consume=consume)
             driver.connect(receiver.on_chunk)
@@ -479,3 +523,49 @@ class ObjectRetriever:
         ObjectStreamer(driver, self.chunk_size).send_container(obj)
         driver.close()
         return receiver.result
+
+    def _retrieve_pipelined(self, sd: Mapping[str, Any], driver: Driver,
+                            mode: str, pipeline: Any,
+                            consume: Optional[Callable[[str, Any], None]],
+                            sink: Optional[Any]) -> Any:
+        # imported here, not at module level: streamers/receivers stay
+        # codec-agnostic; only the pull-mode convenience surface knows
+        # how to drive a pipeline end to end
+        from repro.core.messages import Message, MessageKind
+
+        if consume is not None:
+            sink = _ConsumeSink(consume)
+        msg = Message(MessageKind.TASK_DATA, dict(sd))
+        enc, ctx = pipeline.begin_encode(msg)
+        decoder = pipeline.decoder(sink=sink)
+        if mode == "container":
+            receiver: Any = ContainerReceiver(consume=decoder.on_item,
+                                              decode_item=decoder.decode_item)
+            driver.connect(receiver.on_chunk)
+            ContainerStreamer(driver, self.chunk_size).send_items(
+                pipeline.iter_encode(enc, ctx), pipeline.n_items(enc)
+            )
+        else:
+            receiver = BlobReceiver(decode_container=decoder.decode_blob)
+            driver.connect(receiver.on_chunk)
+            ObjectStreamer(driver, self.chunk_size).send_blob(
+                pipeline.encode_blob(enc, ctx)
+            )
+        driver.close()
+        out = decoder.finish(msg.kind, pipeline.unsent_headers(enc))
+        return out.payload if sink is None else None
+
+
+class _SinkConsume:
+    """Adapts a streaming sink onto the plain receiver ``consume``
+    callback (pipeline-less pull path): opens the contribution on the
+    first item with weight 1."""
+
+    def __init__(self, sink: Any) -> None:
+        self._sink = sink
+        self._weight: Optional[float] = None
+
+    def __call__(self, name: str, value: Any) -> None:
+        if self._weight is None:
+            self._weight = float(self._sink.begin({}))
+        self._sink.accept_item(name, value, self._weight)

@@ -1,11 +1,24 @@
-from repro.fl.aggregator import FedAvgAggregator, QuantizedFedAvgAggregator
+from repro.fl.aggregator import (
+    Aggregator,
+    CollectingSink,
+    FedAvgAggregator,
+    QuantizedFedAvgAggregator,
+    build_aggregator,
+    register_aggregator,
+    registered_aggregators,
+)
 from repro.fl.controller import ScatterAndGather, make_task
 from repro.fl.executor import Executor, TrainExecutor
 from repro.fl.simulator import FLSimulator, SimulationConfig, TrafficStats
 
 __all__ = [
+    "Aggregator",
+    "CollectingSink",
     "FedAvgAggregator",
     "QuantizedFedAvgAggregator",
+    "build_aggregator",
+    "register_aggregator",
+    "registered_aggregators",
     "ScatterAndGather",
     "make_task",
     "Executor",

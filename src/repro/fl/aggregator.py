@@ -1,20 +1,50 @@
-"""Server-side aggregation.
+"""Server-side aggregation — the streaming-first aggregation plane.
+
+Aggregators implement one uniform **streaming protocol**, registry-keyed
+like pipeline stages and runtime policies:
+
+* ``begin(meta) -> weight`` — a client contribution starts; ``meta`` is
+  the transmitted message-header dict (``num_samples``, ``client``,
+  ``round`` ...). Returns the sample weight every subsequent
+  ``accept_item`` call for this contribution should carry.
+* ``accept_item(name, value, weight)`` — one payload item of one
+  contribution, folded into the running aggregate immediately. Called
+  straight from the wire decode loop (``ContainerReceiver.consume`` ->
+  ``WireDecoder`` -> here), so a quantized+compressed item is
+  dequantized, folded, and freed before the next item arrives — the
+  server never materializes a client's payload dict.
+* ``finish() -> dict`` — close the aggregate and reset.
+
+``accept(message)`` is the batch shim: it drives the exact same protocol
+methods in payload order, so batch and streaming aggregation run
+*identical arithmetic in identical order* — bitwise-equal results by
+construction (tests assert this across every transmission mode).
 
 :class:`FedAvgAggregator` is the paper-faithful path: Task Results arrive
-*already dequantized* (the TASK_RESULT_IN filter ran), and aggregation is
-a sample-weighted average at original precision. It accumulates
-**incrementally** — one client at a time, and within a client one item at
-a time — so it composes with container streaming without ever holding K
-full models (only the running sum + one incoming item).
+*already dequantized* (the pipeline's value stages decode in the
+streaming loop), and aggregation is a sample-weighted average at original
+precision — running sum + one in-flight item, never K full models.
 
-:class:`QuantizedFedAvgAggregator` is the beyond-paper path (DESIGN.md
-§3): the server skips the ingress dequantize filter, stacks the int8
+:class:`QuantizedFedAvgAggregator` is the beyond-paper path: the server
+keeps the uplink in wire form (``decode_values=False``), stacks the int8
 payloads and calls the fused dequant+accumulate kernel. The aggregate is
-bit-identical to dequantize-then-average (tests assert this).
+bit-identical to dequantize-then-average (tests assert this). Note its
+buffering is inherently O(quantized payload x clients) — the kernel
+batches — which is still ~4-8x below fp32 batch aggregation.
+
+Thread safety: ``begin``/``accept_item``/``finish`` serialize on a
+per-instance lock, so many clients may stream into one aggregator
+concurrently (the MemoryMeter acceptance test drives 32 senders at
+once). Fold *order* under concurrency follows stream interleaving;
+sample-weighted sums are order-independent in exact arithmetic, and the
+deterministic runtimes (sequential controller, event scheduler) fold in
+a fixed order anyway.
 """
 from __future__ import annotations
 
-from typing import Any
+import threading
+from collections.abc import Callable, Mapping
+from typing import Any, Union
 
 import jax.numpy as jnp
 import numpy as np
@@ -24,51 +54,99 @@ from repro.core.quantization import QuantizedTensor
 from repro.kernels import ops
 
 
-class FedAvgAggregator:
+class Aggregator:
+    """Protocol base: the streaming begin/accept_item/finish surface.
+
+    Subclasses override the three protocol methods; ``accept`` (the
+    whole-message shim) is derived and should not normally be overridden.
+    """
+
+    name: str = "aggregator"
+
+    def weight_of(self, meta: Mapping[str, Any]) -> float:
+        """The item weight one contribution's headers imply (pure)."""
+        return float(meta.get("num_samples", 1))
+
+    def begin(self, meta: Mapping[str, Any]) -> float:
+        """Register one client contribution; returns its item weight."""
+        raise NotImplementedError
+
+    def accept_item(self, name: str, value: Any, weight: float) -> None:
+        """Fold one payload item of one contribution."""
+        raise NotImplementedError
+
+    def finish(self) -> dict[str, Any]:
+        """Close the aggregate, reset state, return the result."""
+        raise NotImplementedError
+
+    def accept(self, result: Message) -> None:
+        """Batch shim: drive the streaming protocol in payload order.
+
+        The contribution is registered (``begin``) only after every item
+        folded, so a payload that fails validation mid-message never
+        leaves a phantom sample weight diluting ``finish()``.
+        """
+        w = self.weight_of(result.headers)
+        for name, value in result.payload.items():
+            self.accept_item(name, value, w)
+        self.begin(result.headers)
+
+
+class FedAvgAggregator(Aggregator):
     """Sample-weighted incremental FedAvg at original precision."""
+
+    name = "fedavg"
 
     def __init__(self) -> None:
         self._sum: dict[str, np.ndarray] = {}
         self._weight = 0.0
         self.accepted = 0
+        self._lock = threading.Lock()
 
-    def accept(self, result: Message) -> None:
-        w = float(result.headers.get("num_samples", 1))
-        for name, value in result.payload.items():
-            if isinstance(value, QuantizedTensor):
-                raise TypeError(
-                    f"FedAvgAggregator received a quantized item {name!r}; "
-                    "install a DequantizeFilter at TASK_RESULT_IN or use "
-                    "QuantizedFedAvgAggregator"
-                )
-            self.accept_item(name, value, w)
-        self._weight += w
-        self.accepted += 1
+    def begin(self, meta: Mapping[str, Any]) -> float:
+        w = self.weight_of(meta)
+        with self._lock:
+            self._weight += w
+            self.accepted += 1
+        return w
 
     def accept_item(self, name: str, value: Any, weight: float) -> None:
         """Streaming entry point: one item of one client's result."""
+        if isinstance(value, QuantizedTensor):
+            raise TypeError(
+                f"FedAvgAggregator received a quantized item {name!r}; "
+                "decode values on the uplink pipeline (the default) or use "
+                "QuantizedFedAvgAggregator"
+            )
         arr = np.asarray(value, dtype=np.float32) * weight
-        if name in self._sum:
-            self._sum[name] += arr
-        else:
-            self._sum[name] = arr
+        with self._lock:
+            if name in self._sum:
+                self._sum[name] += arr
+            else:
+                self._sum[name] = arr
 
     def finish(self) -> dict[str, np.ndarray]:
-        if self._weight <= 0:
-            raise RuntimeError("no results accepted")
-        out = {name: (arr / self._weight).astype(np.float32) for name, arr in self._sum.items()}
-        self._sum = {}
-        self._weight = 0.0
-        self.accepted = 0
+        with self._lock:
+            if self._weight <= 0:
+                raise RuntimeError("no results accepted")
+            out = {
+                name: (arr / self._weight).astype(np.float32)
+                for name, arr in self._sum.items()
+            }
+            self._sum = {}
+            self._weight = 0.0
+            self.accepted = 0
         return out
 
 
-class QuantizedFedAvgAggregator:
+class QuantizedFedAvgAggregator(Aggregator):
     """Aggregates blockwise8 Task Results directly from int8 payloads
 
     via the fused Pallas kernel — the server never materializes K fp32
     models. Non-quantized (small) items fall back to plain averaging.
     """
+
+    name = "quantized-fedavg"
 
     def __init__(self) -> None:
         self._q: dict[str, list[tuple[QuantizedTensor, float]]] = {}
@@ -76,38 +154,126 @@ class QuantizedFedAvgAggregator:
         self._plain_names: set[str] = set()
         self._weight = 0.0
         self.accepted = 0
+        self._lock = threading.Lock()
 
-    def accept(self, result: Message) -> None:
-        w = float(result.headers.get("num_samples", 1))
-        for name, value in result.payload.items():
-            if isinstance(value, QuantizedTensor):
-                if value.fmt != "blockwise8":
-                    raise TypeError(
-                        f"QuantizedFedAvgAggregator supports blockwise8; {name!r} is {value.fmt}"
-                    )
-                self._q.setdefault(name, []).append((value, w))
-            else:
-                self._plain.accept_item(name, value, w)
+    def begin(self, meta: Mapping[str, Any]) -> float:
+        w = self.weight_of(meta)
+        with self._lock:
+            self._weight += w
+            self.accepted += 1
+        return w
+
+    def accept_item(self, name: str, value: Any, weight: float) -> None:
+        if isinstance(value, QuantizedTensor):
+            if value.fmt != "blockwise8":
+                raise TypeError(
+                    f"QuantizedFedAvgAggregator supports blockwise8; {name!r} is {value.fmt}"
+                )
+            with self._lock:
+                self._q.setdefault(name, []).append((value, weight))
+        else:
+            self._plain.accept_item(name, value, weight)
+            with self._lock:
                 self._plain_names.add(name)
-        self._weight += w
-        self.accepted += 1
 
     def finish(self) -> dict[str, np.ndarray]:
-        out: dict[str, np.ndarray] = {}
-        for name, contribs in self._q.items():
-            qs = jnp.stack([np.asarray(qt.payload) for qt, _ in contribs])
-            ams = jnp.stack([np.asarray(qt.absmax) for qt, _ in contribs])
-            ws = jnp.asarray([w for _, w in contribs], jnp.float32) / self._weight
-            agg2d = ops.dequant_accumulate8(qs, ams, ws)
-            qt0 = contribs[0][0]
-            n = int(np.prod(qt0.orig_shape))
-            out[name] = np.asarray(agg2d).reshape(-1)[:n].reshape(qt0.orig_shape).astype(np.float32)
-        if self._plain_names:
-            # reuse the plain aggregator's running sum (shares self._weight)
-            self._plain._weight = self._weight
-            out.update(self._plain.finish())
-        self._q = {}
-        self._plain_names = set()
-        self._weight = 0.0
-        self.accepted = 0
+        with self._lock:
+            out: dict[str, np.ndarray] = {}
+            for name, contribs in self._q.items():
+                qs = jnp.stack([np.asarray(qt.payload) for qt, _ in contribs])
+                ams = jnp.stack([np.asarray(qt.absmax) for qt, _ in contribs])
+                ws = jnp.asarray([w for _, w in contribs], jnp.float32) / self._weight
+                agg2d = ops.dequant_accumulate8(qs, ams, ws)
+                qt0 = contribs[0][0]
+                n = int(np.prod(qt0.orig_shape))
+                out[name] = (
+                    np.asarray(agg2d).reshape(-1)[:n].reshape(qt0.orig_shape)
+                    .astype(np.float32)
+                )
+            if self._plain_names:
+                # reuse the plain aggregator's running sum (shares self._weight)
+                self._plain._weight = self._weight
+                out.update(self._plain.finish())
+            self._q = {}
+            self._plain_names = set()
+            self._weight = 0.0
+            self.accepted = 0
         return out
+
+
+class CollectingSink:
+    """Protocol-shaped sink that just rebuilds the payload dict — the
+    fallback for consumers that still need whole-message results (e.g. a
+    third-party policy without a streaming override)."""
+
+    def __init__(self) -> None:
+        self.payload: dict[str, Any] = {}
+        self.meta: dict[str, Any] = {}
+
+    def begin(self, meta: Mapping[str, Any]) -> float:
+        self.meta = dict(meta)
+        return float(meta.get("num_samples", 1))
+
+    def accept_item(self, name: str, value: Any, weight: float) -> None:
+        self.payload[name] = value
+
+
+# ---------------------------------------------------------------------------
+# Aggregator registry (the job system resolves "aggregator" names here)
+# ---------------------------------------------------------------------------
+
+_AGGREGATORS: dict[str, Callable[..., Aggregator]] = {}
+
+
+def register_aggregator(
+    name: str,
+) -> Callable[[Callable[..., Aggregator]], Callable[..., Aggregator]]:
+    """Decorator binding a spec name to an aggregator factory — the same
+    registry pattern as ``repro.core.pipeline.register_stage`` and
+    ``repro.runtime.async_agg.register_policy``; third-party aggregators
+    become addressable from job specs without touching :mod:`repro.fl.job`.
+    """
+
+    def deco(factory: Callable[..., Aggregator]) -> Callable[..., Aggregator]:
+        if name in _AGGREGATORS:
+            raise ValueError(
+                f"aggregator name {name!r} already registered ({_AGGREGATORS[name]})"
+            )
+        _AGGREGATORS[name] = factory
+        return factory
+
+    return deco
+
+
+def registered_aggregators() -> tuple[str, ...]:
+    return tuple(sorted(_AGGREGATORS))
+
+
+def build_aggregator(spec: Union[str, Mapping[str, Any], Aggregator, None],
+                     default: str = "fedavg") -> Aggregator:
+    """``"fedavg"`` | ``{"aggregator": "quantized-fedavg"}`` | instance."""
+    if spec is None:
+        spec = default
+    if isinstance(spec, Aggregator):
+        return spec
+    kwargs: dict[str, Any] = {}
+    if isinstance(spec, Mapping):
+        kwargs = dict(spec)
+        try:
+            spec = kwargs.pop("aggregator")
+        except KeyError:
+            raise ValueError(
+                f'aggregator dict spec needs an "aggregator" name key '
+                f"(got {sorted(kwargs)}); registered: {registered_aggregators()}"
+            ) from None
+    try:
+        factory = _AGGREGATORS[spec]
+    except KeyError:
+        raise ValueError(
+            f"unknown aggregator {spec!r}; registered: {registered_aggregators()}"
+        ) from None
+    return factory(**kwargs)
+
+
+register_aggregator("fedavg")(FedAvgAggregator)
+register_aggregator("quantized-fedavg")(QuantizedFedAvgAggregator)

@@ -9,6 +9,7 @@ drivers, or the mesh view.
 """
 from __future__ import annotations
 
+import inspect
 from collections.abc import Callable, Mapping, Sequence
 from typing import Any, Optional
 
@@ -30,11 +31,20 @@ def make_task(rnd: int, global_weights: Mapping[str, Any]) -> Message:
 
 
 class ClientProxy:
-    """What the Controller sees of one client site."""
+    """What the Controller sees of one client site.
+
+    ``result_sink`` (optional) is the streaming-aggregation hook: a
+    proxy that supports it feeds the Task Result's decoded items into
+    ``sink.begin(meta)`` / ``sink.accept_item(name, value, weight)``
+    *during* the uplink transfer and returns a payload-less Message
+    (headers only) — the server never materializes the client's payload
+    dict. Proxies that ignore the argument simply return the full result
+    for batch aggregation.
+    """
 
     name: str = "client"
 
-    def submit_task(self, task: Message) -> Message:
+    def submit_task(self, task: Message, result_sink: Optional[Any] = None) -> Message:
         raise NotImplementedError
 
 
@@ -45,13 +55,46 @@ class ScatterAndGather:
         aggregator: Any,
         num_rounds: int,
         on_round_end: Optional[Callable[[int, dict[str, Any], list[Message]], None]] = None,
+        streaming: bool = False,
     ) -> None:
+        """``streaming=True`` hands the aggregator to each proxy as the
+        uplink result sink: one decoded item is folded into the running
+        aggregate and freed before the next arrives, so server peak
+        memory is ~one item instead of one model. Clients run one at a
+        time in list order either way, so streaming and batch aggregation
+        execute *identical arithmetic in identical order* — bitwise-equal
+        final weights (tested). Requires an aggregator implementing the
+        :class:`~repro.fl.aggregator.Aggregator` streaming protocol."""
         if not clients:
             raise ValueError("need at least one client")
         self.clients = list(clients)
         self.aggregator = aggregator
         self.num_rounds = num_rounds
         self.on_round_end = on_round_end
+        self.streaming = streaming
+        if streaming and not (
+            hasattr(aggregator, "begin") and hasattr(aggregator, "accept_item")
+        ):
+            raise TypeError(
+                f"streaming aggregation needs the begin/accept_item/finish "
+                f"protocol; {type(aggregator).__name__} lacks it (see the "
+                "README migration note for custom aggregators)"
+            )
+        if streaming:
+            for c in self.clients:
+                try:
+                    accepts = "result_sink" in inspect.signature(
+                        c.submit_task
+                    ).parameters
+                except (TypeError, ValueError):  # uninspectable: trust it
+                    accepts = True
+                if not accepts:
+                    raise TypeError(
+                        f"client proxy {type(c).__name__} predates streaming "
+                        "aggregation: its submit_task takes no result_sink "
+                        "argument — add the parameter (see ClientProxy) or "
+                        "run without streaming"
+                    )
 
     def run(self, initial_weights: dict[str, Any]) -> dict[str, Any]:
         """The Controller's run() method (paper §II-A): task distribution
@@ -62,8 +105,13 @@ class ScatterAndGather:
             results: list[Message] = []
             for client in self.clients:
                 task = make_task(rnd, global_weights)
-                result = client.submit_task(task)
-                self.aggregator.accept(result)
+                if self.streaming:
+                    # the uplink wire folds each decoded item straight
+                    # into the aggregator; result carries headers only
+                    result = client.submit_task(task, result_sink=self.aggregator)
+                else:
+                    result = client.submit_task(task)
+                    self.aggregator.accept(result)
                 results.append(result)
             global_weights = self.aggregator.finish()
             if self.on_round_end is not None:

@@ -16,6 +16,8 @@ only the job spec.
         "task_result_out": ["quantize:nf4", "zlib", "crc32"]
       },
       "transmission": "container", "driver": "loopback", "chunk_mb": 1,
+      "server_streaming_agg": true,   # fold uplink items as they decode
+      "aggregator": "fedavg",         # any registered aggregator name
       "runtime": {                       # optional: async scenario engine
         "policy": "fedasync",            # any registered policy name
         "max_concurrency": 8, "dropout_prob": 0.1, "max_retries": 2,
@@ -67,7 +69,7 @@ from repro.core.filters import (
 )
 from repro.core.pipeline import AdaptiveQuantizeStage, build_pipeline
 from repro.data import dirichlet_partition, iid_partition
-from repro.fl.aggregator import FedAvgAggregator, QuantizedFedAvgAggregator
+from repro.fl.aggregator import build_aggregator
 from repro.fl.executor import TrainExecutor
 from repro.fl.simulator import FLSimulator, SimulationConfig
 from repro.models import create_model
@@ -91,6 +93,16 @@ DEFAULTS: dict[str, Any] = {
     "driver": "loopback",
     "chunk_mb": 1,
     "server_quantized_aggregation": False,
+    # streaming-first aggregation plane: Task Result items fold into the
+    # aggregator one at a time inside the receive loop (server peak
+    # transmission+aggregation memory ~ one item, not one model per
+    # in-flight client); composes with every policy and with
+    # server_quantized_aggregation
+    "server_streaming_agg": False,
+    # registry-keyed aggregator selection ("fedavg", "quantized-fedavg",
+    # or anything registered via repro.fl.aggregator.register_aggregator);
+    # None resolves from server_quantized_aggregation
+    "aggregator": None,
     "runtime": None,
     "seed": 0,
 }
@@ -336,12 +348,15 @@ def build_job(spec: dict[str, Any]) -> Job:
         return TrainExecutor(name, train_fn)
 
     client_names = [f"site-{i}" for i in range(len(datasets))]
-    agg = (
-        QuantizedFedAvgAggregator()
-        if spec.get("server_quantized_aggregation")
-        and (spec.get("quantization") or spec.get("pipeline"))
-        else FedAvgAggregator()
-    )
+    agg_spec = spec.get("aggregator")
+    if agg_spec is None:
+        agg_spec = (
+            "quantized-fedavg"
+            if spec.get("server_quantized_aggregation")
+            and (spec.get("quantization") or spec.get("pipeline"))
+            else "fedavg"
+        )
+    agg = build_aggregator(agg_spec)
     runtime_kwargs = _build_runtime(spec, agg, client_names)
     if spec.get("pipeline"):
         pipelines, adaptive = _build_pipelines(spec, runtime_kwargs.get("network"))
@@ -360,6 +375,7 @@ def build_job(spec: dict[str, Any]) -> Job:
             chunk_size=int(spec["chunk_mb"] * (1 << 20)),
             driver=spec["driver"],
         ),
+        server_streaming_agg=bool(spec.get("server_streaming_agg")),
         **wire_kwargs,
         **runtime_kwargs,
     )

@@ -181,9 +181,23 @@ class _Wire:
         message: Message,
         pipeline: WirePipeline,
         lock: Optional[threading.Lock] = None,
-    ) -> tuple[Message, int]:
+        sink: Optional[Any] = None,
+        count_only: bool = False,
+        record_stats: bool = True,
+    ) -> tuple[Optional[Message], int]:
         """Send ``message`` through ``pipeline`` over one fresh driver;
         returns the received message and the true bytes put on the wire.
+
+        ``sink`` switches the receiving end to streaming aggregation:
+        each decoded item is folded via ``sink.begin``/``sink.
+        accept_item`` inside the receive loop and freed, and the returned
+        Message carries headers only. ``count_only`` runs the encode and
+        framing with a null receiver — the byte-pricing pass the async
+        scheduler uses to simulate uplink time before the deferred fold
+        transfer (stage encode is deterministic for stateless pipelines,
+        so the later fold pass produces identical bytes). ``record_stats
+        =False`` keeps a second pass over the same message out of
+        :class:`TrafficStats`.
         """
         cfg = self.cfg
         base = self._driver()
@@ -196,14 +210,18 @@ class _Wire:
                 seed=self._fault_key(message),
             )
         driver = CountingDriver(base)
-        decoder = pipeline.decoder()
         regular = cfg.transmission == "regular"
-        if regular:
-            recv: Any = sm.BlobReceiver(decode_container=decoder.decode_blob)
+        decoder: Optional[Any] = None
+        if count_only:
+            recv: Any = _NullReceiver()
+        elif regular:
+            decoder = pipeline.decoder(sink=sink)
+            recv = sm.BlobReceiver(decode_container=decoder.decode_blob)
         else:
             # container streaming is also the carrier for "file" payloads in
             # the simulator; true file transfer is exercised by FileStreamer
             # paths in the streaming demo / Table III benchmark.
+            decoder = pipeline.decoder(sink=sink)
             recv = sm.ContainerReceiver(consume=decoder.on_item,
                                         decode_item=decoder.decode_item)
         hold = lock if (lock is not None and pipeline.stateful) else contextlib.nullcontext()
@@ -245,12 +263,23 @@ class _Wire:
             finally:
                 if held:
                     mem.record_free(held)
-            out = decoder.finish(msg.kind, pipeline.unsent_headers(msg))
+            out = (
+                decoder.finish(msg.kind, pipeline.unsent_headers(msg))
+                if decoder is not None else None
+            )
         # payload_bytes is the *pre-transform* logical size on both wire
         # paths (the legacy shim replaces msg's payload in begin_encode),
         # so bytes_sent / payload_bytes is an honest end-to-end ratio
-        self.stats.add(driver.bytes_sent, message.payload_bytes(), retransmits)
+        if record_stats:
+            self.stats.add(driver.bytes_sent, message.payload_bytes(), retransmits)
         return out, driver.bytes_sent
+
+
+class _NullReceiver:
+    """Byte-pricing receiver: frames arrive, nothing is reassembled."""
+
+    def on_chunk(self, chunk: sm.Chunk) -> None:
+        pass
 
 
 class _SimClientProxy(ClientProxy):
@@ -276,7 +305,7 @@ class _SimClientProxy(ClientProxy):
         self.wire = wire
         self.filter_lock = filter_lock
 
-    def submit_task(self, task: Message) -> Message:
+    def submit_task(self, task: Message, result_sink: Optional[Any] = None) -> Message:
         # destination goes in the headers so egress stages can be
         # link-aware (the adaptive stage picks per-client precision)
         task.headers.setdefault("client", self.name)
@@ -284,8 +313,12 @@ class _SimClientProxy(ClientProxy):
             task, self.pipelines["task_data"], self.filter_lock
         )
         result = self.executor.execute(task)
+        # with a result_sink the uplink decode folds each item straight
+        # into the sink (streaming aggregation); the returned message
+        # then carries headers only
         result, wire_bytes_up = self.wire.transmit(
-            result, self.pipelines["task_result"], self.filter_lock
+            result, self.pipelines["task_result"], self.filter_lock,
+            sink=result_sink,
         )
         # actual on-the-wire sizes of both hops (frames + envelopes +
         # retransmissions), for the runtime's network model: quantized or
@@ -293,6 +326,69 @@ class _SimClientProxy(ClientProxy):
         result.headers["wire_bytes_down"] = wire_bytes_down
         result.headers["wire_bytes_up"] = wire_bytes_up
         return result
+
+    def stream_task(self, task: Message) -> _PendingUplink:
+        """Async streaming-aggregation round trip, first half: downlink +
+        local compute + a byte-pricing pass over the uplink (encode and
+        frame into a null receiver — no server-side buffering). The
+        returned handle carries the timing headers the scheduler needs;
+        the actual uplink fold transfer runs later, via
+        :meth:`_PendingUplink.deliver`, at the completion instant in
+        simulated-time order."""
+        task.headers.setdefault("client", self.name)
+        task, wire_bytes_down = self.wire.transmit(
+            task, self.pipelines["task_data"], self.filter_lock
+        )
+        result = self.executor.execute(task)
+        _, wire_bytes_up = self.wire.transmit(
+            result, self.pipelines["task_result"], self.filter_lock,
+            count_only=True,
+        )
+        headers = dict(result.headers)
+        headers["wire_bytes_down"] = wire_bytes_down
+        headers["wire_bytes_up"] = wire_bytes_up
+        return _PendingUplink(self, result, headers)
+
+
+class _PendingUplink:
+    """A completed client computation whose uplink fold transfer is
+    deferred: the client-side Task Result stays on the client until the
+    scheduler delivers it into a policy sink at the simulated completion
+    instant. ``headers`` already carry both hops' wire byte counts (from
+    the pricing pass), so the scheduler's timing code reads this object
+    exactly like a batch result."""
+
+    def __init__(self, proxy: _SimClientProxy, result: Message,
+                 headers: dict[str, Any]) -> None:
+        self._proxy = proxy
+        self._result = result
+        self.headers = headers
+        self.kind = result.kind
+
+    def payload_bytes(self) -> int:
+        return self._result.payload_bytes()
+
+    def deliver(self, sink: Any) -> Message:
+        """Run the real uplink transfer, folding each decoded item into
+        ``sink`` — the server holds ~one item at a time. Bytes are not
+        re-counted (the pricing pass already did); a mismatch against the
+        priced total would mean the simulated clock was fed wrong bytes,
+        so it is a hard error."""
+        out, wire_bytes = self._proxy.wire.transmit(
+            self._result, self._proxy.pipelines["task_result"],
+            self._proxy.filter_lock, sink=sink, record_stats=False,
+        )
+        if wire_bytes != self.headers["wire_bytes_up"]:
+            raise RuntimeError(
+                f"uplink fold transfer produced {wire_bytes} wire bytes but "
+                f"the pricing pass measured {self.headers['wire_bytes_up']} — "
+                "the task_result pipeline is not deterministic (stateful "
+                "stages cannot run under async streaming aggregation)"
+            )
+        out.headers.update(
+            {k: self.headers[k] for k in ("wire_bytes_down", "wire_bytes_up")}
+        )
+        return out
 
 
 def _as_pipeline(value: PipelineLike) -> WirePipeline:
@@ -315,6 +411,7 @@ class FLSimulator:
         policy: Optional[Any] = None,    # repro.runtime.AggregationPolicy override
         network: Optional[Any] = None,   # repro.runtime.NetworkModel override
         availability: Optional[Any] = None,  # repro.runtime.AvailabilityTrace
+        server_streaming_agg: bool = False,
     ) -> None:
         """``pipelines`` maps hop direction -> wire stack: ``{"task_data":
         ["quantize:nf4", "zlib"], "task_result": WirePipeline([...])}``
@@ -325,6 +422,18 @@ class FLSimulator:
         whole-message pipeline stages (bitwise-identical results, but the
         full transformed payload is materialized before streaming).
         Mutually exclusive with ``pipelines``.
+
+        ``server_streaming_agg=True`` turns on streaming aggregation:
+        Task Result items fold into the aggregation plane one at a time
+        as they decode, so server peak transmission+aggregation memory is
+        ~one item instead of one model per in-flight client. On the
+        sequential controller the fold runs during the uplink transfer
+        (bitwise-equal to batch aggregation — same order, same
+        arithmetic); on the async scheduler the uplink is priced on the
+        worker thread and the fold transfer runs at the simulated
+        completion instant in event order (deterministic; see
+        ``repro.runtime.scheduler``), which requires a *stateless*
+        task_result pipeline.
         """
         self.config = config or SimulationConfig()
         if pipelines is not None and (server_filters is not None or client_filters is not None):
@@ -343,10 +452,32 @@ class FLSimulator:
             )
         self.stats = TrafficStats()
         self.meter = MemoryMeter()
+        self.server_streaming_agg = server_streaming_agg
         use_async = (
             runtime is not None or policy is not None
             or network is not None or availability is not None
         )
+        if server_streaming_agg:
+            from repro.core.pipeline import IngressFilterStage
+
+            if any(isinstance(s, IngressFilterStage)
+                   for s in self.pipelines["task_result"].stages):
+                raise ValueError(
+                    "streaming aggregation folds items as they decode, but a "
+                    "legacy server-ingress filter (TASK_RESULT_IN, e.g. "
+                    "DequantizeFilter) transforms the payload only after full "
+                    "reassembly; declare the uplink as per-item pipeline "
+                    'stages instead (e.g. "quantize:nf4" — decode is '
+                    "automatic from the envelope)"
+                )
+        if server_streaming_agg and use_async and self.pipelines["task_result"].stateful:
+            raise ValueError(
+                "async streaming aggregation encodes each uplink twice (a "
+                "byte-pricing pass, then the fold transfer), so the "
+                "task_result pipeline must be stateless — ef-quantize, "
+                "dp-noise, delta and stateful legacy filters cannot run "
+                "there; use the sequential controller or stateless stages"
+            )
         wire = _Wire(self.config, self.stats)
         filter_lock = threading.Lock() if use_async else None
         self.proxies = [
@@ -367,10 +498,12 @@ class FLSimulator:
                 network=network,
                 config=runtime or RuntimeConfig(),
                 availability=availability,
+                streaming_agg=server_streaming_agg,
             )
         else:
             self.controller = ScatterAndGather(
-                self.proxies, aggregator, self.config.num_rounds, on_round_end=on_round_end
+                self.proxies, aggregator, self.config.num_rounds,
+                on_round_end=on_round_end, streaming=server_streaming_agg,
             )
 
     def run(self, initial_weights: dict[str, Any]) -> dict[str, Any]:

@@ -35,6 +35,15 @@ Policies are transport-ignorant: they see completed
 :class:`~repro.core.messages.Message` results (already through all four
 filter points) and emit :class:`Dispatch` records; the scheduler owns
 time, links, threads and faults.
+
+Streaming aggregation (``server_streaming_agg``) swaps the result path
+to :meth:`AggregationPolicy.on_result_stream`: instead of a decoded
+Message, the policy receives a ``deliver(sink)`` callable that runs the
+uplink fold transfer at the completion instant, pushing one decoded item
+at a time into the sink the policy chooses. Every built-in policy folds
+into *per-item running state* (the aggregator's sums, the FedBuff delta
+buffer, the FedAsync global model) rather than buffering payload dicts;
+third-party policies inherit a collect-and-call-``on_result`` fallback.
 """
 from __future__ import annotations
 
@@ -45,7 +54,8 @@ from typing import Any, Optional
 
 import numpy as np
 
-from repro.core.messages import Message
+from repro.core.messages import Message, MessageKind
+from repro.fl.aggregator import CollectingSink
 from repro.fl.controller import make_task
 
 
@@ -70,6 +80,28 @@ class AggregationPolicy:
     def on_result(self, dispatch: Dispatch, result: Message) -> list[Dispatch]:
         raise NotImplementedError
 
+    def on_result_stream(
+        self,
+        dispatch: Dispatch,
+        headers: Mapping[str, Any],
+        deliver: Callable[[Any], Message],
+    ) -> list[Dispatch]:
+        """Streaming-aggregation result path: called at the simulated
+        completion instant (event order, scheduler thread) *instead of*
+        :meth:`on_result`. ``headers`` are the result's headers (sample
+        counts, wire bytes); ``deliver(sink)`` runs the uplink fold
+        transfer, pushing each decoded item through ``sink.begin``/
+        ``sink.accept_item`` and freeing it — call it at most once, with
+        a sink that folds items into per-item running state.
+
+        The default adapts any policy that only implements
+        :meth:`on_result`: items are collected back into a payload dict
+        (no memory win, full compatibility).
+        """
+        sink = CollectingSink()
+        msg = deliver(sink)
+        return self.on_result(dispatch, Message(msg.kind, sink.payload, dict(msg.headers)))
+
     def on_client_failed(self, dispatch: Dispatch) -> list[Dispatch]:
         """Called when a client exhausted its dropout retries."""
         return []
@@ -92,8 +124,10 @@ class SyncPolicy(AggregationPolicy):
     Results may *complete* in any simulated order, but aggregation per
     round runs in client-list order once the barrier closes, so the float
     summation order — and hence the output bits — match the sequential
-    controller. Clients that permanently dropped out are skipped (the
-    sample-weighted average renormalizes over survivors).
+    controller. (Under streaming aggregation the fold instead runs at
+    each completion instant, in completion order — see
+    :meth:`on_result_stream`.) Clients that permanently dropped out are
+    skipped (the sample-weighted average renormalizes over survivors).
 
     Subclasses may narrow each round to a cohort by overriding
     :meth:`_select_round_clients` (see :class:`TieredPolicy`).
@@ -116,6 +150,7 @@ class SyncPolicy(AggregationPolicy):
         self._weights: dict[str, Any] = {}
         self._results: dict[str, Message] = {}
         self._failed: set = set()
+        self._streamed: set = set()  # clients already folded via streaming
 
     def begin(self, initial_weights, clients):
         self._clients = list(clients)
@@ -132,6 +167,7 @@ class SyncPolicy(AggregationPolicy):
     def _dispatch_round(self) -> list[Dispatch]:
         self._results = {}
         self._failed = set()
+        self._streamed = set()
         self._round_clients = self._select_round_clients()
         return [
             Dispatch(c, make_task(self._round, self._weights), version=self._round)
@@ -143,8 +179,12 @@ class SyncPolicy(AggregationPolicy):
 
     def _close_round(self) -> list[Dispatch]:
         ordered = [self._results[c] for c in self._round_clients if c in self._results]
-        for result in ordered:
-            self.aggregator.accept(result)
+        # batch contributions were buffered whole and fold now, in
+        # client-list order at the barrier (the sequential controller's
+        # exact order); streamed clients already folded at completion
+        for c in self._round_clients:
+            if c in self._results and c not in self._streamed:
+                self.aggregator.accept(self._results[c])
         self._weights = self.aggregator.finish()
         if self.on_round_end is not None:
             self.on_round_end(self._round, self._weights, ordered)
@@ -157,6 +197,25 @@ class SyncPolicy(AggregationPolicy):
         if dispatch.version != self._round:
             return []  # stale straggler from an already-closed round
         self._results[dispatch.client] = result
+        return self._close_round() if self._round_done() else []
+
+    def on_result_stream(self, dispatch, headers, deliver):
+        """Streaming barrier: each completing client folds straight into
+        the aggregator's per-item running sums at its completion instant
+        — the policy buffers header-only records, never payload dicts, so
+        round memory is one running aggregate instead of one model per
+        cohort client. Folds run in completion order (deterministic in
+        simulated time); bitwise-equal to the batch barrier whenever
+        completion order matches client-list order (uniform jitter-free
+        links — tested), numerically equivalent otherwise.
+        """
+        if dispatch.version != self._round:
+            return []  # stale straggler from an already-closed round
+        self._streamed.add(dispatch.client)
+        deliver(self.aggregator)
+        self._results[dispatch.client] = Message(
+            MessageKind.TASK_RESULT, {}, dict(headers)
+        )
         return self._close_round() if self._round_done() else []
 
     def on_client_failed(self, dispatch):
@@ -237,6 +296,58 @@ class _BudgetedAsyncPolicy(AggregationPolicy):
         return dict(self._weights)
 
 
+class _FedBuffFoldSink:
+    """Per-dispatch streaming sink for FedBuff: folds ``(value - base) *
+    w`` into the policy's shared per-item delta sums the moment each item
+    decodes — identical arithmetic and item order to the batch
+    ``on_result`` loop, so streaming and batch aggregation are
+    bitwise-equal. ``base`` is the dispatched task payload the policy
+    already holds (the arrays are shared with the global model snapshot,
+    not copies)."""
+
+    def __init__(self, policy: FedBuffPolicy, dispatch: Dispatch, w: float) -> None:
+        self._policy = policy
+        self._base = dispatch.task.payload
+        self._w = w
+
+    def begin(self, meta: Mapping[str, Any]) -> float:
+        return self._w  # staleness weight fixed at the completion instant
+
+    def accept_item(self, name: str, value: Any, weight: float) -> None:
+        base = self._base.get(name)
+        if base is None or not np.issubdtype(np.asarray(value).dtype, np.floating):
+            return
+        delta = (np.asarray(value, np.float32) - np.asarray(base, np.float32)) * self._w
+        sums = self._policy._delta_sum
+        if name in sums:
+            sums[name] += delta
+        else:
+            sums[name] = delta
+
+
+class _FedAsyncFoldSink:
+    """Per-dispatch streaming sink for FedAsync: applies the per-item mix
+    ``w <- (1 - a) w + a w_client`` as each item decodes — the same op,
+    in the same item order, as the batch ``on_result`` loop."""
+
+    def __init__(self, policy: FedAsyncPolicy, a: float) -> None:
+        self._policy = policy
+        self._a = a
+
+    def begin(self, meta: Mapping[str, Any]) -> float:
+        return self._a
+
+    def accept_item(self, name: str, value: Any, weight: float) -> None:
+        weights = self._policy._weights
+        cur = weights.get(name)
+        if cur is None or not np.issubdtype(np.asarray(value).dtype, np.floating):
+            return
+        a = self._a
+        weights[name] = (
+            (1.0 - a) * np.asarray(cur, np.float32) + a * np.asarray(value, np.float32)
+        ).astype(np.float32)
+
+
 class FedBuffPolicy(_BudgetedAsyncPolicy):
     """Staleness-weighted buffered async aggregation.
 
@@ -303,6 +414,24 @@ class FedBuffPolicy(_BudgetedAsyncPolicy):
             self._flush()
         return self._next_task(dispatch.client)
 
+    def on_result_stream(self, dispatch, headers, deliver):
+        """Streaming FedBuff: the delta buffer *is* the per-item running
+        state — each arriving item's weighted delta folds into it during
+        the uplink transfer, and the full client payload is never held.
+        Runs at the completion instant with completion-time staleness,
+        exactly like :meth:`on_result` — bitwise-equal results."""
+        staleness = self._version - dispatch.version
+        self.staleness_seen.append(staleness)
+        w = float(headers.get("num_samples", 1)) * self.staleness_weight(staleness)
+        if w > 0:
+            deliver(_FedBuffFoldSink(self, dispatch, w))
+            self._wsum += w
+            self._buffered += 1
+        self._done += 1
+        if self._buffered >= self.buffer_size:
+            self._flush()
+        return self._next_task(dispatch.client)
+
     def finish(self):
         self._flush()  # partial buffer still carries information
         return dict(self._weights)
@@ -350,6 +479,21 @@ class FedAsyncPolicy(_BudgetedAsyncPolicy):
             self._weights[name] = (
                 (1.0 - a) * np.asarray(cur, np.float32) + a * np.asarray(value, np.float32)
             ).astype(np.float32)
+        self._version += 1
+        self._done += 1
+        if self.on_update is not None:
+            self.on_update(self._version, self._weights)
+        return self._next_task(dispatch.client)
+
+    def on_result_stream(self, dispatch, headers, deliver):
+        """Streaming FedAsync: the global model *is* the per-item running
+        state — each arriving item is mixed in place during the uplink
+        transfer. Same per-item op and order as :meth:`on_result` at the
+        same completion instant — bitwise-equal results."""
+        staleness = self._version - dispatch.version
+        self.staleness_seen.append(staleness)
+        a = self.mixing_rate * self.staleness_weight(staleness)
+        deliver(_FedAsyncFoldSink(self, a))
         self._version += 1
         self._done += 1
         if self.on_update is not None:

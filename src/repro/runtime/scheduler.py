@@ -54,7 +54,6 @@ from random import Random
 from collections.abc import Sequence
 from typing import Any, Optional
 
-from repro.core.messages import Message
 from repro.fl.controller import ClientProxy
 from repro.runtime.async_agg import AggregationPolicy, Dispatch
 from repro.runtime.events import AvailabilityTrace, Event, EventKind, EventLoop
@@ -82,11 +81,28 @@ class RuntimeStats:
     model_updates: int = 0
     deferrals: int = 0      # dispatches parked until a client's arrival
     interruptions: int = 0  # round trips cut short by a client departure
+    settle_waves: int = 0   # calls into the settle loop
+    settled_futures: int = 0  # round trips timestamped (== dispatches at end)
+    partial_settles: int = 0  # settles that stopped early, leaving trips in flight
     sim_time_s: float = 0.0
 
 
 class AsyncFLScheduler:
-    """Runs an :class:`AggregationPolicy` over real client proxies."""
+    """Runs an :class:`AggregationPolicy` over real client proxies.
+
+    ``streaming_agg=True`` switches the result path to streaming
+    aggregation: worker threads run downlink + compute + a byte-pricing
+    pass over the uplink (so simulated times are fed the same true wire
+    bytes as ever), and the *fold* transfer — decode one item, fold it
+    into the policy's per-item running state, free it — runs at the
+    COMPLETION instant on the scheduler thread, in simulated-time order.
+    One fold stream is live at a time, so server-side
+    transmission+aggregation memory peaks at ~one item regardless of how
+    many clients are in flight, and fold order is fully deterministic.
+    Requires proxies exposing ``stream_task`` (the simulator's proxies
+    do) and a stateless task_result pipeline; proxies without it fall
+    back to the batch path transparently.
+    """
 
     def __init__(
         self,
@@ -95,6 +111,7 @@ class AsyncFLScheduler:
         network: Optional[NetworkModel] = None,
         config: Optional[RuntimeConfig] = None,
         availability: Optional[AvailabilityTrace] = None,
+        streaming_agg: bool = False,
     ) -> None:
         if not proxies:
             raise ValueError("need at least one client proxy")
@@ -105,6 +122,7 @@ class AsyncFLScheduler:
         self.config = config or RuntimeConfig()
         self.network = network or NetworkModel(seed=self.config.seed)
         self.availability = availability
+        self.streaming_agg = streaming_agg
         self.loop = EventLoop()
         self.stats = RuntimeStats()
         self._drop_rng = Random(f"dropout:{self.config.seed}")
@@ -112,8 +130,10 @@ class AsyncFLScheduler:
         self._inflight: list[tuple[Dispatch, float, Future]] = []
 
     # -- real execution (worker threads) ------------------------------------
-    def _execute(self, dispatch: Dispatch) -> Message:
+    def _execute(self, dispatch: Dispatch) -> Any:
         proxy = self.proxies[dispatch.client]
+        if self.streaming_agg and hasattr(proxy, "stream_task"):
+            return proxy.stream_task(dispatch.task)  # deferred-uplink handle
         return proxy.submit_task(dispatch.task)
 
     def _fail_client(self, dispatch: Dispatch, pool: ThreadPoolExecutor) -> None:
@@ -165,63 +185,94 @@ class AsyncFLScheduler:
         )
 
     def _settle(self) -> None:
-        """Wait for every in-flight round trip and timestamp it.
+        """Timestamp in-flight round trips, in launch order, stopping as
+        soon as no remaining trip can beat the queue's head.
 
         Event *times* depend only on bytes + seeds, never on which
         worker thread finished first, and futures are settled in launch
-        order, so the timeline is deterministic. Parallelism is
-        wave-level: every dispatch launched since the last settle runs
-        concurrently on the pool; the loop only blocks here when
-        ``_must_settle`` says an in-flight trip could produce the next
-        event.
+        order, so the timeline is deterministic. The early stop is the
+        settle-wave relaxation (profiled at 200 clients): the old
+        full-wave barrier blocked on *every* in-flight future before
+        processing the next event, so one wall-clock straggler stalled
+        the whole loop even when its earliest possible event lay far in
+        the simulated future. Settling only the launch-order prefix that
+        can still affect the next event lets queued completions process
+        — and their follow-up dispatches launch — while stragglers keep
+        running on the pool. The dropout RNG is consumed in launch order
+        either way, so timelines are unchanged.
         """
-        for dispatch, t0, future in self._inflight:
-            result = future.result()
-            # true bytes-on-wire (frames + envelopes + retransmissions) as
-            # stamped by the simulator wire; payload size is the fallback
-            # for proxies that don't measure their transport
-            down = int(result.headers.get("wire_bytes_down", dispatch.task.payload_bytes()))
-            up = int(result.headers.get("wire_bytes_up", result.payload_bytes()))
-            t_down = self.network.transfer_seconds(dispatch.client, down)
-            t_compute = self.network.compute_seconds(dispatch.client)
-            t_up = self.network.transfer_seconds(dispatch.client, up)
-            total = t_down + t_compute + t_up
-            departs = (
-                self.availability.online_until(dispatch.client, t0)
-                if self.availability is not None else math.inf
-            )
-            dropped = self._drop_rng.random() < self.config.dropout_prob
-            drop_t = t0 + self.config.drop_after_frac * total
-            if dropped and drop_t < departs:
-                self.loop.schedule_at(drop_t, EventKind.DROPOUT, dispatch.client,
-                                      dispatch=dispatch)
-            elif t0 + total > departs:
-                # client leaves mid round trip: the trip dies at the
-                # departure instant and re-dispatches on the next arrival
-                if t0 + t_down < departs:
-                    self.loop.schedule_at(t0 + t_down, EventKind.ARRIVAL, dispatch.client,
-                                          version=dispatch.version)
-                self.loop.schedule_at(departs, EventKind.INTERRUPT, dispatch.client,
-                                      dispatch=dispatch)
-            else:
+        self.stats.settle_waves += 1
+        pending = self._inflight
+        self._inflight = []
+        while pending:
+            if not self.loop.empty:
+                next_t = self.loop.peek().time
+                if all(self._earliest_possible(d, t0) >= next_t
+                       for d, t0, _ in pending):
+                    self._inflight = pending
+                    self.stats.partial_settles += 1
+                    return
+            dispatch, t0, future = pending.pop(0)
+            self._settle_one(dispatch, t0, future)
+            self.stats.settled_futures += 1
+
+    def _settle_one(self, dispatch: Dispatch, t0: float, future: Future) -> None:
+        """Wait for one round trip and schedule its timeline events."""
+        result = future.result()
+        # true bytes-on-wire (frames + envelopes + retransmissions) as
+        # stamped by the simulator wire; payload size is the fallback
+        # for proxies that don't measure their transport
+        down = int(result.headers.get("wire_bytes_down", dispatch.task.payload_bytes()))
+        up = int(result.headers.get("wire_bytes_up", result.payload_bytes()))
+        t_down = self.network.transfer_seconds(dispatch.client, down)
+        t_compute = self.network.compute_seconds(dispatch.client)
+        t_up = self.network.transfer_seconds(dispatch.client, up)
+        total = t_down + t_compute + t_up
+        departs = (
+            self.availability.online_until(dispatch.client, t0)
+            if self.availability is not None else math.inf
+        )
+        dropped = self._drop_rng.random() < self.config.dropout_prob
+        drop_t = t0 + self.config.drop_after_frac * total
+        if dropped and drop_t < departs:
+            self.loop.schedule_at(drop_t, EventKind.DROPOUT, dispatch.client,
+                                  dispatch=dispatch)
+        elif t0 + total > departs:
+            # client leaves mid round trip: the trip dies at the
+            # departure instant and re-dispatches on the next arrival
+            if t0 + t_down < departs:
                 self.loop.schedule_at(t0 + t_down, EventKind.ARRIVAL, dispatch.client,
                                       version=dispatch.version)
-                self.loop.schedule_at(
-                    t0 + total,
-                    EventKind.COMPLETION,
-                    dispatch.client,
-                    dispatch=dispatch,
-                    result=result,
-                )
-        self._inflight = []
+            self.loop.schedule_at(departs, EventKind.INTERRUPT, dispatch.client,
+                                  dispatch=dispatch)
+        else:
+            self.loop.schedule_at(t0 + t_down, EventKind.ARRIVAL, dispatch.client,
+                                  version=dispatch.version)
+            self.loop.schedule_at(
+                t0 + total,
+                EventKind.COMPLETION,
+                dispatch.client,
+                dispatch=dispatch,
+                result=result,
+            )
 
     # -- event handlers (scheduler thread, simulated-time order) ------------
     def _handle(self, event: Event, pool: ThreadPoolExecutor) -> None:
         if event.kind is EventKind.COMPLETION:
             self.stats.completions += 1
             dispatch: Dispatch = event.data["dispatch"]
+            result = event.data["result"]
             before = self.policy.model_version
-            follow_ups = self.policy.on_result(dispatch, event.data["result"])
+            if hasattr(result, "deliver"):
+                # streaming aggregation: the uplink fold transfer runs
+                # NOW, on this thread, in simulated-time order — one
+                # decoded item live at a time, straight into the
+                # policy's per-item running state
+                follow_ups = self.policy.on_result_stream(
+                    dispatch, result.headers, result.deliver
+                )
+            else:
+                follow_ups = self.policy.on_result(dispatch, result)
             if self.policy.model_version != before:
                 self.stats.model_updates += 1
                 self.loop.schedule(0.0, EventKind.MODEL_UPDATE,

@@ -499,3 +499,217 @@ def test_unknown_driver_name_raises():
             FedAvgAggregator(),
             SimulationConfig(driver="quic"),
         ).run({"w": np.zeros(4, np.float32)})
+
+
+# ---------------------------------------------------------------------------
+# delta / topk / zstd stages + quantize rules (ISSUE 4 satellites)
+# ---------------------------------------------------------------------------
+
+def test_delta_stage_transmits_residuals_and_reconstructs():
+    """Round r ships x_r - base_{r-1}; the decoder reconstructs each x_r
+    to one float32 rounding (the encoder tracks the decoder's
+    reconstruction, so the error never accumulates across rounds), and
+    the envelope meta tracks the stream position."""
+    rng = np.random.default_rng(0)
+    xs = [rng.standard_normal((64,)).astype(np.float32) for _ in range(8)]
+    p = pl.WirePipeline([pl.build_stage("delta")])
+    for i, x in enumerate(xs):
+        msg, ctx = p.begin_encode(_msg({"w": x.copy()}, client="site-0"))
+        blob = p.encode_wire_item("w", msg.payload["w"], ctx)
+        (hlen,) = struct.unpack_from("<I", blob, 0)
+        header = json.loads(blob[4:4 + hlen])
+        assert header["v"] == ["delta"]
+        assert header["vm"][0]["d"] == i          # stream position on the wire
+        assert header["vm"][0].get("full", 0) == (1 if i == 0 else 0)
+        name, value, _ = p.decoder().decode_item(blob)
+        np.testing.assert_allclose(np.asarray(value), x, rtol=1e-6, atol=1e-6)
+
+
+def test_delta_stage_near_converged_rounds_compress_away():
+    """The point of delta encoding: once the model stops moving, the
+    residual is all zeros and zlib collapses it."""
+    x = np.linspace(-1, 1, 1 << 14).astype(np.float32)
+    p = pl.WirePipeline([pl.build_stage("delta"), pl.build_stage("zlib")])
+
+    def wire_len(arr):
+        msg, ctx = p.begin_encode(_msg({"w": arr.copy()}, client="c"))
+        blob = p.encode_wire_item("w", msg.payload["w"], ctx)
+        name, value, _ = p.decoder().decode_item(blob)
+        np.testing.assert_array_equal(np.asarray(value), arr)
+        return len(blob)
+
+    first = wire_len(x)
+    repeat = wire_len(x)  # unchanged payload => zero residual
+    assert repeat < first / 100
+
+
+def test_delta_stage_residual_streams_are_per_client():
+    x = np.ones((32,), np.float32)
+    p = pl.WirePipeline([pl.build_stage("delta")])
+
+    def roundtrip(client):
+        msg, ctx = p.begin_encode(_msg({"w": x.copy()}, client=client))
+        blob = p.encode_wire_item("w", msg.payload["w"], ctx)
+        (hlen,) = struct.unpack_from("<I", blob, 0)
+        return json.loads(blob[4:4 + hlen])["vm"][0]
+
+    assert roundtrip("site-a") == {"d": 0, "full": 1}
+    assert roundtrip("site-b") == {"d": 0, "full": 1}  # b starts fresh
+    assert roundtrip("site-a")["d"] == 1
+
+
+def test_delta_stage_desynchronized_receiver_fails_loudly():
+    x = np.ones((16,), np.float32)
+    sender = pl.WirePipeline([pl.build_stage("delta")])
+    for _ in range(2):
+        msg, ctx = sender.begin_encode(_msg({"w": x.copy()}, client="c"))
+        blob = sender.encode_wire_item("w", msg.payload["w"], ctx)
+    # a fresh receiver (registry fallback) is at position 0, wire says 1
+    with pytest.raises(pl.WireIntegrityError, match="out of sync"):
+        pl.build_pipeline([]).decoder().decode_item(blob)
+
+
+def test_topk_stage_roundtrip_and_sparse_golden_serialization():
+    rng = np.random.default_rng(3)
+    x = rng.standard_normal((1 << 12,)).astype(np.float32)
+    p = pl.build_pipeline(["topk:0.05"])
+    msg, ctx = p.begin_encode(_msg({"w": x.copy()}))
+    blob = p.encode_wire_item("w", msg.payload["w"], ctx)
+    (hlen,) = struct.unpack_from("<I", blob, 0)
+    header = json.loads(blob[4:4 + hlen])
+    k = int(np.ceil(0.05 * x.size))
+    assert header["vm"][0] == {"k": k, "n": x.size}
+    assert len(blob) < x.nbytes / 2  # indices+values beat dense
+    name, value, _ = p.decoder().decode_item(blob)
+    dense = np.asarray(value)
+    kept = np.flatnonzero(dense)
+    assert len(kept) == k
+    np.testing.assert_array_equal(dense[kept], x[kept])  # survivors exact
+    # the k largest |x| all survived
+    assert np.min(np.abs(x[kept])) >= np.max(np.abs(np.delete(x, kept)))
+
+
+def test_topk_sparse_tensor_inner_codec_roundtrip():
+    from repro.core.serialization import deserialize_item, serialize_item
+    from repro.core.sparse import topk_sparsify
+
+    x = np.arange(-8, 8, dtype=np.float32).reshape(4, 4)
+    sp = topk_sparsify(x, 0.25)
+    name, back, consumed = deserialize_item(serialize_item("w", sp))
+    assert name == "w" and consumed == len(serialize_item("w", sp))
+    np.testing.assert_array_equal(back.to_dense(), sp.to_dense())
+    assert back.orig_shape == (4, 4)
+
+
+def test_topk_small_tensors_pass_dense():
+    p = pl.build_pipeline([{"stage": "topk", "fraction": 0.1, "min_params": 64}])
+    out = _roundtrip(p, _msg({"bias": np.arange(8, dtype=np.float32)}))
+    np.testing.assert_array_equal(np.asarray(out.payload["bias"]),
+                                  np.arange(8, dtype=np.float32))
+
+
+def test_zstd_stage_registered_only_when_importable():
+    try:
+        import zstandard  # noqa: F401
+        available = True
+    except ImportError:
+        available = False
+    assert ("zstd" in pl.registered_stages()) == available
+
+
+def test_zstd_stage_roundtrip_when_available():
+    pytest.importorskip("zstandard")
+    m = _msg({"w": np.zeros((1 << 14,), np.float32)})
+    p = pl.build_pipeline(["zstd:5"])
+    msg, ctx = p.begin_encode(m)
+    blob = p.encode_wire_item("w", msg.payload["w"], ctx)
+    assert len(blob) < m.payload["w"].nbytes / 50
+    out = _roundtrip(p, m)
+    np.testing.assert_array_equal(np.asarray(out.payload["w"]), m.payload["w"])
+
+
+def test_quantize_rules_per_layer_precision():
+    """The SelectiveQuantizeFilter policy as a stage: first matching
+    substring rule decides each tensor's format, default covers the
+    rest, "keep" pins original precision."""
+    rng = np.random.default_rng(5)
+    payload = {
+        "embed.w": rng.standard_normal((64,)).astype(np.float32),
+        "layers.0.norm": rng.standard_normal((64,)).astype(np.float32),
+        "layers.0.mlp": rng.standard_normal((64,)).astype(np.float32),
+    }
+    p = pl.build_pipeline(["quantize:norm=fp16,embed=keep,nf4"])
+    msg, ctx = p.begin_encode(_msg(dict(payload)))
+    assert msg.headers["quantized_fmt"] == "mixed:fp16,nf4"
+    fmts = {}
+    for name, value in msg.payload.items():
+        enc = p.stages[0].encode_item(name, value, ctx)
+        fmts[name] = enc.fmt if isinstance(enc, QuantizedTensor) else "keep"
+    assert fmts == {"embed.w": "keep", "layers.0.norm": "fp16",
+                    "layers.0.mlp": "nf4"}
+    out = _roundtrip(p, _msg(dict(payload)))
+    np.testing.assert_array_equal(np.asarray(out.payload["embed.w"]),
+                                  payload["embed.w"])  # kept bit-exact
+    np.testing.assert_allclose(np.asarray(out.payload["layers.0.norm"]),
+                               payload["layers.0.norm"], atol=1e-3)
+    np.testing.assert_allclose(np.asarray(out.payload["layers.0.mlp"]),
+                               payload["layers.0.mlp"], atol=0.6)
+
+
+def test_quantize_rules_dict_spec_matches_selective_filter():
+    from repro.core.filters import SelectiveQuantizeFilter
+
+    rng = np.random.default_rng(6)
+    payload = {"a.norm": rng.standard_normal((128,)).astype(np.float32),
+               "b.body": rng.standard_normal((128,)).astype(np.float32)}
+    stage_out = _roundtrip(
+        pl.build_pipeline([{"stage": "quantize",
+                            "rules": [["norm", "fp16"]], "fmt": "blockwise8"}]),
+        _msg(dict(payload)))
+    filt = SelectiveQuantizeFilter([("norm", "fp16")], default_fmt="blockwise8")
+    from repro.core.filters import DequantizeFilter
+    filter_out = DequantizeFilter().process(filt.process(_msg(dict(payload))))
+    for k in payload:
+        np.testing.assert_array_equal(np.asarray(stage_out.payload[k]),
+                                      np.asarray(filter_out.payload[k]))
+
+
+def test_quantize_stage_requires_fmt_or_rules():
+    with pytest.raises(ValueError, match="format and/or rules"):
+        pl.build_pipeline([{"stage": "quantize"}])
+
+
+def test_zstd_stage_oversize_stream_raises_wire_integrity_error():
+    pytest.importorskip("zstandard")
+    p = pl.build_pipeline(["zstd"])
+    m = _msg({"w": np.zeros((4096,), np.float32)})
+    msg, ctx = p.begin_encode(m)
+    blob = p.encode_wire_item("w", msg.payload["w"], ctx)
+    (hlen,) = struct.unpack_from("<I", blob, 0)
+    header = json.loads(blob[4:4 + hlen])
+    header["b"][0][1]["n"] //= 2  # declare half the true original length
+    hb = json.dumps(header, sort_keys=True).encode()
+    tampered = struct.pack("<I", len(hb)) + hb + blob[4 + hlen:]
+    with pytest.raises(pl.WireIntegrityError, match="declared length"):
+        p.decoder().decode_item(tampered)
+
+
+def test_delta_stage_residual_without_base_raises_wire_error():
+    """A forged/corrupted envelope claiming position 0 but no 'full'
+    snapshot must surface as a wire-integrity fault, not a KeyError."""
+    x = np.ones((16,), np.float32)
+    sender = pl.WirePipeline([pl.build_stage("delta")])
+    msg, ctx = sender.begin_encode(_msg({"w": x}, client="c"))
+    blob = sender.encode_wire_item("w", msg.payload["w"], ctx)
+    (hlen,) = struct.unpack_from("<I", blob, 0)
+    header = json.loads(blob[4:4 + hlen])
+    del header["vm"][0]["full"]  # lie: claim this is a residual
+    hb = json.dumps(header, sort_keys=True).encode()
+    tampered = struct.pack("<I", len(hb)) + hb + blob[4 + hlen:]
+    with pytest.raises(pl.WireIntegrityError, match="no base"):
+        pl.build_pipeline([]).decoder().decode_item(tampered)
+
+
+def test_quantize_rules_reject_two_bare_defaults():
+    with pytest.raises(ValueError, match="two default"):
+        pl.build_pipeline(["quantize:norm=fp16,nf4,int8"])

@@ -310,3 +310,84 @@ def test_peak_memory_ordering_matches_paper(tmp_path):
     assert peak_file <= 3 * chunk
     # and the paper's ordering: regular >> container >> file
     assert peak_regular > peak_container > peak_file
+
+
+# ---------------------------------------------------------------------------
+# ObjectRetriever pull-mode wire-pipeline hooks (ISSUE 4 satellite)
+# ---------------------------------------------------------------------------
+
+def test_retriever_pipeline_roundtrip_container_and_regular():
+    """Pull and push paths share one transform stack: a quantize+zlib+crc
+    pipeline runs per item inside the pull-mode streaming loop, and the
+    retriever returns the decoded dict."""
+    from repro.core.pipeline import build_pipeline
+
+    sd = _state_dict()
+    retr = sm.ObjectRetriever(chunk_size=512,
+                              pipeline=build_pipeline(["quantize:blockwise8",
+                                                       "zlib", "crc32"]))
+    retr.register_container("weights", sd)
+    for mode in ("container", "regular"):
+        out = retr.retrieve("weights", mode=mode)
+        assert set(out.keys()) == set(sd.keys())
+        for k in sd:
+            np.testing.assert_allclose(np.asarray(out[k]), sd[k], atol=0.03)
+
+
+def test_retriever_pipeline_peak_is_one_item():
+    """A quantized pull peaks at ~one encoded item of transmission
+    memory, exactly like the push wire (the pre-pipeline pull path
+    materialized the whole encoded container)."""
+    from repro.core.pipeline import build_pipeline
+
+    sd = {f"l{i}": np.random.default_rng(i).standard_normal((128, 128))
+          .astype(np.float32) for i in range(16)}
+    total = sum(v.nbytes for v in sd.values())
+    retr = sm.ObjectRetriever(chunk_size=2048)
+    retr.register_container("weights", sd)
+
+    meter = MemoryMeter()
+    got = {}
+    with meter.activate():
+        retr.retrieve("weights", pipeline=build_pipeline(["quantize:nf4"]),
+                      consume=lambda n, v: got.update({n: True}))
+    assert len(got) == len(sd)
+    assert meter.peak < total / 4  # nf4 item-wise, never the whole model
+
+
+def test_retriever_pipeline_streams_into_aggregation_sink():
+    """Pull-mode retrieval drives the streaming-aggregation protocol
+    directly: items fold into the sink as they decode."""
+    from repro.core.pipeline import build_pipeline
+    from repro.fl import FedAvgAggregator
+
+    sd = {"a": np.full((32,), 2.0, np.float32), "b": np.full((8,), 4.0, np.float32)}
+    retr = sm.ObjectRetriever()
+    retr.register_container("weights", sd)
+    agg = FedAvgAggregator()
+    assert retr.retrieve("weights", pipeline=build_pipeline(["crc32"]),
+                         sink=agg) is None
+    out = agg.finish()
+    _assert_sd_equal(sd, out)
+
+
+def test_retriever_consume_and_sink_are_mutually_exclusive():
+    from repro.core.pipeline import build_pipeline
+    from repro.fl import FedAvgAggregator
+
+    retr = sm.ObjectRetriever()
+    retr.register_container("w", {"a": np.ones(4, np.float32)})
+    with pytest.raises(ValueError, match="not both"):
+        retr.retrieve("w", pipeline=build_pipeline([]),
+                      consume=lambda n, v: None, sink=FedAvgAggregator())
+
+
+def test_retriever_rejects_pipeline_on_file_mode(tmp_path):
+    from repro.core.pipeline import build_pipeline
+
+    src = tmp_path / "f.bin"
+    src.write_bytes(os.urandom(100))
+    retr = sm.ObjectRetriever(pipeline=build_pipeline(["zlib"]))
+    retr.register_file("ckpt", str(src))
+    with pytest.raises(ValueError, match="container"):
+        retr.retrieve("ckpt", out_path=str(tmp_path / "g.bin"))

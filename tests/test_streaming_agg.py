@@ -1,0 +1,587 @@
+"""Streaming-first aggregation plane: the begin/accept_item/finish
+protocol, streaming-vs-batch bitwise equality across both runtimes and
+all four scheduling policies, and the MemoryMeter bound — server peak
+transmission+aggregation memory stays ~one item (not one model) even
+with 32 concurrent streaming senders.
+"""
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import pipeline as pl
+from repro.core import streaming as sm
+from repro.core.messages import Message, MessageKind
+from repro.fl import (
+    FedAvgAggregator,
+    FLSimulator,
+    QuantizedFedAvgAggregator,
+    ScatterAndGather,
+    SimulationConfig,
+    TrainExecutor,
+    build_aggregator,
+    register_aggregator,
+    registered_aggregators,
+)
+from repro.fl.job import run_job
+from repro.runtime import (
+    ComputeProfile,
+    FedAsyncPolicy,
+    FedBuffPolicy,
+    LinkProfile,
+    NetworkModel,
+    RuntimeConfig,
+    TieredPolicy,
+    heterogeneous_network,
+)
+from repro.utils.mem import MemoryMeter
+
+
+def _msg(payload, **headers):
+    return Message(MessageKind.TASK_RESULT, dict(payload), dict(headers))
+
+
+# ---------------------------------------------------------------------------
+# aggregator protocol + registry
+# ---------------------------------------------------------------------------
+
+def test_protocol_and_batch_shim_are_the_same_arithmetic():
+    """accept() is a shim over begin/accept_item, so feeding items through
+    either surface produces bitwise-identical aggregates."""
+    rng = np.random.default_rng(0)
+    payloads = [{f"l{j}": rng.standard_normal((33,)).astype(np.float32)
+                 for j in range(3)} for _ in range(4)]
+    batch, stream = FedAvgAggregator(), FedAvgAggregator()
+    for i, p in enumerate(payloads):
+        batch.accept(_msg(p, num_samples=i + 1))
+        w = stream.begin({"num_samples": i + 1})
+        for name, value in p.items():
+            stream.accept_item(name, value, w)
+    a, b = batch.finish(), stream.finish()
+    for k in a:
+        np.testing.assert_array_equal(a[k], b[k])
+
+
+def test_fedavg_begin_returns_sample_weight():
+    agg = FedAvgAggregator()
+    assert agg.begin({"num_samples": 7}) == 7.0
+    assert agg.begin({}) == 1.0  # default weight
+    assert agg.accepted == 2
+
+
+def test_aggregator_registry_builds_and_rejects():
+    assert {"fedavg", "quantized-fedavg"} <= set(registered_aggregators())
+    assert isinstance(build_aggregator("fedavg"), FedAvgAggregator)
+    assert isinstance(build_aggregator({"aggregator": "quantized-fedavg"}),
+                      QuantizedFedAvgAggregator)
+    with pytest.raises(ValueError, match="unknown aggregator"):
+        build_aggregator("median")
+    name = "test-sum"
+    if name not in registered_aggregators():
+        @register_aggregator(name)
+        class _SumAgg(FedAvgAggregator):
+            pass
+    assert isinstance(build_aggregator(name), FedAvgAggregator)
+    with pytest.raises(ValueError, match="already registered"):
+        register_aggregator(name)(FedAvgAggregator)
+
+
+def test_streaming_controller_requires_protocol_aggregator():
+    class LegacyAgg:
+        def accept(self, result):
+            pass
+
+        def finish(self):
+            return {}
+
+    with pytest.raises(TypeError, match="begin/accept_item"):
+        ScatterAndGather([TrainExecutor("s0", lambda p, r: (p, 1, {}))],
+                         LegacyAgg(), 1, streaming=True)
+
+
+# ---------------------------------------------------------------------------
+# wire plane: concurrent senders, O(item) server peak
+# ---------------------------------------------------------------------------
+
+def _stream_into(sink, payload, client, chunk_size=8192, stages=()):
+    """One uplink transfer through pipeline + container streaming into a
+    streaming-aggregation sink — the full server receive plane."""
+    p = pl.build_pipeline(list(stages))
+    msg = _msg(payload, num_samples=1, client=client)
+    enc, ctx = p.begin_encode(msg)
+    dec = p.decoder(sink=sink)
+    recv = sm.ContainerReceiver(consume=dec.on_item, decode_item=dec.decode_item)
+    driver = sm.LoopbackDriver()
+    driver.connect(recv.on_chunk)
+    sm.ContainerStreamer(driver, chunk_size).send_items(
+        p.iter_encode(enc, ctx), p.n_items(enc)
+    )
+    return dec.finish(msg.kind, p.unsent_headers(enc))
+
+
+def test_server_peak_is_items_not_models_with_32_concurrent_senders():
+    """The acceptance bound: 32 clients streaming a 256-item model into
+    one shared aggregator concurrently keep the metered server peak at a
+    few items *per sender* — far below one model per sender, and below
+    even a single model. Integer-valued tensors make the shared running
+    sum exact, so the fold result is independent of thread interleaving.
+    """
+    items, item_elems = 256, 4096  # 256 x 16 KiB = 4 MiB model
+    rng = np.random.default_rng(0)
+    sd = {f"layer.{i}": rng.integers(-8, 8, item_elems).astype(np.float32)
+          for i in range(items)}
+    model_bytes = sum(v.nbytes for v in sd.values())
+    item_bytes = item_elems * 4
+    senders = 32
+
+    agg = FedAvgAggregator()
+    meter = MemoryMeter()
+    errors = []
+
+    def send(i):
+        try:
+            _stream_into(agg, sd, f"site-{i}")
+        except Exception as exc:  # noqa: BLE001 - surfaced below
+            errors.append(exc)
+
+    with meter.activate():
+        threads = [threading.Thread(target=send, args=(i,)) for i in range(senders)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+    assert not errors
+    final = agg.finish()
+    for k in sd:  # integer-valued sums are exact in fp32 at this scale
+        np.testing.assert_array_equal(final[k], sd[k])
+    # each sender holds ~one item (encoded envelope + chunk buffers +
+    # the decoded value during its fold) — never its whole payload
+    assert meter.peak <= senders * 6 * item_bytes
+    assert meter.peak < model_bytes / 2
+
+
+def test_streaming_beats_batch_collection_peak():
+    """Same wire, same pipeline: collecting decoded payload dicts (the
+    batch plane) holds one model per sender; the streaming plane holds
+    one item. The measured gap is the tentpole's point."""
+    items, item_elems, senders = 64, 4096, 8
+    rng = np.random.default_rng(1)
+    sd = {f"layer.{i}": rng.standard_normal(item_elems).astype(np.float32)
+          for i in range(items)}
+    model_bytes = sum(v.nbytes for v in sd.values())
+    stages = ("quantize:blockwise8", "zlib")
+
+    def run(streaming):
+        agg = FedAvgAggregator()
+        meter = MemoryMeter()
+
+        def send(i):
+            if streaming:
+                _stream_into(agg, sd, f"site-{i}", stages=stages)
+            else:
+                from repro.fl import CollectingSink
+                from repro.utils import mem
+
+                sink = CollectingSink()
+                out = _stream_into(sink, sd, f"site-{i}", stages=stages)
+                # the batch plane's decoded payload dict is resident
+                # until the whole-message accept finishes
+                held = sum(v.nbytes for v in sink.payload.values())
+                mem.record_alloc(held)
+                agg.accept(Message(out.kind, sink.payload, out.headers))
+                mem.record_free(held)
+
+        with meter.activate():
+            threads = [threading.Thread(target=send, args=(i,))
+                       for i in range(senders)]
+            for t in threads:
+                t.start()
+            for t in threads:
+                t.join()
+        agg.finish()
+        return meter.peak
+
+    peak_stream = run(True)
+    peak_batch = run(False)
+    assert peak_batch >= senders * model_bytes / 2  # models resident
+    assert peak_stream < peak_batch / 8
+    assert peak_stream < model_bytes
+
+
+# ---------------------------------------------------------------------------
+# sequential controller: streaming == batch, bitwise, always
+# ---------------------------------------------------------------------------
+
+def _lsq_executor(name, seed, w_true, n=128, lr=0.3, local_steps=3):
+    rng = np.random.default_rng(seed)
+    X = rng.standard_normal((n, w_true.size)).astype(np.float32)
+    y = X @ w_true
+
+    def train_fn(params, rnd):
+        w = np.asarray(params["w"]).copy()
+        for _ in range(local_steps):
+            w = w - lr * (X.T @ (X @ w - y) / n)
+        return {"w": w}, n, {}
+
+    return TrainExecutor(name, train_fn)
+
+
+W_TRUE = np.arange(1, 9, dtype=np.float32) / 8.0
+
+
+def _sequential(streaming, transmission="container", stack=("quantize:blockwise8", "zlib"),
+                **cfg):
+    sim = FLSimulator(
+        [_lsq_executor(f"site-{i}", i, W_TRUE) for i in range(3)],
+        FedAvgAggregator(),
+        SimulationConfig(num_rounds=4, transmission=transmission, chunk_size=2048, **cfg),
+        pipelines={"task_data": list(stack), "task_result": list(stack)},
+        server_streaming_agg=streaming,
+    )
+    out = sim.run({"w": np.zeros(8, np.float32)})
+    return np.asarray(out["w"]), sim
+
+
+@pytest.mark.parametrize("transmission", ["container", "regular"])
+def test_sequential_streaming_bitwise_matches_batch(transmission):
+    """Clients run one at a time in list order on the sequential
+    controller, so the streaming fold executes the exact arithmetic of
+    the batch path in the exact order — bitwise-equal final weights,
+    identical wire traffic."""
+    batch, sim_b = _sequential(False, transmission)
+    stream, sim_s = _sequential(True, transmission)
+    np.testing.assert_array_equal(batch, stream)
+    assert sim_b.stats.bytes_sent == sim_s.stats.bytes_sent
+    assert sim_b.stats.messages == sim_s.stats.messages
+
+
+def test_sequential_streaming_bitwise_under_chunk_faults():
+    """OrderedDeliveryBuffer gives the fold exactly-once in-order item
+    delivery even when the wire drops/duplicates/reorders chunks, so
+    streaming aggregation stays bitwise-equal to batch on a lossy link."""
+    batch, _ = _sequential(False, chunk_drop_prob=0.2, chunk_dup_prob=0.05,
+                           chunk_reorder_window=3, fault_seed=11)
+    stream, sim = _sequential(True, chunk_drop_prob=0.2, chunk_dup_prob=0.05,
+                              chunk_reorder_window=3, fault_seed=11)
+    np.testing.assert_array_equal(batch, stream)
+    assert sim.stats.retransmits > 0
+
+
+def test_sequential_streaming_results_are_header_only():
+    captured = []
+    sim = FLSimulator(
+        [_lsq_executor(f"site-{i}", i, W_TRUE) for i in range(2)],
+        FedAvgAggregator(),
+        SimulationConfig(num_rounds=1),
+        on_round_end=lambda rnd, w, results: captured.extend(results),
+        server_streaming_agg=True,
+    )
+    sim.run({"w": np.zeros(8, np.float32)})
+    for r in captured:
+        assert r.payload == {}  # the server never held the payload dict
+        assert r.headers["num_samples"] == 128
+        assert r.headers["client"].startswith("site-")
+
+
+def test_sequential_streaming_quantized_aggregation():
+    """decode_values=False + QuantizedFedAvgAggregator: wire-form int8
+    items stream straight into the fused-kernel aggregator."""
+
+    def run(streaming):
+        sim = FLSimulator(
+            [_lsq_executor(f"site-{i}", i, W_TRUE) for i in range(3)],
+            QuantizedFedAvgAggregator(),
+            SimulationConfig(num_rounds=3, chunk_size=2048),
+            pipelines={
+                "task_data": ["quantize:blockwise8"],
+                "task_result": pl.build_pipeline(["quantize:blockwise8"],
+                                                 decode_values=False),
+            },
+            server_streaming_agg=streaming,
+        )
+        return np.asarray(sim.run({"w": np.zeros(8, np.float32)})["w"])
+
+    np.testing.assert_array_equal(run(False), run(True))
+
+
+# ---------------------------------------------------------------------------
+# async scheduler: streaming == batch for all four policies
+# ---------------------------------------------------------------------------
+
+def _uniform_net():
+    return NetworkModel(
+        default=LinkProfile("lan", bandwidth_mbps=100.0, latency_ms=1.0, jitter=0.0),
+        default_compute=ComputeProfile(base_seconds=0.01, jitter=0.0),
+        seed=0,
+    )
+
+
+def _async(streaming, num_clients=4, rounds=3, stack=("quantize:blockwise8",),
+           policy=None, network=None, **runtime_kwargs):
+    sim = FLSimulator(
+        [_lsq_executor(f"site-{i}", i, W_TRUE) for i in range(num_clients)],
+        FedAvgAggregator(),
+        SimulationConfig(num_rounds=rounds, chunk_size=2048),
+        pipelines={"task_data": list(stack), "task_result": list(stack)},
+        runtime=RuntimeConfig(seed=0, max_concurrency=num_clients, **runtime_kwargs),
+        policy=policy,
+        network=network,
+        server_streaming_agg=streaming,
+    )
+    out = sim.run({"w": np.zeros(8, np.float32)})
+    return np.asarray(out["w"]), sim
+
+
+def test_async_sync_policy_streaming_bitwise_on_uniform_links():
+    """SyncPolicy's streaming barrier folds at each completion instant;
+    on uniform jitter-free links with equal wire sizes completion order
+    is client-list order, so streaming, batch, and the sequential
+    controller all produce the same bits. The timeline and wire traffic
+    match batch exactly on any network (the pricing pass feeds the clock
+    the same bytes)."""
+    batch, sim_b = _async(False, network=_uniform_net())
+    stream, sim_s = _async(True, network=_uniform_net())
+    np.testing.assert_array_equal(batch, stream)
+    assert sim_b.sim_time_s == sim_s.sim_time_s
+    assert sim_b.stats.bytes_sent == sim_s.stats.bytes_sent
+    sequential, _ = _sequential(True, stack=("quantize:blockwise8",), )
+    # same federation trained sequentially with streaming aggregation
+    sim = FLSimulator(
+        [_lsq_executor(f"site-{i}", i, W_TRUE) for i in range(4)],
+        FedAvgAggregator(),
+        SimulationConfig(num_rounds=3, chunk_size=2048),
+        pipelines={"task_data": ["quantize:blockwise8"],
+                   "task_result": ["quantize:blockwise8"]},
+    )
+    seq = np.asarray(sim.run({"w": np.zeros(8, np.float32)})["w"])
+    np.testing.assert_array_equal(seq, stream)
+
+
+def test_async_tiered_policy_streaming_bitwise_on_uniform_links():
+    def run(streaming):
+        return _async(
+            streaming, num_clients=6, rounds=4,
+            policy=TieredPolicy(FedAvgAggregator(), 4, num_tiers=2, seed=3),
+            network=_uniform_net(),
+        )
+
+    batch, _ = run(False)
+    stream, sim = run(True)
+    np.testing.assert_array_equal(batch, stream)
+    assert sim.scheduler.policy.selected_tiers  # tiers actually drawn
+
+
+def test_async_fedbuff_streaming_bitwise_on_heterogeneous_links():
+    """FedBuff folds at the completion instant with completion-time
+    staleness in both modes, so streaming == batch bitwise even when a
+    heterogeneous network scrambles completion order and zlib makes every
+    client's wire size different."""
+    names = [f"site-{i}" for i in range(4)]
+
+    def run(streaming):
+        return _async(
+            streaming, stack=("quantize:blockwise8", "zlib"),
+            policy=FedBuffPolicy(total_tasks=16, buffer_size=2),
+            network=heterogeneous_network(names, seed=1),
+        )
+
+    batch, sim_b = run(False)
+    stream, sim_s = run(True)
+    np.testing.assert_array_equal(batch, stream)
+    assert sim_b.sim_time_s == sim_s.sim_time_s
+    assert sim_s.scheduler.policy.staleness_seen == sim_b.scheduler.policy.staleness_seen
+
+
+def test_async_fedasync_streaming_bitwise_on_heterogeneous_links():
+    names = [f"site-{i}" for i in range(4)]
+
+    def run(streaming):
+        return _async(
+            streaming, stack=("quantize:blockwise8", "zlib"),
+            policy=FedAsyncPolicy(total_tasks=16),
+            network=heterogeneous_network(names, seed=2),
+        )
+
+    batch, _ = run(False)
+    stream, sim = run(True)
+    np.testing.assert_array_equal(batch, stream)
+    assert sim.scheduler.stats.model_updates == 16  # one mix per update
+
+
+def test_async_streaming_with_dropouts_deterministic_and_close_to_batch():
+    """Dropout draws are consumed in launch order in both modes, so the
+    timelines agree event for event; the sync fold order differs
+    (completion vs barrier order) so weights agree numerically, not
+    bitwise."""
+    def run(streaming):
+        return _async(streaming, rounds=2, network=_uniform_net(),
+                      dropout_prob=0.3, max_retries=1)
+
+    batch, sim_b = run(False)
+    stream1, sim_s1 = run(True)
+    stream2, sim_s2 = run(True)
+    np.testing.assert_array_equal(stream1, stream2)  # run-to-run determinism
+    np.testing.assert_allclose(batch, stream1, rtol=1e-5, atol=1e-6)
+    tl_b = [(e.kind, e.client, e.time) for e in sim_b.scheduler.timeline]
+    tl_s = [(e.kind, e.client, e.time) for e in sim_s1.scheduler.timeline]
+    assert tl_b == tl_s
+    assert sim_b.stats.bytes_sent == sim_s1.stats.bytes_sent
+
+
+def test_async_streaming_rejects_stateful_uplink_pipeline():
+    with pytest.raises(ValueError, match="stateless"):
+        FLSimulator(
+            [_lsq_executor("s0", 0, W_TRUE)],
+            FedAvgAggregator(),
+            SimulationConfig(num_rounds=1),
+            pipelines={"task_data": [], "task_result": ["ef-quantize:nf4"]},
+            runtime=RuntimeConfig(seed=0),
+            server_streaming_agg=True,
+        )
+
+
+def test_sequential_streaming_allows_stateful_uplink_pipeline():
+    """The sequential controller folds during the single uplink pass, so
+    stateful stages (error feedback) compose with streaming aggregation."""
+    stream, _ = _sequential(True, stack=("ef-quantize:blockwise8",))
+    assert np.all(np.isfinite(stream))
+
+
+# ---------------------------------------------------------------------------
+# job-spec surface
+# ---------------------------------------------------------------------------
+
+def _job_spec(**over):
+    spec = {
+        "arch": "qwen1.5-0.5b", "smoke": True,
+        "rounds": 2, "local_steps": 1, "batch": 2, "seq": 16,
+        "clients": 2, "pipeline": {"task_result_out": ["quantize:blockwise8"]},
+    }
+    spec.update(over)
+    return spec
+
+
+def test_job_spec_server_streaming_agg_bitwise():
+    batch = run_job(_job_spec())
+    stream = run_job(_job_spec(server_streaming_agg=True))
+    for k in batch["final_weights"]:
+        np.testing.assert_array_equal(
+            np.asarray(batch["final_weights"][k]),
+            np.asarray(stream["final_weights"][k]),
+        )
+    assert batch["wire_bytes"] == stream["wire_bytes"]
+
+
+def test_job_spec_streaming_with_fedasync_runtime():
+    res = run_job(_job_spec(
+        server_streaming_agg=True,
+        runtime={"policy": "fedasync", "total_tasks": 4,
+                 "network": {"default": "wifi"}},
+    ))
+    assert res["policy"] == "fedasync"
+    assert res["runtime_stats"]["completions"] == 4
+
+
+def test_job_spec_aggregator_registry_key():
+    res = run_job(_job_spec(aggregator="fedavg", server_streaming_agg=True))
+    for v in res["final_weights"].values():
+        assert np.all(np.isfinite(np.asarray(v)))
+    with pytest.raises(ValueError, match="unknown aggregator"):
+        run_job(_job_spec(aggregator="krum"))
+
+
+def test_streaming_rejects_legacy_ingress_filters():
+    from repro.core.filters import two_way_quantization
+
+    filters = two_way_quantization("nf4")
+    with pytest.raises(ValueError, match="per-item pipeline"):
+        FLSimulator(
+            [_lsq_executor("s0", 0, W_TRUE)],
+            FedAvgAggregator(),
+            SimulationConfig(num_rounds=1),
+            server_filters=filters,
+            client_filters=filters,
+            server_streaming_agg=True,
+        )
+
+
+def test_failed_batch_accept_leaves_no_phantom_weight():
+    """A payload rejected mid-message must not register its sample
+    weight: the shim folds items first and begins the contribution last,
+    so a controller that skips the bad client still averages correctly."""
+    from repro.core.quantization import quantize
+
+    agg = FedAvgAggregator()
+    agg.accept(_msg({"w": np.full(4, 2.0, np.float32)}, num_samples=1))
+    bad = _msg({"w": quantize(np.ones(64, np.float32), "nf4")}, num_samples=99)
+    with pytest.raises(TypeError, match="quantized item"):
+        agg.accept(bad)
+    agg.accept(_msg({"w": np.full(4, 4.0, np.float32)}, num_samples=1))
+    assert agg.accepted == 2
+    np.testing.assert_array_equal(agg.finish()["w"], np.full(4, 3.0, np.float32))
+
+
+def test_sync_policy_mixed_batch_and_streamed_results_fold_once_each():
+    """A fleet where only some proxies support stream_task: streamed
+    clients fold at completion, batch clients fold at the barrier, and
+    every contribution counts exactly once — in both rounds."""
+    from repro.runtime import SyncPolicy
+
+    agg = FedAvgAggregator()
+    policy = SyncPolicy(agg, 2)
+    dispatches = {d.client: d for d in
+                  policy.begin({"w": np.zeros(4, np.float32)}, ["site-0", "site-1"])}
+
+    def fake_deliver(payload, headers):
+        def deliver(sink):
+            w = sink.begin(headers)
+            for name, value in payload.items():
+                sink.accept_item(name, value, w)
+            return Message(MessageKind.TASK_RESULT, {}, dict(headers))
+        return deliver
+
+    def run_round(rnd, dispatches):
+        p0 = {"w": np.full(4, 2.0 + rnd, np.float32)}
+        p1 = {"w": np.full(4, 6.0 + rnd, np.float32)}
+        follow = policy.on_result_stream(
+            dispatches["site-0"], {"num_samples": 1, "client": "site-0"},
+            fake_deliver(p0, {"num_samples": 1}))
+        assert follow == []
+        follow = policy.on_result(
+            dispatches["site-1"],
+            _msg(p1, num_samples=3, client="site-1"))
+        return {d.client: d for d in follow}
+
+    next_dispatches = run_round(0, dispatches)
+    # weighted mean of both contributions: (1*2 + 3*6) / 4 = 5
+    np.testing.assert_array_equal(np.asarray(policy._weights["w"]),
+                                  np.full(4, 5.0, np.float32))
+    run_round(1, next_dispatches)  # _streamed reset: round 2 also exact
+    np.testing.assert_array_equal(np.asarray(policy._weights["w"]),
+                                  np.full(4, 6.0, np.float32))
+    assert policy.complete
+
+
+def test_retriever_sink_rejected_on_regular_mode_without_pipeline():
+    retr = sm.ObjectRetriever()
+    retr.register_container("w", {"a": np.ones(4, np.float32)})
+    with pytest.raises(ValueError, match="container"):
+        retr.retrieve("w", mode="regular", sink=FedAvgAggregator())
+
+
+def test_build_aggregator_dict_spec_without_name_key_is_friendly():
+    with pytest.raises(ValueError, match='"aggregator" name key'):
+        build_aggregator({"buffer": 4})
+
+
+def test_streaming_controller_rejects_pre_streaming_proxy_signature():
+    from repro.fl.controller import ClientProxy
+
+    class OldProxy(ClientProxy):
+        name = "old"
+
+        def submit_task(self, task):  # pre-streaming signature
+            return task
+
+    with pytest.raises(TypeError, match="result_sink"):
+        ScatterAndGather([OldProxy()], FedAvgAggregator(), 1, streaming=True)
