@@ -43,7 +43,7 @@ def _stream_one(sink, sd, client):
     driver = sm.LoopbackDriver()
     driver.connect(recv.on_chunk)
     sm.ContainerStreamer(driver, 1 << 16).send_items(
-        p.iter_encode(enc, ctx), p.n_items(enc)
+        p.iter_encode_views(enc, ctx), p.n_items(enc)
     )
     return dec.finish(msg.kind, p.unsent_headers(enc))
 

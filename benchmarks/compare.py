@@ -1,0 +1,136 @@
+"""Nightly benchmark regression gate: diff a fresh ``--smoke --json``
+report against the committed baseline (``BENCH_5.json``).
+
+    PYTHONPATH=src python -m benchmarks.compare BENCH_5.json BENCH_smoke.json \
+        [--max-regression 30] [--prefix wire/]
+
+Rows are the harness's ``name,us_per_call,derived`` CSV. Per row, the
+first applicable metric gates (one threshold, ``--max-regression``
+percent): the machine-independent ``new_over_legacy`` speedup ratio
+(both paths timed in the same run, so runner hardware cancels out),
+then deterministic ``copied`` byte volume (must not grow), then
+absolute ``items_per_s`` (must not drop), then ``us_per_call`` (must
+not grow) — so cross-machine baselines gate on ratios and copy counts,
+never on another host's absolute wall-clock.
+``*/legacy`` rows (the re-enacted pre-refactor comparison path) never
+gate. A gated baseline row missing from the current report is itself a
+failure — a renamed suite must come with a deliberately regenerated
+baseline, not a silently disarmed gate. Regressions exit non-zero so
+the nightly job goes red instead of archiving a slower wire plane.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def _parse_rows(report: dict) -> dict[str, dict]:
+    out: dict[str, dict] = {}
+    for row in report.get("rows", []):
+        parts = row.split(",", 2)
+        if len(parts) != 3:
+            continue
+        name, us, derived = parts
+        fields: dict[str, float] = {}
+        for kv in derived.split(";"):
+            k, _, v = kv.partition("=")
+            try:
+                fields[k] = float(v)
+            except ValueError:
+                pass
+        try:
+            fields["us_per_call"] = float(us)
+        except ValueError:
+            continue
+        out[name] = fields
+    return out
+
+
+def compare(baseline: dict, current: dict, max_regression_pct: float,
+            prefix: str) -> list[str]:
+    """Returns a list of human-readable failures (empty = gate passes)."""
+    base_rows = _parse_rows(baseline)
+    cur_rows = _parse_rows(current)
+    failures: list[str] = []
+    threshold = max_regression_pct / 100.0
+    for name, base in sorted(base_rows.items()):
+        if prefix and not name.startswith(prefix):
+            continue
+        if name.endswith("/legacy"):
+            # the re-enacted pre-refactor path exists for comparison
+            # only; its speed is not product behavior and must not gate
+            continue
+        cur = cur_rows.get(name)
+        if cur is None:
+            # a gated row silently disappearing (suite renamed, ambient
+            # compressor changed the stack label, ...) must not turn the
+            # gate into a no-op — regenerate the baseline deliberately
+            failures.append(
+                f"{name}: baseline row missing from current report "
+                "(suite changed? regenerate the committed baseline)"
+            )
+            continue
+        if "new_over_legacy" in base and "new_over_legacy" in cur:
+            # machine-independent speedup ratio (both paths measured in
+            # the same run on the same host) — robust across runner
+            # hardware, unlike absolute items/s
+            b, c = base["new_over_legacy"], cur["new_over_legacy"]
+            if b > 0 and c < b * (1.0 - threshold):
+                failures.append(
+                    f"{name}: new_over_legacy {c:.2f} is "
+                    f"{100 * (1 - c / b):.1f}% below baseline {b:.2f}"
+                )
+        elif "copied" in base and "copied" in cur:
+            # byte-copy volume is deterministic (same payload => same
+            # copies on any machine): any growth is a real code change
+            b, c = base["copied"], cur["copied"]
+            if b > 0 and c > b * (1.0 + threshold):
+                failures.append(
+                    f"{name}: copied bytes {c:.0f} are "
+                    f"{100 * (c / b - 1):.1f}% above baseline {b:.0f}"
+                )
+        elif "items_per_s" in base and "items_per_s" in cur:
+            b, c = base["items_per_s"], cur["items_per_s"]
+            if b > 0 and c < b * (1.0 - threshold):
+                failures.append(
+                    f"{name}: items_per_s {c:.0f} is "
+                    f"{100 * (1 - c / b):.1f}% below baseline {b:.0f}"
+                )
+        elif base.get("us_per_call", 0) > 0 and cur.get("us_per_call", 0) > 0:
+            b, c = base["us_per_call"], cur["us_per_call"]
+            if c > b * (1.0 + threshold):
+                failures.append(
+                    f"{name}: us_per_call {c:.0f} is "
+                    f"{100 * (c / b - 1):.1f}% above baseline {b:.0f}"
+                )
+    return failures
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("baseline", help="committed baseline JSON (BENCH_5.json)")
+    ap.add_argument("current", help="fresh --smoke --json report")
+    ap.add_argument("--max-regression", type=float, default=30.0,
+                    metavar="PCT", help="allowed throughput drop (default 30%%)")
+    ap.add_argument("--prefix", default="wire/",
+                    help="only gate rows with this name prefix "
+                         "(default 'wire/'; pass '' for all rows)")
+    args = ap.parse_args(argv)
+
+    with open(args.baseline) as fh:
+        baseline = json.load(fh)
+    with open(args.current) as fh:
+        current = json.load(fh)
+    failures = compare(baseline, current, args.max_regression, args.prefix)
+    if failures:
+        for f in failures:
+            print(f"REGRESSION {f}", file=sys.stderr)
+        return 1
+    print(f"# benchmark gate passed (prefix={args.prefix!r}, "
+          f"max regression {args.max_regression:.0f}%)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -32,14 +32,17 @@ SUITES: dict[str, str] = {
     "hetero": "benchmarks.hetero_fleet",
     "envelope": "benchmarks.pipeline_envelope",
     "agg_memory": "benchmarks.agg_memory",
+    "wire": "benchmarks.wire_throughput",
 }
 
 # fast subset for the nightly smoke run (skips the convergence sweeps);
 # "envelope" keeps the wire pipeline's O(largest item) peak-memory claim
-# under regression watch in BENCH_*.json, and "agg_memory" does the same
-# for the streaming aggregation plane's O(item) server peak
+# under regression watch in BENCH_*.json, "agg_memory" does the same for
+# the streaming aggregation plane's O(item) server peak, and "wire"
+# carries the zero-copy plane's items/s rows that the nightly job diffs
+# against the committed BENCH_5.json baseline (benchmarks/compare.py)
 SMOKE_SUITES = ("table2", "table3", "kernels", "chunks", "async", "hetero",
-                "envelope", "agg_memory")
+                "envelope", "agg_memory", "wire")
 
 
 def main(argv: list[str] | None = None) -> int:

@@ -69,7 +69,12 @@ from repro.core import serialization as ser
 from repro.core import secure_agg as sa
 from repro.core.filters import AdaptiveQuantizeFilter, Filter, FilterChain, FilterPoint
 from repro.core.messages import Message, MessageKind
-from repro.core.quantization import QuantizedTensor, dequantize, quantize
+from repro.core.quantization import (
+    QuantizedTensor,
+    dequantize,
+    quantize,
+    quantize_batch,
+)
 from repro.core.sparse import SparseTensor, topk_sparsify
 from repro.utils import mem
 
@@ -154,6 +159,21 @@ class Stage:
     ) -> bytes:
         return blob
 
+    def encode_item_views(
+        self, name: str, views: list, meta: dict[str, Any], ctx: WireContext
+    ) -> list:
+        """Scatter-gather form of ``encode_item_bytes``: transform an
+        ordered list of buffer segments whose concatenation is the item's
+        serialized bytes. The default joins only when the subclass
+        actually overrides the bytes hook (compat for third-party
+        stages); stages that can stream over the segments (checksums)
+        override this and never join. Output bytes must equal what
+        ``encode_item_bytes`` would produce on the joined input — the
+        wire format does not know how the sender held its buffers."""
+        if _overrides(self, "encode_item_bytes"):
+            return [self.encode_item_bytes(name, ser.join_views(views), meta, ctx)]
+        return views
+
     # -- spec support -------------------------------------------------------
     @classmethod
     def from_spec(cls, arg: Optional[str] = None, **kwargs: Any) -> Stage:
@@ -230,6 +250,47 @@ def _is_quantizable(value: Any, min_params: int) -> bool:
     return bool(
         np.issubdtype(arr.dtype, np.floating) and int(np.prod(arr.shape)) >= min_params
     )
+
+
+def _prequantize(stage: Stage, message: Message, ctx: WireContext,
+                 fmt_for_name: Callable[[str], Optional[str]],
+                 min_params: int) -> None:
+    """Batched quantize dispatch (the wire hot path): when ``stage`` is
+    the pipeline's first value stage — i.e. its ``encode_item`` inputs
+    are exactly the payload items visible here — quantize the whole
+    message now, dispatching every tensor's kernel asynchronously and
+    blocking once, and park the results for ``encode_item`` to pick up.
+    Results are bitwise-identical to the per-item path; only the
+    dispatch schedule changes. Falls back silently (per-item quantize in
+    the streamer loop) whenever an earlier stage could rewrite items.
+    """
+    if ctx.state.get("vstage0") is not stage:
+        return
+    fmt_for = {
+        name: fmt for name, value in message.payload.items()
+        if (fmt := fmt_for_name(name)) is not None
+        and _is_quantizable(value, min_params)
+    }
+    if not fmt_for:
+        return
+    pre = quantize_batch(message.payload, fmt_for)
+    # keyed by (source value identity): a later whole-message stage may
+    # swap the payload, in which case the parked results must not match
+    ctx.state[("prequant", id(stage))] = {
+        name: (message.payload[name], qt) for name, qt in pre.items()
+    }
+
+
+def _pop_prequant(stage: Stage, name: str, value: Any,
+                  ctx: WireContext) -> Optional[QuantizedTensor]:
+    pre = ctx.state.get(("prequant", id(stage)))
+    if pre is None:
+        return None
+    ent = pre.get(name)
+    if ent is not None and ent[0] is value:
+        del pre[name]
+        return ent[1]
+    return None
 
 
 @register_stage("quantize")
@@ -314,6 +375,7 @@ class QuantizeStage(Stage):
 
     def begin_encode(self, message: Message, ctx: WireContext) -> Message:
         ctx.headers["quantized_fmt"] = self._fmt_label()
+        _prequantize(self, message, ctx, self._fmt_for, self.min_params)
         return message
 
     def end_decode(self, message: Message, ctx: WireContext) -> Message:
@@ -322,6 +384,9 @@ class QuantizeStage(Stage):
         return message
 
     def encode_item(self, name: str, value: Any, ctx: WireContext) -> Any:
+        pre = _pop_prequant(self, name, value, ctx)
+        if pre is not None:
+            return pre
         fmt = self._fmt_for(name)
         if fmt is None or not _is_quantizable(value, self.min_params):
             return value
@@ -423,6 +488,7 @@ class AdaptiveQuantizeStage(Stage):
         ctx.state["adaptive_fmt"] = fmt
         if fmt != "fp32":
             ctx.headers["quantized_fmt"] = fmt
+            _prequantize(self, message, ctx, lambda _name: fmt, self.min_params)
         return message
 
     def end_decode(self, message: Message, ctx: WireContext) -> Message:
@@ -431,6 +497,9 @@ class AdaptiveQuantizeStage(Stage):
         return message
 
     def encode_item(self, name: str, value: Any, ctx: WireContext) -> Any:
+        pre = _pop_prequant(self, name, value, ctx)
+        if pre is not None:
+            return pre
         fmt = ctx.state.get("adaptive_fmt", "fp32")
         if fmt == "fp32" or not _is_quantizable(value, self.min_params):
             return value
@@ -532,6 +601,18 @@ class ZlibStage(Stage):
         meta["n"] = len(blob)
         return _zlib.compress(blob, self.level)
 
+    def encode_item_views(
+        self, name: str, views: list, meta: dict[str, Any], ctx: WireContext
+    ) -> list:
+        # stream the deflate over the segments: bitwise-identical output
+        # to one-shot zlib.compress (one zlib stream, one final flush),
+        # without first joining the item
+        meta["n"] = ser.views_nbytes(views)
+        c = _zlib.compressobj(self.level)
+        out = [c.compress(seg) for seg in ser.iter_view_segments(views)]
+        out.append(c.flush())
+        return [b"".join(out)]
+
     def decode_item_bytes(
         self, name: str, blob: bytes, meta: Mapping[str, Any], ctx: WireContext
     ) -> bytes:
@@ -563,6 +644,17 @@ class Crc32Stage(Stage):
         meta["crc"] = _zlib.crc32(blob)
         return blob
 
+    def encode_item_views(
+        self, name: str, views: list, meta: dict[str, Any], ctx: WireContext
+    ) -> list:
+        # crc32 streams over the segments incrementally; the item's
+        # buffers pass through untouched (the zero-copy integrity path)
+        crc = 0
+        for seg in ser.iter_view_segments(views):
+            crc = _zlib.crc32(seg, crc)
+        meta["crc"] = crc
+        return views
+
     def decode_item_bytes(
         self, name: str, blob: bytes, meta: Mapping[str, Any], ctx: WireContext
     ) -> bytes:
@@ -588,7 +680,9 @@ class DeltaStage(Stage):
     near-converged federation ships near-zero tensors — stack ``zlib``
     (or ``zstd``) after it and the wire cost collapses. Both ends are
     stateful: the encoder keeps the last value it transmitted per key,
-    the decoder the last reconstruction; the envelope's per-item
+    the decoder the last reconstruction — and when one instance serves
+    both ends (the in-process wire) the two collapse to **one canonical
+    snapshot object** per (client, tensor); the envelope's per-item
     ``vmeta`` records the stream position (``d``) and whether the item is
     a full snapshot (``full``, the first transmission per key or a shape
     change), so a desynchronized receiver raises
@@ -620,7 +714,11 @@ class DeltaStage(Stage):
         ctx.vmeta["d"] = seq
         if base is None or base.shape != arr.shape:
             ctx.vmeta["full"] = 1
-            self._prev_enc[key] = arr.copy()
+            # snapshot by reference, not by copy: payload tensors are
+            # immutable once handed to the wire (nothing in the encode
+            # path writes into them), so a defensive copy per item only
+            # doubled the snapshot memory
+            self._prev_enc[key] = arr
             return arr
         delta = arr - base
         # track the *decoder's* reconstruction, not the raw stream: both
@@ -652,7 +750,22 @@ class DeltaStage(Stage):
                     "(missing 'full' snapshot)"
                 )
             full = np.asarray(value, np.float32) + base
-        self._prev_dec[key] = full.copy()
+        # one canonical snapshot per (client, tensor): when this same
+        # stage instance just encoded this stream position (the
+        # in-process wire runs encode and decode through one object)
+        # and the stream below delta was lossless, the encoder's
+        # tracked reconstruction is bitwise-equal to ``full`` — adopt
+        # it instead of keeping a second array alive. The equality
+        # check matters: after a lossy downstream stage (quantize) the
+        # two differ, and the decoder must keep its own reconstruction
+        # so a shared instance behaves exactly like split endpoints.
+        # Split encode/decode instances land in the else branch.
+        enc = self._prev_enc.get(key)
+        if (enc is not None and self._seq_enc.get(key) == seq + 1
+                and enc.shape == full.shape and np.array_equal(enc, full)):
+            self._prev_dec[key] = enc
+        else:
+            self._prev_dec[key] = full
         return full
 
 
@@ -865,7 +978,8 @@ class WirePipeline:
         self._vstages = [s for s in self.stages if _overrides(s, "encode_item")
                          or _overrides(s, "decode_item")]
         self._bstages = [s for s in self.stages if _overrides(s, "encode_item_bytes")
-                         or _overrides(s, "decode_item_bytes")]
+                         or _overrides(s, "decode_item_bytes")
+                         or _overrides(s, "encode_item_views")]
         self._by_name = {s.name: s for s in self.stages}
 
     @property
@@ -884,6 +998,9 @@ class WirePipeline:
         the duration of the transfer."""
         ctx = WireContext(message.headers, self.decode_values)
         original_payload = message.payload
+        # the first value stage sees raw payload items, so it may batch
+        # whole-message work (async quantize dispatch) in begin_encode
+        ctx.state["vstage0"] = self._vstages[0] if self._vstages else None
         for s in self.stages:
             message = s.begin_encode(message, ctx)
             ctx.headers = message.headers
@@ -894,37 +1011,47 @@ class WirePipeline:
             raise ValueError(f"payload item name {META_ITEM!r} is reserved")
         return message, ctx
 
-    def encode_wire_item(self, name: str, value: Any, ctx: WireContext) -> bytes:
-        """One payload item -> envelope bytes (the per-item hot path)."""
+    def encode_wire_item_views(self, name: str, value: Any,
+                               ctx: WireContext) -> ser.Views:
+        """One payload item -> ordered envelope segments (the per-item
+        hot path). Payload buffers stay zero-copy views end to end
+        unless a byte stage rewrites them (compression)."""
         vmetas: list[dict[str, Any]] = []
         for s in self._vstages:
             ctx.vmeta = {}
             value = s.encode_item(name, value, ctx)
             vmetas.append(ctx.vmeta)
-        inner = ser.serialize_item(name, value)
-        return self._wrap(name, inner, [s.name for s in self._vstages], ctx,
-                          vmetas=vmetas)
+        inner = ser.serialize_item_views(name, value)
+        return self._wrap_views(name, inner, [s.name for s in self._vstages], ctx,
+                                vmetas=vmetas)
 
-    def _wrap(self, name: str, inner: bytes, vnames: list[str], ctx: WireContext,
-              vmetas: Optional[list[dict[str, Any]]] = None) -> bytes:
+    def encode_wire_item(self, name: str, value: Any, ctx: WireContext) -> bytes:
+        """Joined-bytes form of :meth:`encode_wire_item_views` (compat /
+        inspection surface; the streamers use the views directly)."""
+        return ser.join_views(self.encode_wire_item_views(name, value, ctx))
+
+    def _wrap_views(self, name: str, inner: ser.Views, vnames: list[str],
+                    ctx: WireContext,
+                    vmetas: Optional[list[dict[str, Any]]] = None) -> ser.Views:
         if not self._vstages and not self._bstages:
             return inner
         body = inner
         brecs: list[list[Any]] = []
         for s in self._bstages:
             bmeta: dict[str, Any] = {}
-            body = s.encode_item_bytes(name, body, bmeta, ctx)
+            body = s.encode_item_views(name, body, bmeta, ctx)
             brecs.append([s.name, bmeta])
-        header = {"kind": "wire", "name": name, "n": len(body), "v": vnames, "b": brecs}
+        header = {"kind": "wire", "name": name, "n": ser.views_nbytes(body),
+                  "v": vnames, "b": brecs}
         if vmetas and any(vmetas):
             # value-stage per-item metadata, aligned with "v"; omitted
             # entirely when no stage wrote any (keeps pre-existing
             # envelopes byte-identical)
             header["vm"] = vmetas
         hb = json.dumps(header, sort_keys=True).encode()
-        return _U32.pack(len(hb)) + hb + body
+        return [_U32.pack(len(hb)) + hb, *body]
 
-    def _encode_meta(self, message: Message, ctx: WireContext) -> bytes:
+    def _encode_meta(self, message: Message, ctx: WireContext) -> ser.Views:
         body = json.dumps(
             {"kind": message.kind.value, "headers": _json_safe(message.headers)[0]},
             sort_keys=True,
@@ -932,29 +1059,42 @@ class WirePipeline:
         header = json.dumps(
             {"kind": "meta", "name": META_ITEM, "n": len(body)}, sort_keys=True
         ).encode()
-        inner = _U32.pack(len(header)) + header + body
-        return self._wrap(META_ITEM, inner, [], ctx)
+        inner = [_U32.pack(len(header)) + header + body]
+        return self._wrap_views(META_ITEM, inner, [], ctx)
 
-    def iter_encode(self, message: Message, ctx: WireContext) -> Iterator[tuple[str, bytes]]:
-        """Container-streaming producer: the meta item, then one envelope
-        per payload item — peak live bytes stays ~one (encoded) item."""
-        blob = self._encode_meta(message, ctx)
-        with mem.record_hold(len(blob)):
-            yield META_ITEM, blob
+    def iter_encode_views(self, message: Message,
+                          ctx: WireContext) -> Iterator[tuple[str, ser.Views]]:
+        """Container-streaming producer (the hot path): the meta item,
+        then one envelope per payload item, each as scatter-gather
+        segments — peak live bytes stays ~one (encoded) item and tensor
+        payloads cross the streamer without a single join."""
+        views = self._encode_meta(message, ctx)
+        with mem.record_hold(ser.views_nbytes(views)):
+            yield META_ITEM, views
         for name, value in message.payload.items():
-            blob = self.encode_wire_item(name, value, ctx)
-            with mem.record_hold(len(blob)):
-                yield name, blob
+            views = self.encode_wire_item_views(name, value, ctx)
+            with mem.record_hold(ser.views_nbytes(views)):
+                yield name, views
+
+    def iter_encode(self, message: Message,
+                    ctx: WireContext) -> Iterator[tuple[str, bytes]]:
+        """Joined-bytes form of :meth:`iter_encode_views` (compat /
+        inspection surface — one envelope bytes object per item)."""
+        for name, views in self.iter_encode_views(message, ctx):
+            yield name, ser.join_views(views)
 
     def n_items(self, message: Message) -> int:
         return len(message.payload) + 1  # + meta item
 
     def encode_blob(self, message: Message, ctx: WireContext) -> bytes:
         """Regular-transmission producer: the whole wire message as one
-        blob (peak ~ full payload; registered with the MemoryMeter)."""
-        parts = [_U32.pack(self.n_items(message))]
-        parts.extend(blob for _, blob in self.iter_encode(message, ctx))
+        blob (peak ~ full payload; registered with the MemoryMeter).
+        Joins exactly once, at the end, from the per-item segments."""
+        parts: list[Any] = [_U32.pack(self.n_items(message))]
+        for _, views in self.iter_encode_views(message, ctx):
+            parts.extend(views)
         blob = b"".join(parts)
+        mem.record_copy(len(blob))
         mem.record_alloc(len(blob))
         return blob
 
@@ -978,17 +1118,22 @@ class WirePipeline:
             self._by_name[name] = stage
         return stage
 
-    def decode_wire_item(self, buf: bytes, ctx: WireContext) -> tuple[str, Any, int]:
-        """Parse one envelope from the head of ``buf``; returns
-        ``(name, value, consumed)``. The meta item decodes to its header
-        dict under the reserved name ``META_ITEM``."""
-        (hlen,) = _U32.unpack_from(buf, 0)
-        header = json.loads(bytes(buf[4:4 + hlen]).decode())
+    def decode_wire_item(self, buf: Any, ctx: WireContext) -> tuple[str, Any, int]:
+        """Parse one envelope from the head of ``buf`` (any bytes-like;
+        receivers hand in a memoryview over their single reassembly
+        buffer); returns ``(name, value, consumed)``. Body bytes are
+        zero-copy slices and decoded arrays are ``frombuffer`` views —
+        only the small JSON headers are materialized. The meta item
+        decodes to its header dict under the reserved name
+        ``META_ITEM``."""
+        mv = buf if isinstance(buf, memoryview) else memoryview(buf)
+        (hlen,) = _U32.unpack_from(mv, 0)
+        header = json.loads(bytes(mv[4:4 + hlen]))
         kind = header.get("kind")
         if kind == "wire":
             n = header["n"]
             name = header["name"]
-            body = bytes(buf[4 + hlen:4 + hlen + n])
+            body: Any = mv[4 + hlen:4 + hlen + n]
             for sname, bmeta in reversed(header["b"]):
                 body = self._decode_stage(sname).decode_item_bytes(name, body, bmeta, ctx)
             name, value = self._decode_inner(body, ctx)
@@ -1000,16 +1145,17 @@ class WirePipeline:
             return name, value, 4 + hlen + n
         if kind == "meta":
             n = header["n"]
-            return META_ITEM, json.loads(bytes(buf[4 + hlen:4 + hlen + n])), 4 + hlen + n
-        return ser.deserialize_item(buf)
+            return META_ITEM, json.loads(bytes(mv[4 + hlen:4 + hlen + n])), 4 + hlen + n
+        return ser.deserialize_item(mv)
 
-    def _decode_inner(self, body: bytes, ctx: WireContext) -> tuple[str, Any]:
-        (hlen,) = _U32.unpack_from(body, 0)
-        header = json.loads(bytes(body[4:4 + hlen]).decode())
+    def _decode_inner(self, body: Any, ctx: WireContext) -> tuple[str, Any]:
+        mv = body if isinstance(body, memoryview) else memoryview(body)
+        (hlen,) = _U32.unpack_from(mv, 0)
+        header = json.loads(bytes(mv[4:4 + hlen]))
         if header.get("kind") == "meta":
             n = header["n"]
-            return META_ITEM, json.loads(bytes(body[4 + hlen:4 + hlen + n]))
-        name, value, _ = ser.deserialize_item(body)
+            return META_ITEM, json.loads(bytes(mv[4 + hlen:4 + hlen + n]))
+        name, value, _ = ser.deserialize_item(mv)
         return name, value
 
     def end_decode(self, message: Message, ctx: WireContext) -> Message:
@@ -1078,11 +1224,12 @@ class WireDecoder:
             self.payload[name] = value
 
     # plugs into BlobReceiver(decode_container=...)
-    def decode_blob(self, blob: bytes) -> dict[str, Any]:
-        (n,) = _U32.unpack_from(blob, 0)
+    def decode_blob(self, blob: Any) -> dict[str, Any]:
+        mv = blob if isinstance(blob, memoryview) else memoryview(blob)
+        (n,) = _U32.unpack_from(mv, 0)
         off = 4
         for _ in range(n):
-            name, value, consumed = self.decode_item(blob[off:])
+            name, value, consumed = self.decode_item(mv[off:])
             self.on_item(name, value)
             off += consumed
         return self.payload

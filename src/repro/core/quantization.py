@@ -107,6 +107,81 @@ def quantize_state_dict(sd: Mapping[str, jnp.ndarray], fmt: str) -> dict[str, Qu
     return {name: quantize(arr, fmt) for name, arr in sd.items()}
 
 
+_BLOCK_OF = {"blockwise8": 4096, "fp4": 64, "nf4": 64}
+
+
+def _fused_quantize_group(
+    items: Mapping[str, Any], names: list[str], fmt: str
+) -> dict[str, QuantizedTensor]:
+    """One kernel dispatch for a whole format group: every tensor is
+    padded to whole quant blocks (exactly the per-tensor wire layout)
+    and laid back to back in one fp32 buffer, the blocked kernel runs
+    once over all of it, and each tensor's payload/absmax are row
+    slices of the single result. Block boundaries never span tensors,
+    so the sliced payloads are bitwise-identical to quantizing each
+    tensor alone.
+
+    The concat buffer is O(group) *compute scratch* on the sender —
+    the same order as the fp32 message the sender already holds, and
+    deliberately outside the MemoryMeter, which tracks transmission
+    buffers (those stay O(item) under container streaming)."""
+    block = _BLOCK_OF[fmt]
+    spans: list[tuple[str, Any, int, int]] = []   # name, arr, start, nblocks
+    total = 0
+    for name in names:
+        arr = np.asarray(items[name])
+        nb = int(np.ceil(arr.size / block))
+        spans.append((name, arr, total, nb))
+        total += nb
+    big = np.zeros(total * block, np.float32)
+    for _name, arr, start, _nb in spans:
+        flat = np.ascontiguousarray(arr).reshape(-1)
+        big[start * block: start * block + flat.size] = flat
+    if fmt == "blockwise8":
+        q, am = ops.quantize_blockwise8(big)
+    else:
+        q, am = ops.quantize_4bit(big, fmt)
+    q_np, am_np = np.asarray(q), np.asarray(am)   # the one sync point
+    return {
+        name: QuantizedTensor(q_np[start:start + nb], am_np[start:start + nb],
+                              fmt, tuple(arr.shape), arr.dtype)
+        for name, arr, start, nb in spans
+    }
+
+
+def quantize_batch(
+    items: Mapping[str, Any], fmt_for: Mapping[str, str]
+) -> dict[str, QuantizedTensor]:
+    """Whole-message quantization: one kernel dispatch **per format
+    group** (all same-format tensors concatenated block-aligned), one
+    device sync per message.
+
+    This is the wire hot path's replacement for per-tensor
+    dispatch-then-sync inside the streamer loop: serializing item k
+    forced a device sync before item k+1 could even dispatch, so the
+    host alternated between Python framing work and kernel waits — at
+    LLM layer counts the dispatch overhead dominated the quantization
+    compute several times over. ``fmt_for`` maps item name -> format;
+    items absent from it pass through untouched. Results are
+    bitwise-identical to calling :func:`quantize` per item — only the
+    dispatch schedule changes (asserted by the golden-bytes suite).
+    """
+    out: dict[str, QuantizedTensor] = {}
+    groups: dict[str, list[str]] = {}
+    for name, value in items.items():
+        fmt = fmt_for.get(name)
+        if fmt is None:
+            continue
+        if fmt in _BLOCK_OF:
+            groups.setdefault(fmt, []).append(name)
+        else:  # fp32/fp16/bf16 casts: cheap host-side per-tensor work
+            out[name] = quantize(np.asarray(value), fmt)
+    for fmt, names in groups.items():
+        out.update(_fused_quantize_group(items, names, fmt))
+    ops.block_until_ready([(qt.payload, qt.absmax) for qt in out.values()])
+    return out
+
+
 def dequantize_state_dict(qsd: Mapping[str, QuantizedTensor]) -> dict[str, jnp.ndarray]:
     return {name: dequantize(qt) for name, qt in qsd.items()}
 

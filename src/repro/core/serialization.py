@@ -11,6 +11,17 @@ The header carries name/shape/dtype plus quantization metadata for
 the raw array buffer (C-order). No pickling — wire format is portable and
 safe to parse from untrusted peers.
 
+Zero-copy discipline: the hot path works in **buffer views**, not joined
+byte strings. :func:`serialize_item_views` emits an ordered list of
+bytes-like segments (iovec-style) whose concatenation *is* the item's
+wire bytes — array payloads stay ``memoryview``s over the tensors'
+own buffers, so encoding an item costs one small header allocation and
+zero payload copies. :func:`deserialize_item` accepts any buffer
+(``bytes``/``bytearray``/``memoryview``) and returns ``frombuffer``
+array views into it, so decoding copies nothing either. The joined-bytes
+functions (:func:`serialize_item`, :func:`serialize_container`) remain
+as the convenience/compat surface and are defined as "join the views".
+
 This module is the *inner* codec only. When a
 :class:`~repro.core.pipeline.WirePipeline` carries per-item transforms
 (quantize, compress, checksum), each item here becomes the body of a
@@ -22,8 +33,8 @@ from __future__ import annotations
 
 import json
 import struct
-from collections.abc import Iterator, Mapping
-from typing import Any
+from collections.abc import Iterator, Mapping, Sequence
+from typing import Any, Union
 
 import numpy as np
 
@@ -33,17 +44,73 @@ from repro.utils import mem
 
 _U32 = struct.Struct("<I")
 
+#: one wire item as an ordered list of buffer segments (iovec); the
+#: item's wire bytes are the concatenation of the segments
+Views = list[Union[bytes, memoryview]]
+#: what streamers accept per item: pre-joined bytes or a view list
+ViewsLike = Union[bytes, bytearray, memoryview, Sequence[Union[bytes, memoryview]]]
 
-def _arr_bytes(a: Any) -> bytes:
-    return np.ascontiguousarray(np.asarray(a)).tobytes()
+
+def _as_view(a: Any) -> Union[bytes, memoryview]:
+    """Flat byte view over an array's buffer — zero-copy when the array
+    is already C-contiguous (``ascontiguousarray`` is then a no-op);
+    falls back to ``tobytes`` for dtypes without buffer-protocol support
+    (that copy is recorded with the meter). The view is exported
+    **read-only**: on a zero-copy hop (loopback) it may reach the
+    receiving decoder directly, and nothing downstream may scribble on
+    the sender's tensors through it."""
+    src = np.asarray(a)
+    arr = np.ascontiguousarray(src)
+    if not np.shares_memory(arr, src):
+        mem.record_copy(arr.nbytes)  # non-contiguous input: real memcpy
+    try:
+        return memoryview(arr).toreadonly().cast("B")
+    except (TypeError, ValueError, NotImplementedError):
+        out = arr.tobytes()
+        mem.record_copy(len(out))
+        return out
 
 
-def serialize_item(name: str, value: Any) -> bytes:
-    """Serialize one state-dict item (array, QuantizedTensor or
-    SparseTensor)."""
+def views_nbytes(views: ViewsLike) -> int:
+    """Total wire length of one item, joined or scattered."""
+    if isinstance(views, (bytes, bytearray, memoryview)):
+        return len(views)
+    return sum(v.nbytes if isinstance(v, memoryview) else len(v) for v in views)
+
+
+def join_views(views: ViewsLike) -> bytes:
+    """Materialize one item's wire bytes (records the copy). This is the
+    only place view-mode items become contiguous — drivers call it at
+    the real transport boundary, nowhere earlier."""
+    if isinstance(views, bytes):
+        return views
+    if isinstance(views, (bytearray, memoryview)):
+        mem.record_copy(len(views))
+        return bytes(views)
+    out = b"".join(views)
+    mem.record_copy(len(out))
+    return out
+
+
+def iter_view_segments(views: ViewsLike) -> Iterator[memoryview]:
+    """Normalize an item to flat memoryview segments (zero-copy)."""
+    if isinstance(views, (bytes, bytearray, memoryview)):
+        views = (views,)
+    for v in views:
+        mv = v if isinstance(v, memoryview) else memoryview(v)
+        if mv.format != "B" or mv.ndim != 1:
+            mv = mv.cast("B")
+        if mv.nbytes:
+            yield mv
+
+
+def serialize_item_views(name: str, value: Any) -> Views:
+    """One state-dict item -> ordered wire segments (header, then the
+    payload buffers as zero-copy views). ``b"".join`` of the result is
+    byte-identical to :func:`serialize_item`."""
     if isinstance(value, SparseTensor):
-        idx = _arr_bytes(value.indices)
-        vals = _arr_bytes(value.values)
+        idx = _as_view(value.indices)
+        vals = _as_view(value.values)
         header = {
             "kind": "sparse",
             "name": name,
@@ -53,49 +120,102 @@ def serialize_item(name: str, value: Any) -> bytes:
             "orig_shape": list(value.orig_shape),
             "orig_dtype": str(np.dtype(value.orig_dtype)),
         }
-        body = idx + vals
         hbytes = json.dumps(header, sort_keys=True).encode()
-        return _U32.pack(len(hbytes)) + hbytes + body
+        return [_U32.pack(len(hbytes)) + hbytes, idx, vals]
     if isinstance(value, QuantizedTensor):
-        payload = _arr_bytes(value.payload)
-        absmax = _arr_bytes(value.absmax) if value.absmax is not None else b""
+        payload = _as_view(value.payload)
+        absmax = _as_view(value.absmax) if value.absmax is not None else b""
         header = {
             "kind": "qtensor",
             "name": name,
             "fmt": value.fmt,
             "payload_shape": list(value.payload.shape),
             "payload_dtype": str(np.asarray(value.payload).dtype),
-            "absmax_len": len(absmax),
+            "absmax_len": views_nbytes([absmax]),
             "absmax_shape": list(value.absmax.shape) if value.absmax is not None else [],
             "orig_shape": list(value.orig_shape),
             "orig_dtype": str(np.dtype(value.orig_dtype)),
         }
-        body = payload + absmax
-    else:
-        arr = np.asarray(value)
-        header = {
-            "kind": "array",
-            "name": name,
-            "shape": list(arr.shape),
-            "dtype": str(arr.dtype),
-        }
-        body = _arr_bytes(arr)
+        hbytes = json.dumps(header, sort_keys=True).encode()
+        views: Views = [_U32.pack(len(hbytes)) + hbytes, payload]
+        if views_nbytes([absmax]):
+            views.append(absmax)
+        return views
+    arr = np.asarray(value)
+    header = {
+        "kind": "array",
+        "name": name,
+        "shape": list(arr.shape),
+        "dtype": str(arr.dtype),
+    }
     hbytes = json.dumps(header, sort_keys=True).encode()
-    return _U32.pack(len(hbytes)) + hbytes + body
+    return [_U32.pack(len(hbytes)) + hbytes, _as_view(arr)]
 
 
-def deserialize_item(buf: bytes) -> tuple[str, Any, int]:
-    """Parse one item from the head of ``buf``; returns (name, value, consumed)."""
-    (hlen,) = _U32.unpack_from(buf, 0)
-    header = json.loads(buf[4 : 4 + hlen].decode())
+def serialize_item(name: str, value: Any) -> bytes:
+    """Serialize one state-dict item (array, QuantizedTensor or
+    SparseTensor) to contiguous bytes — the views, joined."""
+    return join_views(serialize_item_views(name, value))
+
+
+def declared_item_nbytes(buf: Union[bytes, bytearray, memoryview]) -> int | None:
+    """Total wire length of the item at the head of ``buf``, parsed from
+    its header alone — what a receiver preallocates its reassembly
+    buffer from. Returns None while ``buf`` is still shorter than the
+    header, or for unknown header kinds."""
+    mv = memoryview(buf)
+    if mv.nbytes < 4:
+        return None
+    (hlen,) = _U32.unpack_from(mv, 0)
+    if mv.nbytes < 4 + hlen:
+        return None
+    try:
+        header = json.loads(bytes(mv[4:4 + hlen]))
+    except (ValueError, UnicodeDecodeError):
+        return None
+    kind = header.get("kind")
+    try:
+        if kind in ("wire", "meta"):
+            body = int(header["n"])
+        elif kind == "array":
+            shape = tuple(header["shape"])
+            body = int(np.prod(shape)) * np.dtype(header["dtype"]).itemsize if shape \
+                else np.dtype(header["dtype"]).itemsize
+        elif kind == "qtensor":
+            pshape = tuple(header["payload_shape"])
+            pdtype = np.dtype(header["payload_dtype"])
+            body = (int(np.prod(pshape)) if pshape else 1) * pdtype.itemsize
+            body += int(header["absmax_len"])
+        elif kind == "sparse":
+            k = int(header["k"])
+            body = k * (np.dtype(header["idx_dtype"]).itemsize
+                        + np.dtype(header["val_dtype"]).itemsize)
+        else:
+            return None
+    except (KeyError, TypeError, ValueError):
+        return None
+    return 4 + hlen + body
+
+
+def deserialize_item(buf: Union[bytes, bytearray, memoryview]) -> tuple[str, Any, int]:
+    """Parse one item from the head of ``buf``; returns (name, value,
+    consumed). Arrays are ``frombuffer`` views into ``buf`` — no payload
+    copy; the caller keeps the buffer alive as long as the values.
+    Decoded arrays are **read-only** (exactly like the pre-views wire,
+    which decoded from immutable ``bytes``): consumers that need to
+    mutate copy first, and a zero-copy loopback hop can never write
+    back into the sender's buffers."""
+    mv = (buf if isinstance(buf, memoryview) else memoryview(buf)).toreadonly()
+    (hlen,) = _U32.unpack_from(mv, 0)
+    header = json.loads(bytes(mv[4:4 + hlen]))
     off = 4 + hlen
     if header["kind"] == "sparse":
         k = int(header["k"])
         idx_dtype = np.dtype(header["idx_dtype"])
         val_dtype = np.dtype(header["val_dtype"])
-        indices = np.frombuffer(buf, idx_dtype, count=k, offset=off)
+        indices = np.frombuffer(mv, idx_dtype, count=k, offset=off)
         off += k * idx_dtype.itemsize
-        values = np.frombuffer(buf, val_dtype, count=k, offset=off)
+        values = np.frombuffer(mv, val_dtype, count=k, offset=off)
         off += k * val_dtype.itemsize
         sp = SparseTensor(indices, values, tuple(header["orig_shape"]),
                           np.dtype(header["orig_dtype"]))
@@ -104,13 +224,13 @@ def deserialize_item(buf: bytes) -> tuple[str, Any, int]:
         pshape = tuple(header["payload_shape"])
         pdtype = np.dtype(header["payload_dtype"])
         pbytes = int(np.prod(pshape)) * pdtype.itemsize if pshape else pdtype.itemsize
-        payload = np.frombuffer(buf, pdtype, count=int(np.prod(pshape)), offset=off).reshape(pshape)
+        payload = np.frombuffer(mv, pdtype, count=int(np.prod(pshape)), offset=off).reshape(pshape)
         off += pbytes
         absmax = None
         if header["absmax_len"]:
             ashape = tuple(header["absmax_shape"])
             absmax = np.frombuffer(
-                buf, np.float32, count=int(np.prod(ashape)), offset=off
+                mv, np.float32, count=int(np.prod(ashape)), offset=off
             ).reshape(ashape)
             off += header["absmax_len"]
         value: Any = QuantizedTensor(
@@ -121,37 +241,41 @@ def deserialize_item(buf: bytes) -> tuple[str, Any, int]:
     shape = tuple(header["shape"])
     dtype = np.dtype(header["dtype"])
     count = int(np.prod(shape)) if shape else 1
-    arr = np.frombuffer(buf, dtype, count=count, offset=off).reshape(shape)
+    arr = np.frombuffer(mv, dtype, count=count, offset=off).reshape(shape)
     return header["name"], arr, off + count * dtype.itemsize
 
 
 def serialize_container(sd: Mapping[str, Any]) -> bytes:
     """Whole-message serialization (the *regular transmission* path —
 
-    materializes the full blob; registers it with the MemoryMeter)."""
-    parts = [_U32.pack(len(sd))]
-    parts.extend(serialize_item(name, value) for name, value in sd.items())
+    materializes the full blob in one join; registers it with the
+    MemoryMeter)."""
+    parts: Views = [_U32.pack(len(sd))]
+    for name, value in sd.items():
+        parts.extend(serialize_item_views(name, value))
     blob = b"".join(parts)
+    mem.record_copy(len(blob))
     mem.record_alloc(len(blob))
     return blob
 
 
-def deserialize_container(blob: bytes) -> dict[str, Any]:
-    (n,) = _U32.unpack_from(blob, 0)
+def deserialize_container(blob: Union[bytes, bytearray, memoryview]) -> dict[str, Any]:
+    mv = blob if isinstance(blob, memoryview) else memoryview(blob)
+    (n,) = _U32.unpack_from(mv, 0)
     out: dict[str, Any] = {}
     off = 4
     for _ in range(n):
-        name, value, consumed = deserialize_item(blob[off:])
+        name, value, consumed = deserialize_item(mv[off:])
         out[name] = value
         off += consumed
     return out
 
 
-def iter_serialized_items(sd: Mapping[str, Any]) -> Iterator[tuple[str, bytes]]:
-    """Container-streaming producer: yields one serialized item at a time
-
-    (peak live bytes = largest single item, the paper's §III claim)."""
+def iter_serialized_items(sd: Mapping[str, Any]) -> Iterator[tuple[str, Views]]:
+    """Container-streaming producer: yields one item's wire segments at a
+    time (peak live bytes = largest single item, the paper's §III claim;
+    the segments are zero-copy views over the tensors themselves)."""
     for name, value in sd.items():
-        item = serialize_item(name, value)
-        with mem.record_hold(len(item)):
-            yield name, item
+        views = serialize_item_views(name, value)
+        with mem.record_hold(views_nbytes(views)):
+            yield name, views

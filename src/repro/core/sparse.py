@@ -55,5 +55,7 @@ def topk_sparsify(arr: np.ndarray, fraction: float) -> SparseTensor:
     order = np.argsort(-np.abs(flat), kind="stable")[:k]
     idx = np.sort(order).astype(np.int64 if flat.size > np.iinfo(np.int32).max
                                 else np.int32)
-    return SparseTensor(idx, flat[idx].copy(), tuple(np.asarray(arr).shape),
+    # fancy indexing already materializes a fresh values array — a
+    # defensive .copy() here would be a second, redundant copy per item
+    return SparseTensor(idx, flat[idx], tuple(np.asarray(arr).shape),
                         np.asarray(arr).dtype)

@@ -33,6 +33,16 @@ plain :mod:`repro.core.serialization`. The
 execution happens *inside* the streaming loop and the container-mode
 peak stays ~one item even with a full transform stack enabled.
 
+The whole layer is **zero-copy**: items arrive as ordered buffer views
+(iovec-style, :data:`repro.core.serialization.Views`), chunkers slice
+the views, and :class:`Chunk` payloads may be tuples of segments that
+drivers forward unjoined — contiguity is restored only at a real
+transport boundary (``Chunk.encode()`` for spooling to disk; the TCP
+driver gathers segments with ``sendmsg`` and coalesces only small
+writes). Receivers reassemble each item into one preallocated buffer
+sized from the item's own header (:class:`_ItemAssembler`), so a
+transferred byte is copied at most once end to end.
+
 Every buffer the layer holds live registers with the active
 :class:`~repro.utils.mem.MemoryMeter`, which is how the Table III
 benchmark measures the three envelopes deterministically.
@@ -60,13 +70,47 @@ FLAG_ITEM_END = 2  # container streaming: item boundary marker
 
 @dataclasses.dataclass(frozen=True)
 class Chunk:
+    """One framed slice of a logical stream.
+
+    ``payload`` is bytes-like **or a tuple of bytes-like segments**
+    (scatter-gather: the chunk's wire bytes are the segments'
+    concatenation, but nothing is joined until a real transport boundary
+    needs contiguity — ``encode()``/``payload_bytes()``). Loopback
+    delivery hands the segments to the receiver as-is, so an in-process
+    hop moves tensor bytes with zero copies.
+    """
+
     stream_id: bytes          # 16-byte uuid
     seq: int
-    payload: bytes
+    payload: Any              # bytes | memoryview | tuple of those
     flags: int = 0
 
+    @property
+    def segments(self) -> tuple:
+        """The payload as a tuple of bytes-like segments."""
+        p = self.payload
+        return p if isinstance(p, tuple) else (p,)
+
+    @property
+    def nbytes(self) -> int:
+        p = self.payload
+        if isinstance(p, tuple):
+            return sum(len(s) for s in p)
+        return len(p)
+
+    def payload_bytes(self) -> bytes:
+        """Contiguous payload bytes (joins — records the copy)."""
+        p = self.payload
+        if isinstance(p, tuple):
+            return ser.join_views(list(p))
+        if isinstance(p, memoryview):
+            mem.record_copy(len(p))
+            return bytes(p)
+        return bytes(p)
+
     def encode(self) -> bytes:
-        return _HDR.pack(self.stream_id, self.seq, len(self.payload), self.flags) + self.payload
+        return _HDR.pack(self.stream_id, self.seq, self.nbytes, self.flags) \
+            + self.payload_bytes()
 
     @classmethod
     def decode(cls, buf: bytes) -> Chunk:
@@ -215,10 +259,31 @@ class TCPDriver(Driver):
         self._thread = threading.Thread(target=serve, daemon=True)
         self._thread.start()
 
+    #: below this many payload bytes a chunk is joined into one buffer
+    #: before hitting the socket (small-write coalescing: one syscall and
+    #: one TCP segment beat a scatter-gather call over tiny pieces)
+    COALESCE_BYTES = 1 << 13
+
     def send(self, chunk: Chunk) -> None:
         if self._sock is None:
             self._sock = socket.create_connection(self.address)
-        self._sock.sendall(chunk.encode())
+        hdr = _HDR.pack(chunk.stream_id, chunk.seq, chunk.nbytes, chunk.flags)
+        segments = chunk.segments
+        if chunk.nbytes < self.COALESCE_BYTES or not hasattr(self._sock, "sendmsg"):
+            # small-write coalescing — and the portable fallback where
+            # the platform has no scatter-gather socket call (Windows)
+            self._sock.sendall(hdr + chunk.payload_bytes())
+            return
+        # scatter-gather write: the kernel gathers header + payload views
+        # in one syscall; no user-space join of the tensor bytes
+        bufs: list[Any] = [hdr, *segments]
+        while bufs:
+            sent = self._sock.sendmsg(bufs)
+            while bufs and sent >= len(bufs[0]):
+                sent -= len(bufs[0])
+                bufs.pop(0)
+            if sent and bufs:
+                bufs[0] = memoryview(bufs[0])[sent:]
 
     def close(self) -> None:
         """Idempotent shutdown: drains the receiver thread even when no
@@ -246,8 +311,127 @@ class TCPDriver(Driver):
 # Receivers (re-assembly with mode-specific memory envelopes)
 # ---------------------------------------------------------------------------
 
+class _ItemAssembler:
+    """Reassembles one logical item from in-order chunk segments into a
+    **single preallocated buffer**.
+
+    The first segments are buffered (zero-copy references) only until
+    the item's own header — u32 header length + JSON header — can be
+    parsed; :func:`repro.core.serialization.declared_item_nbytes` then
+    gives the item's total wire length and a ``bytearray`` of exactly
+    that size is allocated once. Every further segment is copied
+    straight into it at its offset, so a multi-chunk item costs one
+    buffer and one copy instead of the old parts-list + ``b"".join``
+    double copy. Single-segment items (item smaller than a chunk — the
+    common case) are handed to the decoder as the received view, with
+    no copy and no allocation at all.
+
+    MemoryMeter accounting matches the single-buffer reality: one
+    ``record_alloc`` for the assembled buffer (plus the transient
+    pre-header segments), one ``record_free`` when the item is consumed.
+    """
+
+    __slots__ = ("_parts", "_parts_n", "_buf", "_filled", "_total")
+
+    def __init__(self) -> None:
+        self._parts: list = []
+        self._parts_n = 0
+        self._buf: Optional[bytearray] = None
+        self._filled = 0
+        self._total: Optional[int] = None
+
+    @property
+    def nbytes(self) -> int:
+        """Live receive-buffer bytes held for the in-flight item."""
+        return self._parts_n + (self._total or 0)
+
+    def add(self, seg: Any, more_coming: bool = True) -> None:
+        """One in-order segment of the current item. ``more_coming=False``
+        marks segments of the item's final chunk: an item that completes
+        before its header was ever parsed skips preallocation entirely —
+        the common single-chunk item is handed to the decoder as the
+        received view, zero-parse and zero-copy."""
+        n = len(seg)
+        if n == 0:
+            return
+        if self._buf is not None:
+            if self._filled + n > self._total:
+                raise ValueError(
+                    f"item overflows its declared wire length {self._total} "
+                    f"({self._filled + n} bytes received)"
+                )
+            self._buf[self._filled:self._filled + n] = seg
+            mem.record_copy(n)
+            self._filled += n
+            return
+        self._parts.append(seg)
+        self._parts_n += n
+        mem.record_alloc(n)
+        if more_coming:
+            self._try_prealloc()
+
+    def _peek_prefix(self, n: int) -> bytes:
+        out = bytearray()
+        for p in self._parts:
+            out += memoryview(p)[: n - len(out)]
+            if len(out) >= n:
+                break
+        return bytes(out)
+
+    def _try_prealloc(self) -> None:
+        if self._parts_n < 4:
+            return
+        total = ser.declared_item_nbytes(
+            self._parts[0] if len(self._parts) == 1
+            else self._peek_prefix(min(self._parts_n, 4096))
+        )
+        if total is None or self._parts_n >= total:
+            # header not parseable yet, or the item is already complete
+            # in the buffered segments (no copy needed at all)
+            return
+        self._total = total
+        self._buf = bytearray(total)
+        mem.record_alloc(total)
+        for p in self._parts:
+            self._buf[self._filled:self._filled + len(p)] = p
+            mem.record_copy(len(p))
+            self._filled += len(p)
+        mem.record_free(self._parts_n)
+        self._parts.clear()
+        self._parts_n = 0
+
+    def complete(self) -> tuple[Any, int]:
+        """Finish the item: returns ``(buffer, live_bytes)`` — the
+        assembled bytes-like to decode from, and the metered bytes the
+        caller must ``record_free`` once the decoded item is consumed."""
+        if self._buf is not None:
+            if self._filled != self._total:
+                raise ValueError(
+                    f"item ended at {self._filled} bytes but its header "
+                    f"declared {self._total}"
+                )
+            out: Any = memoryview(self._buf)
+            live = self._total
+        elif len(self._parts) == 1:
+            out, live = self._parts[0], self._parts_n
+        else:
+            out = b"".join(self._parts)
+            mem.record_copy(len(out))
+            live = self._parts_n
+        self._parts = []
+        self._parts_n = 0
+        self._buf = None
+        self._filled = 0
+        self._total = None
+        return out, live
+
+
 class BlobReceiver:
     """Regular transmission receiver: accumulates the whole blob.
+
+    Chunk segments are held by reference (zero-copy) and joined exactly
+    once when EOF arrives — the single materialization the regular mode
+    is defined by; there is no per-chunk copy and no second join.
 
     ``decode_container`` turns the reassembled blob into the result dict;
     the default is the plain serialization codec, and the wire pipeline
@@ -258,25 +442,28 @@ class BlobReceiver:
         self,
         decode_container: Optional[Callable[[bytes], dict[str, Any]]] = None,
     ) -> None:
-        self._parts: list[bytes] = []
+        self._parts: list = []
         self._size = 0
         self._decode = decode_container or ser.deserialize_container
         self.result: Optional[dict[str, Any]] = None
 
     def on_chunk(self, chunk: Chunk) -> None:
-        self._parts.append(chunk.payload)
-        mem.record_alloc(len(chunk.payload))
-        self._size += len(chunk.payload)
+        self._parts.extend(chunk.segments)
+        mem.record_alloc(chunk.nbytes)
+        self._size += chunk.nbytes
         if chunk.eof:
             blob = b"".join(self._parts)
-            mem.record_alloc(len(blob))  # join materializes a second copy
+            mem.record_copy(len(blob))
+            mem.record_alloc(len(blob))  # the one materialized copy
             self.result = self._decode(blob)
             mem.record_free(len(blob) + self._size)
             self._parts.clear()
 
 
 class ContainerReceiver:
-    """Container-streaming receiver: holds at most one item's bytes.
+    """Container-streaming receiver: holds at most one item's bytes,
+    reassembled into a single preallocated buffer (see
+    :class:`_ItemAssembler`).
 
     ``consume`` receives each (name, value) as soon as its item completes
     — enabling *incremental* downstream processing (e.g. streaming FedAvg)
@@ -284,10 +471,11 @@ class ContainerReceiver:
     items are collected into ``result`` (arrays themselves must live
     somewhere; the *transmission* overhead stays one item).
 
-    ``decode_item`` turns one reassembled item's bytes into ``(name,
+    ``decode_item`` turns one reassembled item's buffer into ``(name,
     value, consumed)``; the default is the plain serialization codec, and
     the wire pipeline substitutes its envelope-aware decoder — stage
-    decode then runs here, inside the streaming loop.
+    decode then runs here, inside the streaming loop. Decoded arrays are
+    ``frombuffer`` views into the assembled buffer (no decode copy).
     """
 
     def __init__(
@@ -295,27 +483,23 @@ class ContainerReceiver:
         consume: Optional[Callable[[str, Any], None]] = None,
         decode_item: Optional[Callable[[bytes], tuple[str, Any, int]]] = None,
     ) -> None:
-        self._parts: list[bytes] = []
-        self._size = 0
+        self._asm = _ItemAssembler()
         self._consume = consume
         self._decode = decode_item or ser.deserialize_item
         self.result: dict[str, Any] = {}
         self.done = False
 
     def on_chunk(self, chunk: Chunk) -> None:
-        self._parts.append(chunk.payload)
-        mem.record_alloc(len(chunk.payload))
-        self._size += len(chunk.payload)
+        for seg in chunk.segments:
+            self._asm.add(seg, more_coming=not chunk.item_end)
         if chunk.item_end:
-            buf = b"".join(self._parts)
+            buf, live = self._asm.complete()
             name, value, _ = self._decode(buf)
-            mem.record_free(self._size)
-            self._parts.clear()
-            self._size = 0
             if self._consume is not None:
                 self._consume(name, value)
             else:
                 self.result[name] = value
+            mem.record_free(live)
         if chunk.eof:
             self.done = True
 
@@ -329,8 +513,9 @@ class FileReceiver:
         self.done = False
 
     def on_chunk(self, chunk: Chunk) -> None:
-        with mem.record_hold(len(chunk.payload)):
-            self._fh.write(chunk.payload)
+        with mem.record_hold(chunk.nbytes):
+            for seg in chunk.segments:
+                self._fh.write(seg)
         if chunk.eof:
             self._fh.close()
             self.done = True
@@ -340,12 +525,45 @@ class FileReceiver:
 # Streamers (senders)
 # ---------------------------------------------------------------------------
 
-def _chunk_iter(blob: bytes, chunk_size: int) -> Iterator[tuple[bytes, bool]]:
+def _chunk_iter(blob: bytes, chunk_size: int) -> Iterator[tuple[Any, bool]]:
+    """Slice a contiguous blob into chunk payloads — memoryview slices,
+    so chunking copies nothing."""
+    mv = memoryview(blob)
     for off in range(0, len(blob), chunk_size):
-        part = blob[off : off + chunk_size]
+        part = mv[off : off + chunk_size]
         yield part, off + chunk_size >= len(blob)
     if not blob:
         yield b"", True
+
+
+def _chunk_iter_views(item: ser.ViewsLike, chunk_size: int) -> Iterator[tuple[Any, bool]]:
+    """Chunk one scatter-gather item into payloads of exactly
+    ``chunk_size`` bytes (except the last) **without joining**: each
+    chunk payload is a single view or a tuple of views sliced from the
+    item's segments. Chunk boundaries are byte-identical to slicing the
+    joined item, so the wire format is unchanged."""
+    total = ser.views_nbytes(item)
+    if total == 0:
+        yield b"", True
+        return
+    cur: list = []
+    cur_n = 0
+    emitted = 0
+    for seg in ser.iter_view_segments(item):
+        off = 0
+        n = seg.nbytes
+        while off < n:
+            take = min(chunk_size - cur_n, n - off)
+            cur.append(seg if take == n and off == 0 else seg[off:off + take])
+            cur_n += take
+            off += take
+            if cur_n == chunk_size:
+                emitted += chunk_size
+                yield (cur[0] if len(cur) == 1 else tuple(cur)), emitted >= total
+                cur = []
+                cur_n = 0
+    if cur_n:
+        yield (cur[0] if len(cur) == 1 else tuple(cur)), True
 
 
 class ObjectStreamer:
@@ -377,18 +595,21 @@ class ContainerStreamer:
         self.driver = driver
         self.chunk_size = chunk_size
 
-    def send_items(self, items: Iterable[tuple[str, bytes]], total: int) -> bytes:
+    def send_items(self, items: Iterable[tuple[str, ser.ViewsLike]], total: int) -> bytes:
         """Stream ``total`` pre-encoded items, framing item boundaries.
 
-        The item source is any (name, bytes) iterator — the plain
+        The item source is any (name, item) iterator — the plain
         serialization codec or a wire pipeline's envelope encoder — and
         is consumed lazily, so peak live bytes stays ~one encoded item.
+        Each item may be contiguous bytes or a scatter-gather view list
+        (:data:`repro.core.serialization.Views`); views flow through to
+        the driver unjoined.
         """
         sid = uuid.uuid4().bytes
         seq = 0
         for i, (_name, item) in enumerate(items):
             last_item = i == total - 1
-            for part, item_last in _chunk_iter(item, self.chunk_size):
+            for part, item_last in _chunk_iter_views(item, self.chunk_size):
                 flags = 0
                 if item_last:
                     flags |= FLAG_ITEM_END
@@ -543,7 +764,7 @@ class ObjectRetriever:
                                               decode_item=decoder.decode_item)
             driver.connect(receiver.on_chunk)
             ContainerStreamer(driver, self.chunk_size).send_items(
-                pipeline.iter_encode(enc, ctx), pipeline.n_items(enc)
+                pipeline.iter_encode_views(enc, ctx), pipeline.n_items(enc)
             )
         else:
             receiver = BlobReceiver(decode_container=decoder.decode_blob)

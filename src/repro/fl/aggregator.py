@@ -26,11 +26,12 @@ streaming loop), and aggregation is a sample-weighted average at original
 precision — running sum + one in-flight item, never K full models.
 
 :class:`QuantizedFedAvgAggregator` is the beyond-paper path: the server
-keeps the uplink in wire form (``decode_values=False``), stacks the int8
-payloads and calls the fused dequant+accumulate kernel. The aggregate is
-bit-identical to dequantize-then-average (tests assert this). Note its
-buffering is inherently O(quantized payload x clients) — the kernel
-batches — which is still ~4-8x below fp32 batch aggregation.
+keeps the uplink in wire form (``decode_values=False``) and folds each
+int8 item through the buffer-donating dequant-accumulate-into kernel as
+it arrives — one fp32 running sum per tensor, updated in place, no
+per-client payload buffering and no fp32 temporary of the dequantized
+contribution. The aggregate equals dequantize-then-average (tests
+assert this).
 
 Thread safety: ``begin``/``accept_item``/``finish`` serialize on a
 per-instance lock, so many clients may stream into one aggregator
@@ -99,6 +100,7 @@ class FedAvgAggregator(Aggregator):
 
     def __init__(self) -> None:
         self._sum: dict[str, np.ndarray] = {}
+        self._scratch: dict[tuple[int, ...], np.ndarray] = {}
         self._weight = 0.0
         self.accepted = 0
         self._lock = threading.Lock()
@@ -111,19 +113,32 @@ class FedAvgAggregator(Aggregator):
         return w
 
     def accept_item(self, name: str, value: Any, weight: float) -> None:
-        """Streaming entry point: one item of one client's result."""
+        """Streaming entry point: one item of one client's result.
+
+        The fold reuses a per-shape scratch buffer for the weighted
+        contribution (``w * x`` lands in scratch, scratch adds into the
+        running sum), so folding an item allocates nothing after the
+        first round — same arithmetic, same order, bitwise-equal
+        results to the naive ``sum += value * weight``.
+        """
         if isinstance(value, QuantizedTensor):
             raise TypeError(
                 f"FedAvgAggregator received a quantized item {name!r}; "
                 "decode values on the uplink pipeline (the default) or use "
                 "QuantizedFedAvgAggregator"
             )
-        arr = np.asarray(value, dtype=np.float32) * weight
+        arr = np.asarray(value, dtype=np.float32)
         with self._lock:
-            if name in self._sum:
-                self._sum[name] += arr
-            else:
-                self._sum[name] = arr
+            acc = self._sum.get(name)
+            if acc is None:
+                self._sum[name] = arr * np.float32(weight)
+                return
+            scratch = self._scratch.get(arr.shape)
+            if scratch is None:
+                scratch = np.empty(arr.shape, np.float32)
+                self._scratch[arr.shape] = scratch
+            np.multiply(arr, np.float32(weight), out=scratch)
+            acc += scratch
 
     def finish(self) -> dict[str, np.ndarray]:
         with self._lock:
@@ -140,16 +155,24 @@ class FedAvgAggregator(Aggregator):
 
 
 class QuantizedFedAvgAggregator(Aggregator):
-    """Aggregates blockwise8 Task Results directly from int8 payloads
+    """Aggregates blockwise8 Task Results directly from int8 payloads —
 
-    via the fused Pallas kernel — the server never materializes K fp32
-    models. Non-quantized (small) items fall back to plain averaging.
+    the server never materializes K fp32 models. ``accept_item`` is a
+    **fused streaming fold**: each contribution runs the buffer-donating
+    dequant-accumulate-into kernel
+    (:func:`repro.kernels.ops.dequant_accumulate8_into`), updating one
+    fp32 running sum per tensor in place the moment the item decodes.
+    Server state is O(1 accumulator per tensor) regardless of how many
+    clients stream in — no per-client payload buffering, and the
+    dequantized contribution never exists as a standalone fp32
+    temporary. Non-quantized (small) items fall back to plain averaging.
     """
 
     name = "quantized-fedavg"
 
     def __init__(self) -> None:
-        self._q: dict[str, list[tuple[QuantizedTensor, float]]] = {}
+        self._acc: dict[str, Any] = {}                    # running weighted sums
+        self._shape: dict[str, tuple[int, ...]] = {}      # orig shapes
         self._plain = FedAvgAggregator()
         self._plain_names: set[str] = set()
         self._weight = 0.0
@@ -170,7 +193,16 @@ class QuantizedFedAvgAggregator(Aggregator):
                     f"QuantizedFedAvgAggregator supports blockwise8; {name!r} is {value.fmt}"
                 )
             with self._lock:
-                self._q.setdefault(name, []).append((value, weight))
+                known = self._shape.get(name)
+                if known is not None and known != tuple(value.orig_shape):
+                    raise ValueError(
+                        f"contribution for {name!r} has shape "
+                        f"{tuple(value.orig_shape)}; aggregate holds {known}"
+                    )
+                self._shape[name] = tuple(value.orig_shape)
+                self._acc[name] = ops.dequant_accumulate8_into(
+                    self._acc.get(name), value.payload, value.absmax, weight
+                )
         else:
             self._plain.accept_item(name, value, weight)
             with self._lock:
@@ -179,22 +211,19 @@ class QuantizedFedAvgAggregator(Aggregator):
     def finish(self) -> dict[str, np.ndarray]:
         with self._lock:
             out: dict[str, np.ndarray] = {}
-            for name, contribs in self._q.items():
-                qs = jnp.stack([np.asarray(qt.payload) for qt, _ in contribs])
-                ams = jnp.stack([np.asarray(qt.absmax) for qt, _ in contribs])
-                ws = jnp.asarray([w for _, w in contribs], jnp.float32) / self._weight
-                agg2d = ops.dequant_accumulate8(qs, ams, ws)
-                qt0 = contribs[0][0]
-                n = int(np.prod(qt0.orig_shape))
+            inv = np.float32(1.0) / np.float32(self._weight if self._weight else 1.0)
+            for name, acc in self._acc.items():
+                shape = self._shape[name]
+                n = int(np.prod(shape))
                 out[name] = (
-                    np.asarray(agg2d).reshape(-1)[:n].reshape(qt0.orig_shape)
-                    .astype(np.float32)
-                )
+                    np.asarray(acc).reshape(-1)[:n].reshape(shape) * inv
+                ).astype(np.float32)
             if self._plain_names:
                 # reuse the plain aggregator's running sum (shares self._weight)
                 self._plain._weight = self._weight
                 out.update(self._plain.finish())
-            self._q = {}
+            self._acc = {}
+            self._shape = {}
             self._plain_names = set()
             self._weight = 0.0
             self.accepted = 0

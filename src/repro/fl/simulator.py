@@ -129,7 +129,7 @@ class CountingDriver(sm.Driver):
         self.inner.connect(on_chunk)
 
     def send(self, chunk: sm.Chunk) -> None:
-        self.bytes_sent += sm._HDR.size + len(chunk.payload)
+        self.bytes_sent += sm._HDR.size + chunk.nbytes
         self.inner.send(chunk)
 
     def flush(self) -> None:
@@ -237,7 +237,7 @@ class _Wire:
                         ok = xfer.send_blob(pipeline.encode_blob(msg, ctx), recv,
                                             max_rounds=cfg.max_repair_rounds)
                     else:
-                        ok = xfer.send_items(pipeline.iter_encode(msg, ctx),
+                        ok = xfer.send_items(pipeline.iter_encode_views(msg, ctx),
                                              pipeline.n_items(msg), recv,
                                              max_rounds=cfg.max_repair_rounds)
                     retransmits = xfer.retransmits
@@ -256,7 +256,7 @@ class _Wire:
                         )
                     else:
                         sm.ContainerStreamer(driver, cfg.chunk_size).send_items(
-                            pipeline.iter_encode(msg, ctx), pipeline.n_items(msg)
+                            pipeline.iter_encode_views(msg, ctx), pipeline.n_items(msg)
                         )
                     driver.flush()  # no-op unless a spool driver is underneath
                 driver.close()

@@ -53,3 +53,46 @@ def dequant_accumulate8_pallas(
         out_shape=jax.ShapeDtypeStruct((nblocks, BLOCK8), jnp.float32),
         interpret=interpret,
     )(qs, absmaxes, weights)
+
+
+def _fold_kernel(acc_ref, q_ref, absmax_ref, w_ref, out_ref):
+    q = q_ref[...].astype(jnp.float32)                       # (R, B)
+    scale = absmax_ref[...].astype(jnp.float32) / 127.0      # (R,)
+    scale = scale * w_ref[0].astype(jnp.float32)             # fold FedAvg w_k
+    out_ref[...] = acc_ref[...] + q * scale[:, None]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",), donate_argnums=(0,))
+def dequant_accumulate8_into_pallas(
+    acc: jnp.ndarray, q: jnp.ndarray, absmax: jnp.ndarray, weight: jnp.ndarray,
+    *, interpret: bool = False
+):
+    """Streaming fold: ``acc + weight * dequant(q)``, one contribution at
+    a time, **into** the running fp32 accumulator.
+
+    ``acc`` is donated and the output aliases it
+    (``input_output_aliases={0: 0}``), so the per-item fold of the
+    streaming aggregation plane updates the accumulator in place —
+    no fp32 temporary of the dequantized contribution, no second
+    accumulator allocation per fold. acc: (nblocks, 4096) fp32;
+    q: (nblocks, 4096) int8; absmax: (nblocks,); weight: scalar.
+    """
+    nblocks, b = q.shape
+    assert b == BLOCK8 and nblocks % ROWS == 0, q.shape
+    assert acc.shape == q.shape, (acc.shape, q.shape)
+    grid = (nblocks // ROWS,)
+    w = jnp.reshape(weight, (1,)).astype(jnp.float32)
+    return pl.pallas_call(
+        _fold_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((ROWS, BLOCK8), lambda i: (i, 0)),
+            pl.BlockSpec((ROWS, BLOCK8), lambda i: (i, 0)),
+            pl.BlockSpec((ROWS,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((ROWS, BLOCK8), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nblocks, BLOCK8), jnp.float32),
+        input_output_aliases={0: 0},
+        interpret=interpret,
+    )(acc, q, absmax, w)

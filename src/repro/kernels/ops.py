@@ -3,6 +3,18 @@
 payloads out, with backend dispatch (Pallas on TPU, Pallas-interpret for
 kernel validation, pure-jnp ref elsewhere — same semantics everywhere,
 enforced by tests/test_kernels_*.py).
+
+Dispatch discipline (the wire hot path): each public op is a **single**
+jitted computation covering flatten + pad + quantize, so one tensor
+costs one XLA dispatch instead of a chain of eager reshape/astype/pad
+dispatches followed by the kernel. ``jax.jit``'s compilation cache is
+keyed by (shape, dtype) — the shape-bucketed cache: the first tensor of
+a given shape compiles, every later layer of the same shape reuses the
+executable. All ops dispatch **asynchronously**; callers that encode a
+whole message batch their dispatches and block once via
+:func:`block_until_ready` (see ``repro.core.quantization.
+quantize_batch``) instead of syncing per tensor inside the streamer
+loop.
 """
 from __future__ import annotations
 
@@ -28,6 +40,51 @@ _REF_D4 = {
     fmt: jax.jit(functools.partial(ref.dequantize_4bit, code=code))
     for fmt, code in (("fp4", ref.FP4_CODE), ("nf4", ref.NF4_CODE))
 }
+
+
+def block_until_ready(values) -> None:
+    """Barrier for a batch of async-dispatched op results (pytree of
+    arrays; non-JAX leaves pass through untouched)."""
+    jax.block_until_ready(values)
+
+
+def _flat_blocks(x: jnp.ndarray, block: int) -> jnp.ndarray:
+    """Traced flatten + fp32 cast + zero-pad to whole blocks (inside
+    jit, so the whole chain is one fused executable per input shape)."""
+    flat = jnp.asarray(x).reshape(-1).astype(jnp.float32)
+    n = flat.shape[0]
+    padded = int(np.ceil(n / block)) * block
+    if padded != n:
+        flat = jnp.pad(flat, (0, padded - n))
+    return flat.reshape(padded // block, block)
+
+
+# whole-op jitted entry points (ref backend): flatten/pad/quantize fused
+_REF_Q8_FULL = jax.jit(lambda x: ref.quantize_blockwise8(_flat_blocks(x, ref.BLOCK8)))
+_REF_Q4_FULL = {
+    fmt: jax.jit(
+        functools.partial(
+            lambda x, code: ref.quantize_4bit(_flat_blocks(x, ref.BLOCK4), code),
+            code=code,
+        )
+    )
+    for fmt, code in (("fp4", ref.FP4_CODE), ("nf4", ref.NF4_CODE))
+}
+
+
+@functools.partial(jax.jit, static_argnames=("shape", "dtype"))
+def _ref_d8_full(q, absmax, shape, dtype):
+    out = ref.dequantize_blockwise8(q, absmax)
+    n = int(np.prod(shape)) if shape else 1
+    return out.reshape(-1)[:n].reshape(shape).astype(dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("fmt", "shape", "dtype"))
+def _ref_d4_full(packed, absmax, fmt, shape, dtype):
+    code = ref.FP4_CODE if fmt == "fp4" else ref.NF4_CODE
+    out = ref.dequantize_4bit(packed, absmax, code)
+    n = int(np.prod(shape)) if shape else 1
+    return out.reshape(-1)[:n].reshape(shape).astype(dtype)
 from repro.kernels.quant_blockwise8 import (
     BLOCK8,
     ROWS,
@@ -40,7 +97,10 @@ from repro.kernels.quant_nf4 import (
     dequantize_4bit_pallas,
     quantize_4bit_pallas,
 )
-from repro.kernels.fused_dequant_agg import dequant_accumulate8_pallas
+from repro.kernels.fused_dequant_agg import (
+    dequant_accumulate8_into_pallas,
+    dequant_accumulate8_pallas,
+)
 
 _BACKENDS = ("auto", "ref", "pallas", "pallas_interpret")
 _backend = os.environ.get("REPRO_KERNEL_BACKEND", "auto")
@@ -88,11 +148,14 @@ def _pad_rows(x2d: jnp.ndarray, row_multiple: int) -> tuple[jnp.ndarray, int]:
 # ---------------------------------------------------------------------------
 
 def quantize_blockwise8(x: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
-    """Any-shape float array -> ((nblocks, 4096) int8, (nblocks,) absmax)."""
-    x2d, _ = _pad_to_blocks(x.reshape(-1).astype(jnp.float32), BLOCK8)
+    """Any-shape float array -> ((nblocks, 4096) int8, (nblocks,) absmax).
+
+    One async jitted dispatch on the ref backend (flatten/pad/quantize
+    fused; shape-bucketed by jit's compilation cache)."""
     backend = get_backend()
     if backend == "ref":
-        return _REF_Q8(x2d)
+        return _REF_Q8_FULL(x)
+    x2d, _ = _pad_to_blocks(jnp.asarray(x).reshape(-1).astype(jnp.float32), BLOCK8)
     nblocks = x2d.shape[0]
     x2d, _ = _pad_rows(x2d, ROWS)
     q, am = quantize_blockwise8_pallas(x2d, interpret=(backend == "pallas_interpret"))
@@ -104,13 +167,12 @@ def dequantize_blockwise8(
 ) -> jnp.ndarray:
     backend = get_backend()
     if backend == "ref":
-        out = _REF_D8(q, absmax)
-    else:
-        nblocks = q.shape[0]
-        q, _ = _pad_rows(q, ROWS)
-        absmax = jnp.pad(absmax, (0, q.shape[0] - nblocks))
-        out = dequantize_blockwise8_pallas(q, absmax, interpret=(backend == "pallas_interpret"))
-        out = out[:nblocks]
+        return _ref_d8_full(q, absmax, tuple(shape), np.dtype(dtype))
+    nblocks = q.shape[0]
+    q, _ = _pad_rows(q, ROWS)
+    absmax = jnp.pad(absmax, (0, q.shape[0] - nblocks))
+    out = dequantize_blockwise8_pallas(q, absmax, interpret=(backend == "pallas_interpret"))
+    out = out[:nblocks]
     n = int(np.prod(shape))
     return out.reshape(-1)[:n].reshape(shape).astype(dtype)
 
@@ -120,11 +182,14 @@ def dequantize_blockwise8(
 # ---------------------------------------------------------------------------
 
 def quantize_4bit(x: jnp.ndarray, fmt: str) -> tuple[jnp.ndarray, jnp.ndarray]:
-    """Any-shape float array -> ((nblocks, 32) packed uint8, (nblocks,) absmax)."""
-    x2d, _ = _pad_to_blocks(x.reshape(-1).astype(jnp.float32), BLOCK4)
+    """Any-shape float array -> ((nblocks, 32) packed uint8, (nblocks,) absmax).
+
+    One async jitted dispatch on the ref backend, like
+    :func:`quantize_blockwise8`."""
     backend = get_backend()
     if backend == "ref":
-        return _REF_Q4[fmt](x2d)
+        return _REF_Q4_FULL[fmt](x)
+    x2d, _ = _pad_to_blocks(jnp.asarray(x).reshape(-1).astype(jnp.float32), BLOCK4)
     nblocks = x2d.shape[0]
     x2d, _ = _pad_rows(x2d, ROWS4)
     p, am = quantize_4bit_pallas(x2d, fmt=fmt, interpret=(backend == "pallas_interpret"))
@@ -136,15 +201,14 @@ def dequantize_4bit(
 ) -> jnp.ndarray:
     backend = get_backend()
     if backend == "ref":
-        out = _REF_D4[fmt](packed, absmax)
-    else:
-        nblocks = packed.shape[0]
-        packed, _ = _pad_rows(packed, ROWS4)
-        absmax = jnp.pad(absmax, (0, packed.shape[0] - nblocks))
-        out = dequantize_4bit_pallas(
-            packed, absmax, fmt=fmt, interpret=(backend == "pallas_interpret")
-        )
-        out = out[:nblocks]
+        return _ref_d4_full(packed, absmax, fmt, tuple(shape), np.dtype(dtype))
+    nblocks = packed.shape[0]
+    packed, _ = _pad_rows(packed, ROWS4)
+    absmax = jnp.pad(absmax, (0, packed.shape[0] - nblocks))
+    out = dequantize_4bit_pallas(
+        packed, absmax, fmt=fmt, interpret=(backend == "pallas_interpret")
+    )
+    out = out[:nblocks]
     n = int(np.prod(shape))
     return out.reshape(-1)[:n].reshape(shape).astype(dtype)
 
@@ -168,3 +232,44 @@ def dequant_accumulate8(
         qs, absmaxes, weights, interpret=(backend == "pallas_interpret")
     )
     return out[:nblocks]
+
+
+# streaming fold: acc <- acc + w * dequant(q), accumulator donated so the
+# fold never allocates (or leaves behind) an fp32 temporary per item
+_REF_FOLD8 = jax.jit(
+    lambda acc, q, absmax, w: acc
+    + q.astype(jnp.float32) * ((absmax.astype(jnp.float32) / 127.0) * w)[:, None],
+    donate_argnums=(0,),
+)
+
+
+def dequant_accumulate8_into(
+    acc: jnp.ndarray | None, q: jnp.ndarray, absmax: jnp.ndarray, weight: float
+) -> jnp.ndarray:
+    """Fold one blockwise8 contribution into the running fp32 aggregate.
+
+    ``acc`` is **donated**: the returned array reuses (aliases) its
+    buffer, so a streaming aggregator's per-item fold is in-place — the
+    dequantized contribution never materializes as a standalone fp32
+    tensor. Pass ``acc=None`` to open the aggregate (returns
+    ``weight * dequant(q)`` in a fresh buffer). ``q``: (nblocks, 4096)
+    int8; ``absmax``: (nblocks,). The Pallas path may row-pad the
+    accumulator; callers slice their flat view to the original element
+    count (exactly like the other blocked ops).
+    """
+    backend = get_backend()
+    if backend == "ref":
+        if acc is None:
+            acc = jnp.zeros(q.shape, jnp.float32)
+        return _REF_FOLD8(acc, jnp.asarray(q), jnp.asarray(absmax),
+                          jnp.float32(weight))
+    nblocks = q.shape[0]
+    q, _ = _pad_rows(q, ROWS)
+    absmax = jnp.pad(absmax, (0, q.shape[0] - nblocks))
+    if acc is None:
+        acc = jnp.zeros(q.shape, jnp.float32)
+    assert acc.shape == q.shape, (acc.shape, q.shape)
+    return dequant_accumulate8_into_pallas(
+        acc, q, absmax, jnp.float32(weight),
+        interpret=(backend == "pallas_interpret"),
+    )

@@ -22,6 +22,13 @@ from typing import Optional
 class MemoryMeter:
     """Tracks live transmission-buffer bytes and the peak.
 
+    Besides the live/peak pair, two cumulative counters feed the
+    zero-copy wire benchmarks: ``total_allocated`` sums every buffer the
+    wire layer registered (how many times data got a new home), and
+    ``copied`` sums the bytes the layer physically memcpy'd (joins,
+    ``tobytes()`` exports, reassembly fills). A scatter-gather transfer
+    moves the same wire bytes with a fraction of both.
+
     Thread-safe: the async runtime's worker threads stream concurrently,
     so ``alloc``/``free``/``hold`` all serialize on a per-instance lock
     (per-instance so independent meters don't contend).
@@ -32,18 +39,25 @@ class MemoryMeter:
     def __init__(self) -> None:
         self.live = 0
         self.peak = 0
+        self.total_allocated = 0
+        self.copied = 0
         self._lock = threading.Lock()
 
     # -- accounting -------------------------------------------------------
     def alloc(self, nbytes: int) -> None:
         with self._lock:
             self.live += int(nbytes)
+            self.total_allocated += int(nbytes)
             if self.live > self.peak:
                 self.peak = self.live
 
     def free(self, nbytes: int) -> None:
         with self._lock:
             self.live = max(0, self.live - int(nbytes))
+
+    def copy(self, nbytes: int) -> None:
+        with self._lock:
+            self.copied += int(nbytes)
 
     @contextmanager
     def hold(self, nbytes: int) -> Iterator[None]:
@@ -78,6 +92,14 @@ def record_free(nbytes: int) -> None:
     meter = MemoryMeter.current()
     if meter is not None:
         meter.free(nbytes)
+
+
+def record_copy(nbytes: int) -> None:
+    """One physical byte-copy performed by the wire layer (join,
+    ``tobytes`` export, receive-buffer fill)."""
+    meter = MemoryMeter.current()
+    if meter is not None:
+        meter.copy(nbytes)
 
 
 @contextmanager
