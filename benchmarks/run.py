@@ -6,10 +6,13 @@ extras. Prints ``name,us_per_call,derived`` CSV (harness contract).
                                             [--smoke] [--json PATH]
 
 ``--smoke`` runs the fast CI subset; ``--json`` writes a machine-readable
-``BENCH_*.json`` report (rows, per-suite timings, failures) for the
-nightly workflow artifact. A suite that raises is reported on stderr and
-the process exits non-zero, so CI actually fails on benchmark
-regressions instead of passing silently.
+``BENCH_*.json`` report (rows, per-suite timings, failures, and a
+metrics-registry snapshot) for the nightly workflow artifact. A suite
+that raises is reported on stderr and the process exits non-zero, so CI
+actually fails on benchmark regressions instead of passing silently.
+``--trace PATH`` additionally runs one traced 2-round smoke federation
+and writes its dual-clock Chrome trace-event file (open in Perfetto);
+the nightly job uploads it next to the bench JSON.
 """
 from __future__ import annotations
 
@@ -45,6 +48,50 @@ SMOKE_SUITES = ("table2", "table3", "kernels", "chunks", "async", "hetero",
                 "envelope", "agg_memory", "wire")
 
 
+def _metrics_snapshot(timings: dict[str, float]) -> dict:
+    """Harness-level metrics in the registry snapshot schema: per-suite
+    elapsed gauges plus host peak RSS — embedded in the JSON report so
+    the nightly artifact carries one uniform metrics shape."""
+    from repro.obs import MetricsRegistry
+    from repro.utils.mem import rss_peak_kb
+
+    reg = MetricsRegistry()
+    for name, secs in timings.items():
+        reg.gauge("bench.suite_elapsed_s", suite=name).set(secs)
+    rss = rss_peak_kb()
+    if rss is not None:
+        reg.gauge("bench.rss_peak_kb").set(rss)
+    return reg.snapshot()
+
+
+def _write_smoke_trace(path: str) -> dict:
+    """One traced 2-round async smoke federation -> Chrome trace file.
+
+    Exercises every instrumented layer at once: quantize+crc32 uplink
+    stages, streaming server-side aggregation, the heterogeneous network
+    model, and the event scheduler — so the artifact shows both clocks
+    (wall spans per thread, simulated round anatomy per client)."""
+    from repro.fl.job import run_job
+    from repro.obs import validate_chrome_trace
+
+    result = run_job({
+        "arch": "llama3.2-1b",
+        "rounds": 2,
+        "clients": 2,
+        "local_steps": 1,
+        "pipeline": {"task_result_out": ["quantize:nf4", "crc32"]},
+        "server_streaming_agg": True,
+        "runtime": {"policy": "sync",
+                    "network": {"kind": "hetero", "tiers": ["fiber", "lte"]}},
+        "trace": path,
+    })
+    with open(path) as fh:
+        validate_chrome_trace(json.load(fh))
+    summary = dict(result["trace"])
+    summary["telemetry"] = result["telemetry"]
+    return summary
+
+
 def main(argv: list[str] | None = None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None, help="comma-separated suite names")
@@ -52,6 +99,9 @@ def main(argv: list[str] | None = None) -> int:
                     help=f"fast subset: {','.join(SMOKE_SUITES)}")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write a JSON report (default BENCH_smoke.json with --smoke)")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="run a traced 2-round smoke federation and write its "
+                         "Chrome trace-event JSON here (open in Perfetto)")
     args = ap.parse_args(argv)
 
     if args.only:
@@ -84,6 +134,15 @@ def main(argv: list[str] | None = None) -> int:
     elapsed = time.time() - t0
     print(f"# total {elapsed:.1f}s", file=sys.stderr)
 
+    trace_summary = None
+    if args.trace:
+        try:
+            trace_summary = _write_smoke_trace(args.trace)
+            print(f"# wrote {args.trace}", file=sys.stderr)
+        except Exception as exc:  # noqa: BLE001 — same isolation as suites
+            traceback.print_exc()
+            failures["trace"] = f"{type(exc).__name__}: {exc}"
+
     if json_path:
         report = {
             "suites": selected,
@@ -91,7 +150,10 @@ def main(argv: list[str] | None = None) -> int:
             "timings_s": timings,
             "failures": failures,
             "elapsed_s": round(elapsed, 3),
+            "metrics": _metrics_snapshot(timings),
         }
+        if trace_summary is not None:
+            report["trace"] = trace_summary
         with open(json_path, "w") as fh:
             json.dump(report, fh, indent=1)
         print(f"# wrote {json_path}", file=sys.stderr)

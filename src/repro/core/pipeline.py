@@ -76,6 +76,7 @@ from repro.core.quantization import (
     quantize_batch,
 )
 from repro.core.sparse import SparseTensor, topk_sparsify
+from repro.obs import trace as obs_trace
 from repro.utils import mem
 
 try:  # optional dependency: the zstd stage registers only when importable
@@ -1016,14 +1017,28 @@ class WirePipeline:
         """One payload item -> ordered envelope segments (the per-item
         hot path). Payload buffers stay zero-copy views end to end
         unless a byte stage rewrites them (compression)."""
-        vmetas: list[dict[str, Any]] = []
-        for s in self._vstages:
-            ctx.vmeta = {}
-            value = s.encode_item(name, value, ctx)
-            vmetas.append(ctx.vmeta)
-        inner = ser.serialize_item_views(name, value)
-        return self._wrap_views(name, inner, [s.name for s in self._vstages], ctx,
-                                vmetas=vmetas)
+        tr = obs_trace.ACTIVE
+        if tr is None:
+            vmetas: list[dict[str, Any]] = []
+            for s in self._vstages:
+                ctx.vmeta = {}
+                value = s.encode_item(name, value, ctx)
+                vmetas.append(ctx.vmeta)
+            inner = ser.serialize_item_views(name, value)
+            return self._wrap_views(name, inner, [s.name for s in self._vstages],
+                                    ctx, vmetas=vmetas)
+        with tr.span("wire.encode_item", "wire", item=name) as sp:
+            vmetas = []
+            for s in self._vstages:
+                ctx.vmeta = {}
+                with tr.span(f"stage.encode.{s.name}", "stage", item=name):
+                    value = s.encode_item(name, value, ctx)
+                vmetas.append(ctx.vmeta)
+            inner = ser.serialize_item_views(name, value)
+            views = self._wrap_views(name, inner, [s.name for s in self._vstages],
+                                     ctx, vmetas=vmetas)
+            sp.args["bytes_out"] = ser.views_nbytes(views)
+            return views
 
     def encode_wire_item(self, name: str, value: Any, ctx: WireContext) -> bytes:
         """Joined-bytes form of :meth:`encode_wire_item_views` (compat /
@@ -1037,9 +1052,16 @@ class WirePipeline:
             return inner
         body = inner
         brecs: list[list[Any]] = []
+        tr = obs_trace.ACTIVE
         for s in self._bstages:
             bmeta: dict[str, Any] = {}
-            body = s.encode_item_views(name, body, bmeta, ctx)
+            if tr is None:
+                body = s.encode_item_views(name, body, bmeta, ctx)
+            else:
+                with tr.span(f"stage.encode.{s.name}", "stage", item=name,
+                             bytes_in=ser.views_nbytes(body)) as sp:
+                    body = s.encode_item_views(name, body, bmeta, ctx)
+                    sp.args["bytes_out"] = ser.views_nbytes(body)
             brecs.append([s.name, bmeta])
         header = {"kind": "wire", "name": name, "n": ser.views_nbytes(body),
                   "v": vnames, "b": brecs}
@@ -1119,13 +1141,28 @@ class WirePipeline:
         return stage
 
     def decode_wire_item(self, buf: Any, ctx: WireContext) -> tuple[str, Any, int]:
-        """Parse one envelope from the head of ``buf`` (any bytes-like;
+        """Parse one envelope from the head of ``buf`` (any bytes-like —
         receivers hand in a memoryview over their single reassembly
-        buffer); returns ``(name, value, consumed)``. Body bytes are
-        zero-copy slices and decoded arrays are ``frombuffer`` views —
-        only the small JSON headers are materialized. The meta item
-        decodes to its header dict under the reserved name
+        buffer — or a **list/tuple of segments**: an unjoined
+        single-chunk item straight off a scatter-gather hop); returns
+        ``(name, value, consumed)``. Body bytes are zero-copy slices and
+        decoded arrays are ``frombuffer`` views — only the small JSON
+        headers are materialized; a segmented item decodes with zero
+        copies unless a field straddles a segment boundary. The meta
+        item decodes to its header dict under the reserved name
         ``META_ITEM``."""
+        tr = obs_trace.ACTIVE
+        if tr is None:
+            return self._decode_wire_item(buf, ctx)
+        with tr.span("wire.decode_item", "wire") as sp:
+            name, value, consumed = self._decode_wire_item(buf, ctx)
+            sp.args["item"] = name
+            sp.args["bytes_in"] = consumed
+            return name, value, consumed
+
+    def _decode_wire_item(self, buf: Any, ctx: WireContext) -> tuple[str, Any, int]:
+        if isinstance(buf, (list, tuple)):
+            return self._decode_wire_item_segments(buf, ctx)
         mv = buf if isinstance(buf, memoryview) else memoryview(buf)
         (hlen,) = _U32.unpack_from(mv, 0)
         header = json.loads(bytes(mv[4:4 + hlen]))
@@ -1134,21 +1171,66 @@ class WirePipeline:
             n = header["n"]
             name = header["name"]
             body: Any = mv[4 + hlen:4 + hlen + n]
-            for sname, bmeta in reversed(header["b"]):
-                body = self._decode_stage(sname).decode_item_bytes(name, body, bmeta, ctx)
-            name, value = self._decode_inner(body, ctx)
-            if self.decode_values:
-                vmetas = header.get("vm") or [{}] * len(header["v"])
-                for sname, vmeta in zip(reversed(header["v"]), reversed(vmetas)):
-                    ctx.vmeta = vmeta
-                    value = self._decode_stage(sname).decode_item(name, value, ctx)
+            name, value = self._decode_body(name, body, header, ctx)
             return name, value, 4 + hlen + n
         if kind == "meta":
             n = header["n"]
             return META_ITEM, json.loads(bytes(mv[4 + hlen:4 + hlen + n])), 4 + hlen + n
         return ser.deserialize_item(mv)
 
+    def _decode_wire_item_segments(self, segs: Any,
+                                   ctx: WireContext) -> tuple[str, Any, int]:
+        """Segment-aware envelope parse: the header comes off the leading
+        segment and the body stays an unjoined view list when no byte
+        stage needs contiguity, so the inner decode is ``frombuffer``
+        per segment — the zero-copy receive path."""
+        cur = ser.SegmentCursor(segs)
+        (hlen,) = _U32.unpack(bytes(cur.read(4)))
+        header = json.loads(bytes(cur.read(hlen)))
+        kind = header.get("kind")
+        if kind == "wire":
+            n = header["n"]
+            name = header["name"]
+            # byte stages (zlib, crc) consume contiguous bytes; without
+            # them the body flows through as zero-copy segment views
+            body: Any = cur.read(n) if header["b"] else cur.read_views(n)
+            name, value = self._decode_body(name, body, header, ctx)
+            return name, value, cur.consumed
+        if kind == "meta":
+            return META_ITEM, json.loads(bytes(cur.read(header["n"]))), cur.consumed
+        return ser.deserialize_item(segs)
+
+    def _decode_body(self, name: str, body: Any, header: Mapping[str, Any],
+                     ctx: WireContext) -> tuple[str, Any]:
+        """Undo byte stages, parse the inner item, undo value stages."""
+        tr = obs_trace.ACTIVE
+        for sname, bmeta in reversed(header["b"]):
+            if tr is None:
+                body = self._decode_stage(sname).decode_item_bytes(name, body, bmeta, ctx)
+            else:
+                with tr.span(f"stage.decode.{sname}", "stage", item=name):
+                    body = self._decode_stage(sname).decode_item_bytes(name, body, bmeta, ctx)
+        name, value = self._decode_inner(body, ctx)
+        if self.decode_values:
+            vmetas = header.get("vm") or [{}] * len(header["v"])
+            for sname, vmeta in zip(reversed(header["v"]), reversed(vmetas)):
+                ctx.vmeta = vmeta
+                if tr is None:
+                    value = self._decode_stage(sname).decode_item(name, value, ctx)
+                else:
+                    with tr.span(f"stage.decode.{sname}", "stage", item=name):
+                        value = self._decode_stage(sname).decode_item(name, value, ctx)
+        return name, value
+
     def _decode_inner(self, body: Any, ctx: WireContext) -> tuple[str, Any]:
+        if isinstance(body, (list, tuple)):
+            cur = ser.SegmentCursor(body)
+            (hlen,) = _U32.unpack(bytes(cur.read(4)))
+            header = json.loads(bytes(cur.read(hlen)))
+            if header.get("kind") == "meta":
+                return META_ITEM, json.loads(bytes(cur.read(header["n"])))
+            name, value, _ = ser.deserialize_item(body)
+            return name, value
         mv = body if isinstance(body, memoryview) else memoryview(body)
         (hlen,) = _U32.unpack_from(mv, 0)
         header = json.loads(bytes(mv[4:4 + hlen]))
@@ -1200,8 +1282,9 @@ class WireDecoder:
         self._sink = sink
         self._sink_weight: Optional[float] = None
 
-    # plugs into ContainerReceiver(decode_item=...)
-    def decode_item(self, buf: bytes) -> tuple[str, Any, int]:
+    # plugs into ContainerReceiver(decode_item=...); ``buf`` may be an
+    # unjoined segment list (zero-copy single-chunk receive)
+    def decode_item(self, buf: Any) -> tuple[str, Any, int]:
         return self.pipeline.decode_wire_item(buf, self.ctx)
 
     # plugs into ContainerReceiver(consume=...)
@@ -1218,8 +1301,15 @@ class WireDecoder:
                 # no meta item led the stream (bare pre-pipeline wire):
                 # open the contribution with what headers we have
                 self._sink_weight = float(self._sink.begin(dict(self.ctx.headers)))
-            with mem.record_hold(_value_nbytes(value)):
-                self._sink.accept_item(name, value, self._sink_weight)
+            tr = obs_trace.ACTIVE
+            if tr is None:
+                with mem.record_hold(_value_nbytes(value)):
+                    self._sink.accept_item(name, value, self._sink_weight)
+            else:
+                with tr.span("agg.accept_item", "agg", item=name,
+                             nbytes=_value_nbytes(value)):
+                    with mem.record_hold(_value_nbytes(value)):
+                        self._sink.accept_item(name, value, self._sink_weight)
         else:
             self.payload[name] = value
 

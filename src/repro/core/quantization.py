@@ -29,6 +29,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels import ops
+from repro.obs import trace as obs_trace
 
 FORMATS = ("fp32", "fp16", "bf16", "blockwise8", "fp4", "nf4")
 _CAST = {"fp16": jnp.float16, "bf16": jnp.bfloat16}
@@ -176,8 +177,14 @@ def quantize_batch(
             groups.setdefault(fmt, []).append(name)
         else:  # fp32/fp16/bf16 casts: cheap host-side per-tensor work
             out[name] = quantize(np.asarray(value), fmt)
+    tr = obs_trace.ACTIVE
     for fmt, names in groups.items():
-        out.update(_fused_quantize_group(items, names, fmt))
+        if tr is None:
+            out.update(_fused_quantize_group(items, names, fmt))
+        else:
+            with tr.span("kernel.quantize_batch", "kernel", fmt=fmt,
+                         items=len(names)):
+                out.update(_fused_quantize_group(items, names, fmt))
     ops.block_until_ready([(qt.payload, qt.absmax) for qt in out.values()])
     return out
 

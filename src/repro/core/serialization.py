@@ -104,6 +104,71 @@ def iter_view_segments(views: ViewsLike) -> Iterator[memoryview]:
             yield mv
 
 
+class SegmentCursor:
+    """Zero-copy reader over an ordered list of buffer segments.
+
+    Receive-side counterpart of :data:`Views`: a single-chunk item
+    arrives from a scatter-gather hop as the sender's unjoined segments
+    (header bytes, then payload views), and the cursor reads fields
+    straight out of them — a read that falls inside one segment returns
+    a read-only ``memoryview`` slice (zero-copy), and only a read that
+    crosses a segment boundary joins those bytes (recording the copy).
+    Over the loopback driver the segments *are* the encode-side views,
+    so header-from-segment-0 / ``frombuffer``-segment-1 decoding makes
+    small-item receive fully zero-copy.
+    """
+
+    __slots__ = ("_segs", "_i", "_off", "consumed")
+
+    def __init__(self, segments: Sequence[Any]) -> None:
+        self._segs = [mv.toreadonly() for mv in iter_view_segments(list(segments))]
+        self._i = 0
+        self._off = 0
+        self.consumed = 0
+
+    @property
+    def remaining(self) -> int:
+        if self._i >= len(self._segs):
+            return 0
+        return (self._segs[self._i].nbytes - self._off) + sum(
+            s.nbytes for s in self._segs[self._i + 1:]
+        )
+
+    def read_views(self, n: int) -> Views:
+        """The next ``n`` bytes as zero-copy segment slices."""
+        out: Views = []
+        need = n
+        while need > 0:
+            if self._i >= len(self._segs):
+                raise ValueError(
+                    f"segmented item truncated: wanted {n} more bytes, "
+                    f"had {n - need}"
+                )
+            seg = self._segs[self._i]
+            take = min(need, seg.nbytes - self._off)
+            out.append(
+                seg if take == seg.nbytes and self._off == 0
+                else seg[self._off:self._off + take]
+            )
+            self._off += take
+            need -= take
+            if self._off == seg.nbytes:
+                self._i += 1
+                self._off = 0
+        self.consumed += n
+        return out
+
+    def read(self, n: int) -> Union[bytes, memoryview]:
+        """The next ``n`` bytes, contiguous: a zero-copy view when they
+        lie within one segment, a joined copy (recorded) otherwise."""
+        views = self.read_views(n)
+        if len(views) == 1:
+            return views[0]
+        out = b"".join(views)
+        mem.record_copy(len(out))
+        return out
+
+
 def serialize_item_views(name: str, value: Any) -> Views:
     """One state-dict item -> ordered wire segments (header, then the
     payload buffers as zero-copy views). ``b"".join`` of the result is
@@ -197,14 +262,23 @@ def declared_item_nbytes(buf: Union[bytes, bytearray, memoryview]) -> int | None
     return 4 + hlen + body
 
 
-def deserialize_item(buf: Union[bytes, bytearray, memoryview]) -> tuple[str, Any, int]:
+def deserialize_item(buf: Union[bytes, bytearray, memoryview, Sequence]) -> tuple[str, Any, int]:
     """Parse one item from the head of ``buf``; returns (name, value,
     consumed). Arrays are ``frombuffer`` views into ``buf`` — no payload
     copy; the caller keeps the buffer alive as long as the values.
     Decoded arrays are **read-only** (exactly like the pre-views wire,
     which decoded from immutable ``bytes``): consumers that need to
     mutate copy first, and a zero-copy loopback hop can never write
-    back into the sender's buffers."""
+    back into the sender's buffers.
+
+    ``buf`` may also be a **list/tuple of segments** (an unjoined
+    scatter-gather item, as a zero-copy receiver holds it): the header
+    is read from the leading segment and each payload field is a
+    ``frombuffer`` view over its own segment, so a single-chunk item
+    whose segments mirror :func:`serialize_item_views` decodes with
+    zero copies; only fields that straddle a segment boundary join."""
+    if isinstance(buf, (list, tuple)):
+        return _deserialize_item_segments(SegmentCursor(buf))
     mv = (buf if isinstance(buf, memoryview) else memoryview(buf)).toreadonly()
     (hlen,) = _U32.unpack_from(mv, 0)
     header = json.loads(bytes(mv[4:4 + hlen]))
@@ -243,6 +317,49 @@ def deserialize_item(buf: Union[bytes, bytearray, memoryview]) -> tuple[str, Any
     count = int(np.prod(shape)) if shape else 1
     arr = np.frombuffer(mv, dtype, count=count, offset=off).reshape(shape)
     return header["name"], arr, off + count * dtype.itemsize
+
+
+def _deserialize_item_segments(cur: SegmentCursor) -> tuple[str, Any, int]:
+    """Segment-aware :func:`deserialize_item` body: header from the
+    leading segment, each payload field ``frombuffer``'d out of its own
+    segment(s) via the cursor (copying only on boundary straddles)."""
+    (hlen,) = _U32.unpack(bytes(cur.read(4)))
+    header = json.loads(bytes(cur.read(hlen)))
+    if header["kind"] == "sparse":
+        k = int(header["k"])
+        idx_dtype = np.dtype(header["idx_dtype"])
+        val_dtype = np.dtype(header["val_dtype"])
+        indices = np.frombuffer(cur.read(k * idx_dtype.itemsize), idx_dtype, count=k)
+        values = np.frombuffer(cur.read(k * val_dtype.itemsize), val_dtype, count=k)
+        sp = SparseTensor(indices, values, tuple(header["orig_shape"]),
+                          np.dtype(header["orig_dtype"]))
+        return header["name"], sp, cur.consumed
+    if header["kind"] == "qtensor":
+        pshape = tuple(header["payload_shape"])
+        pdtype = np.dtype(header["payload_dtype"])
+        pcount = int(np.prod(pshape)) if pshape else 1
+        payload = np.frombuffer(
+            cur.read(pcount * pdtype.itemsize), pdtype, count=pcount
+        ).reshape(pshape)
+        absmax = None
+        if header["absmax_len"]:
+            ashape = tuple(header["absmax_shape"])
+            absmax = np.frombuffer(
+                cur.read(int(header["absmax_len"])), np.float32,
+                count=int(np.prod(ashape)),
+            ).reshape(ashape)
+        value: Any = QuantizedTensor(
+            payload, absmax, header["fmt"], tuple(header["orig_shape"]),
+            np.dtype(header["orig_dtype"]),
+        )
+        return header["name"], value, cur.consumed
+    shape = tuple(header["shape"])
+    dtype = np.dtype(header["dtype"])
+    count = int(np.prod(shape)) if shape else 1
+    arr = np.frombuffer(
+        cur.read(count * dtype.itemsize), dtype, count=count
+    ).reshape(shape)
+    return header["name"], arr, cur.consumed
 
 
 def serialize_container(sd: Mapping[str, Any]) -> bytes:

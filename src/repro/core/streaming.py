@@ -59,6 +59,7 @@ from collections.abc import Callable, Iterable, Iterator, Mapping
 from typing import Any, Optional
 
 from repro.core import serialization as ser
+from repro.obs import trace as obs_trace
 from repro.utils import mem
 
 DEFAULT_CHUNK_SIZE = 1 << 20  # 1 MiB, the paper's default
@@ -249,9 +250,16 @@ class TCPDriver(Driver):
                     if len(hdr) < _HDR.size:
                         break
                     sid, seq, plen, flags = _HDR.unpack(hdr)
-                    payload = fh.read(plen)
-                    chunk = Chunk(sid, seq, payload, flags)
-                    self._on_chunk(chunk)
+                    tr = obs_trace.ACTIVE
+                    if tr is None:
+                        payload = fh.read(plen)
+                        chunk = Chunk(sid, seq, payload, flags)
+                        self._on_chunk(chunk)
+                    else:
+                        with tr.span("tcp.recv", "net", nbytes=plen, seq=seq):
+                            payload = fh.read(plen)
+                            chunk = Chunk(sid, seq, payload, flags)
+                            self._on_chunk(chunk)
                     if chunk.eof:
                         break
             self._done.set()
@@ -265,6 +273,17 @@ class TCPDriver(Driver):
     COALESCE_BYTES = 1 << 13
 
     def send(self, chunk: Chunk) -> None:
+        tr = obs_trace.ACTIVE
+        if tr is None:
+            self._send(chunk)
+            return
+        gather = chunk.nbytes >= self.COALESCE_BYTES \
+            and hasattr(socket.socket, "sendmsg")
+        with tr.span("tcp.send", "net", nbytes=chunk.nbytes,
+                     segments=len(chunk.segments), gather=gather):
+            self._send(chunk)
+
+    def _send(self, chunk: Chunk) -> None:
         if self._sock is None:
             self._sock = socket.create_connection(self.address)
         hdr = _HDR.pack(chunk.stream_id, chunk.seq, chunk.nbytes, chunk.flags)
@@ -414,10 +433,16 @@ class _ItemAssembler:
             live = self._total
         elif len(self._parts) == 1:
             out, live = self._parts[0], self._parts_n
-        else:
-            out = b"".join(self._parts)
-            mem.record_copy(len(out))
+        elif self._parts:
+            # unjoined scatter-gather parts: the decoders are
+            # segment-aware (header from the leading segment,
+            # ``frombuffer`` per payload segment), so a single-chunk
+            # item keeps the sender's segment structure end to end —
+            # no receive-side join, no copy
+            out = list(self._parts)
             live = self._parts_n
+        else:
+            out, live = b"", 0
         self._parts = []
         self._parts_n = 0
         self._buf = None

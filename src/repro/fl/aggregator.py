@@ -53,6 +53,7 @@ import numpy as np
 from repro.core.messages import Message
 from repro.core.quantization import QuantizedTensor
 from repro.kernels import ops
+from repro.obs import trace as obs_trace
 
 
 class Aggregator:
@@ -107,9 +108,11 @@ class FedAvgAggregator(Aggregator):
 
     def begin(self, meta: Mapping[str, Any]) -> float:
         w = self.weight_of(meta)
-        with self._lock:
-            self._weight += w
-            self.accepted += 1
+        with obs_trace.span("agg.begin", "agg",
+                            client=str(meta.get("client", "")), weight=w):
+            with self._lock:
+                self._weight += w
+                self.accepted += 1
         return w
 
     def accept_item(self, name: str, value: Any, weight: float) -> None:
@@ -141,7 +144,7 @@ class FedAvgAggregator(Aggregator):
             acc += scratch
 
     def finish(self) -> dict[str, np.ndarray]:
-        with self._lock:
+        with obs_trace.span("agg.finish", "agg"), self._lock:
             if self._weight <= 0:
                 raise RuntimeError("no results accepted")
             out = {
@@ -181,9 +184,11 @@ class QuantizedFedAvgAggregator(Aggregator):
 
     def begin(self, meta: Mapping[str, Any]) -> float:
         w = self.weight_of(meta)
-        with self._lock:
-            self._weight += w
-            self.accepted += 1
+        with obs_trace.span("agg.begin", "agg",
+                            client=str(meta.get("client", "")), weight=w):
+            with self._lock:
+                self._weight += w
+                self.accepted += 1
         return w
 
     def accept_item(self, name: str, value: Any, weight: float) -> None:
@@ -200,16 +205,25 @@ class QuantizedFedAvgAggregator(Aggregator):
                         f"{tuple(value.orig_shape)}; aggregate holds {known}"
                     )
                 self._shape[name] = tuple(value.orig_shape)
-                self._acc[name] = ops.dequant_accumulate8_into(
-                    self._acc.get(name), value.payload, value.absmax, weight
-                )
+                tr = obs_trace.ACTIVE
+                if tr is None:
+                    self._acc[name] = ops.dequant_accumulate8_into(
+                        self._acc.get(name), value.payload, value.absmax, weight
+                    )
+                else:
+                    with tr.span("kernel.dequant_accumulate8", "kernel",
+                                 item=name,
+                                 nbytes=int(np.asarray(value.payload).nbytes)):
+                        self._acc[name] = ops.dequant_accumulate8_into(
+                            self._acc.get(name), value.payload, value.absmax, weight
+                        )
         else:
             self._plain.accept_item(name, value, weight)
             with self._lock:
                 self._plain_names.add(name)
 
     def finish(self) -> dict[str, np.ndarray]:
-        with self._lock:
+        with obs_trace.span("agg.finish", "agg"), self._lock:
             out: dict[str, np.ndarray] = {}
             inv = np.float32(1.0) / np.float32(self._weight if self._weight else 1.0)
             for name, acc in self._acc.items():

@@ -14,6 +14,7 @@ from collections.abc import Callable, Mapping, Sequence
 from typing import Any, Optional
 
 from repro.core.messages import Message, MessageKind
+from repro.obs import trace as obs_trace
 
 
 def make_task(rnd: int, global_weights: Mapping[str, Any]) -> Message:
@@ -103,17 +104,22 @@ class ScatterAndGather:
         global_weights = dict(initial_weights)
         for rnd in range(self.num_rounds):
             results: list[Message] = []
-            for client in self.clients:
-                task = make_task(rnd, global_weights)
-                if self.streaming:
-                    # the uplink wire folds each decoded item straight
-                    # into the aggregator; result carries headers only
-                    result = client.submit_task(task, result_sink=self.aggregator)
-                else:
-                    result = client.submit_task(task)
-                    self.aggregator.accept(result)
-                results.append(result)
-            global_weights = self.aggregator.finish()
+            with obs_trace.span("round", "round", round=rnd):
+                for client in self.clients:
+                    task = make_task(rnd, global_weights)
+                    with obs_trace.span("client.round_trip", "round",
+                                        round=rnd, client=client.name):
+                        if self.streaming:
+                            # the uplink wire folds each decoded item straight
+                            # into the aggregator; result carries headers only
+                            result = client.submit_task(
+                                task, result_sink=self.aggregator
+                            )
+                        else:
+                            result = client.submit_task(task)
+                            self.aggregator.accept(result)
+                    results.append(result)
+                global_weights = self.aggregator.finish()
             if self.on_round_end is not None:
                 self.on_round_end(rnd, global_weights, results)
         return global_weights

@@ -104,6 +104,11 @@ DEFAULTS: dict[str, Any] = {
     # None resolves from server_quantized_aggregation
     "aggregator": None,
     "runtime": None,
+    # observability: truthy turns on the span tracer (flight recorder);
+    # a string is also the Chrome-trace output path the run writes
+    # (viewable in Perfetto / chrome://tracing). result["telemetry"]
+    # carries the metrics snapshot either way.
+    "trace": None,
     "seed": 0,
 }
 
@@ -294,11 +299,14 @@ class Job:
             "history": self.history,
             "messages": self.sim.stats.messages,
             "wire_bytes": self.sim.stats.bytes_sent,
+            "telemetry": self.sim.telemetry(),
         }
         if self.sim.scheduler is not None:
             out["sim_time_s"] = self.sim.sim_time_s
-            out["runtime_stats"] = dataclasses.asdict(self.sim.scheduler.stats)
+            out["runtime_stats"] = self.sim.scheduler.stats.as_dict()
             out["policy"] = self.sim.scheduler.policy.name
+        if self.sim.tracer is not None and isinstance(self.spec.get("trace"), str):
+            out["trace"] = self.sim.tracer.write(self.spec["trace"])
         if self.adaptive_filters:
             fmts: dict[str, str] = {}
             for f in self.adaptive_filters:
@@ -376,6 +384,7 @@ def build_job(spec: dict[str, Any]) -> Job:
             driver=spec["driver"],
         ),
         server_streaming_agg=bool(spec.get("server_streaming_agg")),
+        trace=bool(spec.get("trace")),
         **wire_kwargs,
         **runtime_kwargs,
     )
@@ -390,3 +399,33 @@ def run_job(spec: dict[str, Any]) -> dict[str, Any]:
 def run_job_file(path: str) -> dict[str, Any]:
     with open(path) as fh:
         return run_job(json.load(fh))
+
+
+def main(argv: Optional[list[str]] = None) -> int:
+    """``python -m repro.fl.job spec.json [--trace out.json]`` — run a
+    declarative job and print a JSON summary (weights omitted). The
+    ``--trace`` flag turns on the span tracer and writes the run's
+    Chrome trace-event file, viewable at https://ui.perfetto.dev."""
+    import argparse
+
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.fl.job",
+        description="Run a declarative FL job spec.",
+    )
+    ap.add_argument("spec", help="path to a JSON job spec")
+    ap.add_argument("--trace", metavar="OUT_JSON", default=None,
+                    help="record a dual-clock span trace and write Chrome "
+                         "trace-event JSON here (open in Perfetto)")
+    args = ap.parse_args(argv)
+    with open(args.spec) as fh:
+        spec = json.load(fh)
+    if args.trace:
+        spec["trace"] = args.trace
+    result = run_job(spec)
+    result.pop("final_weights", None)
+    print(json.dumps(result, indent=1, default=str))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

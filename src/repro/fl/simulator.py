@@ -52,6 +52,8 @@ from repro.core.messages import Message
 from repro.core.pipeline import StageSpec, WirePipeline, legacy_wire_pipelines
 from repro.fl.controller import ClientProxy, ScatterAndGather
 from repro.fl.executor import Executor
+from repro.obs import MetricsRegistry, Tracer
+from repro.obs import trace as obs_trace
 from repro.utils import mem
 from repro.utils.mem import MemoryMeter
 
@@ -115,6 +117,16 @@ class TrafficStats:
             self.payload_bytes += int(payload_nbytes)
             self.retransmits += int(retransmits)
 
+    def as_dict(self) -> dict[str, int]:
+        """JSON-safe export (the metrics-snapshot schema)."""
+        with self._lock:
+            return {
+                "messages": self.messages,
+                "bytes_sent": self.bytes_sent,
+                "payload_bytes": self.payload_bytes,
+                "retransmits": self.retransmits,
+            }
+
 
 class CountingDriver(sm.Driver):
     """Transparent driver wrapper totalling encoded frame bytes — the
@@ -177,6 +189,31 @@ class _Wire:
         )
 
     def transmit(
+        self,
+        message: Message,
+        pipeline: WirePipeline,
+        lock: Optional[threading.Lock] = None,
+        sink: Optional[Any] = None,
+        count_only: bool = False,
+        record_stats: bool = True,
+    ) -> tuple[Optional[Message], int]:
+        tr = obs_trace.ACTIVE
+        if tr is None:
+            return self._transmit(message, pipeline, lock, sink,
+                                  count_only, record_stats)
+        h = message.headers
+        with tr.span(
+            "wire.transmit", "wire", kind=message.kind.value,
+            client=str(h.get("client", "")),
+            round=h.get("round", h.get("model_version")),
+            count_only=count_only, streaming_fold=sink is not None,
+        ) as sp:
+            out, nbytes = self._transmit(message, pipeline, lock, sink,
+                                         count_only, record_stats)
+            sp.args["wire_bytes"] = nbytes
+            return out, nbytes
+
+    def _transmit(
         self,
         message: Message,
         pipeline: WirePipeline,
@@ -412,6 +449,7 @@ class FLSimulator:
         network: Optional[Any] = None,   # repro.runtime.NetworkModel override
         availability: Optional[Any] = None,  # repro.runtime.AvailabilityTrace
         server_streaming_agg: bool = False,
+        trace: Union[Tracer, bool, None] = None,
     ) -> None:
         """``pipelines`` maps hop direction -> wire stack: ``{"task_data":
         ["quantize:nf4", "zlib"], "task_result": WirePipeline([...])}``
@@ -478,6 +516,13 @@ class FLSimulator:
                 "dp-noise, delta and stateful legacy filters cannot run "
                 "there; use the sequential controller or stateless stages"
             )
+        # observability: tracing is opt-in (trace=True for a default
+        # flight recorder, or pass a configured Tracer); the metrics
+        # registry always exists — snapshots are cheap and pull-based
+        self.tracer: Optional[Tracer] = (
+            trace if isinstance(trace, Tracer) else (Tracer() if trace else None)
+        )
+        self.metrics = MetricsRegistry()
         wire = _Wire(self.config, self.stats)
         filter_lock = threading.Lock() if use_async else None
         self.proxies = [
@@ -508,8 +553,43 @@ class FLSimulator:
 
     def run(self, initial_weights: dict[str, Any]) -> dict[str, Any]:
         driver = self.scheduler if self.scheduler is not None else self.controller
-        with self.meter.activate():
-            return driver.run(initial_weights)
+        tracing: Any = contextlib.nullcontext()
+        if self.tracer is not None:
+            if self.scheduler is not None and self.tracer.sim_clock is None:
+                # wall-clock spans also carry the simulated time they ran at
+                loop = self.scheduler.loop
+                self.tracer.sim_clock = lambda: loop.now
+            tracing = obs_trace.activate(self.tracer)
+        with tracing, self.meter.activate():
+            out = driver.run(initial_weights)
+        self._publish_metrics()
+        return out
+
+    def _publish_metrics(self) -> None:
+        """Fold the island stats into the metrics registry (gauges)."""
+        self.metrics.publish("traffic", self.stats.as_dict())
+        self.metrics.publish("memory", self.meter.as_dict())
+        if self.scheduler is not None:
+            self.metrics.publish("runtime", self.scheduler.stats.as_dict())
+
+    def telemetry(self) -> dict[str, Any]:
+        """JSON-safe observability summary for this run: the wire /
+        memory (/ runtime) stats plus the full metrics snapshot, and a
+        flight-recorder summary when tracing is on."""
+        out: dict[str, Any] = {
+            "traffic": self.stats.as_dict(),
+            "memory": self.meter.as_dict(),
+            "metrics": self.metrics.snapshot(),
+        }
+        if self.scheduler is not None:
+            out["runtime"] = self.scheduler.stats.as_dict()
+        if self.tracer is not None:
+            out["trace"] = {
+                "total_events": self.tracer.total_events,
+                "dropped_events": self.tracer.dropped,
+                "capacity": self.tracer.capacity,
+            }
+        return out
 
     @property
     def sim_time_s(self) -> Optional[float]:

@@ -49,12 +49,14 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import time
 from concurrent.futures import Future, ThreadPoolExecutor
 from random import Random
 from collections.abc import Sequence
 from typing import Any, Optional
 
 from repro.fl.controller import ClientProxy
+from repro.obs import trace as obs_trace
 from repro.runtime.async_agg import AggregationPolicy, Dispatch
 from repro.runtime.events import AvailabilityTrace, Event, EventKind, EventLoop
 from repro.runtime.network import NetworkModel
@@ -85,6 +87,15 @@ class RuntimeStats:
     settled_futures: int = 0  # round trips timestamped (== dispatches at end)
     partial_settles: int = 0  # settles that stopped early, leaving trips in flight
     sim_time_s: float = 0.0
+    events_processed: int = 0  # events popped off the simulated-time queue
+    queue_depth_peak: int = 0  # high-water mark of the event queue
+
+    # every field is deterministic across identical-seed runs (wall-clock
+    # elapsed deliberately lives on the scheduler, not here — run results
+    # embed this dict and tests compare them across runs)
+    def as_dict(self) -> dict[str, Any]:
+        """JSON-safe export (the metrics-snapshot schema)."""
+        return dataclasses.asdict(self)
 
 
 class AsyncFLScheduler:
@@ -125,6 +136,7 @@ class AsyncFLScheduler:
         self.streaming_agg = streaming_agg
         self.loop = EventLoop()
         self.stats = RuntimeStats()
+        self.wall_elapsed_s = 0.0  # host time of the last run() (not in stats)
         self._drop_rng = Random(f"dropout:{self.config.seed}")
         # (dispatch, dispatch_sim_time, future) in launch order
         self._inflight: list[tuple[Dispatch, float, Future]] = []
@@ -234,18 +246,38 @@ class AsyncFLScheduler:
         )
         dropped = self._drop_rng.random() < self.config.dropout_prob
         drop_t = t0 + self.config.drop_after_frac * total
+        tr = obs_trace.ACTIVE
         if dropped and drop_t < departs:
+            if tr is not None:
+                tr.sim_span("trip.dropped", t0, drop_t, track=dispatch.client,
+                            cat="trip", version=dispatch.version,
+                            attempt=dispatch.attempt)
             self.loop.schedule_at(drop_t, EventKind.DROPOUT, dispatch.client,
                                   dispatch=dispatch)
         elif t0 + total > departs:
             # client leaves mid round trip: the trip dies at the
             # departure instant and re-dispatches on the next arrival
+            if tr is not None:
+                tr.sim_span("trip.interrupted", t0, departs, track=dispatch.client,
+                            cat="trip", version=dispatch.version,
+                            attempt=dispatch.attempt)
             if t0 + t_down < departs:
                 self.loop.schedule_at(t0 + t_down, EventKind.ARRIVAL, dispatch.client,
                                       version=dispatch.version)
             self.loop.schedule_at(departs, EventKind.INTERRUPT, dispatch.client,
                                   dispatch=dispatch)
         else:
+            if tr is not None:
+                # the round trip's simulated anatomy, one track per client
+                c = dispatch.client
+                tr.sim_span("downlink", t0, t0 + t_down, track=c, cat="trip",
+                            version=dispatch.version, attempt=dispatch.attempt,
+                            wire_bytes=down)
+                tr.sim_span("compute", t0 + t_down, t0 + t_down + t_compute,
+                            track=c, cat="trip", version=dispatch.version)
+                tr.sim_span("uplink", t0 + t_down + t_compute, t0 + total,
+                            track=c, cat="trip", version=dispatch.version,
+                            wire_bytes=up)
             self.loop.schedule_at(t0 + t_down, EventKind.ARRIVAL, dispatch.client,
                                   version=dispatch.version)
             self.loop.schedule_at(
@@ -303,15 +335,36 @@ class AsyncFLScheduler:
 
     # -- main loop -----------------------------------------------------------
     def run(self, initial_weights: dict[str, Any]) -> dict[str, Any]:
+        t_start = time.perf_counter()
         with ThreadPoolExecutor(max_workers=self.config.max_concurrency) as pool:
             for d in self.policy.begin(dict(initial_weights), list(self.proxies)):
                 self._launch(d, pool)
             while self._inflight or not self.loop.empty:
                 if self._must_settle():
-                    self._settle()
+                    tr = obs_trace.ACTIVE
+                    if tr is None:
+                        self._settle()
+                    else:
+                        with tr.span("sched.settle", "sched",
+                                     inflight=len(self._inflight)):
+                            self._settle()
                 if self.loop.empty:
                     break
-                self._handle(self.loop.pop(), pool)
+                depth = len(self.loop)
+                if depth > self.stats.queue_depth_peak:
+                    self.stats.queue_depth_peak = depth
+                event = self.loop.pop()
+                self.stats.events_processed += 1
+                tr = obs_trace.ACTIVE
+                if tr is not None:
+                    # timeline markers on the simulated clock: one track
+                    # per client plus the queue-depth counter series
+                    tr.sim_instant(event.kind.value, event.time,
+                                   track=event.client or "scheduler",
+                                   cat="event", seq=event.seq)
+                    tr.sim_counter("queue_depth", event.time, depth - 1)
+                self._handle(event, pool)
+        self.wall_elapsed_s = time.perf_counter() - t_start
         self.stats.sim_time_s = self.loop.now
         if not self.policy.complete:
             raise RuntimeError(

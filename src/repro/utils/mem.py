@@ -67,6 +67,16 @@ class MemoryMeter:
         finally:
             self.free(nbytes)
 
+    def as_dict(self) -> dict:
+        """JSON-safe export (the metrics-snapshot schema)."""
+        with self._lock:
+            return {
+                "live": self.live,
+                "peak": self.peak,
+                "total_allocated": self.total_allocated,
+                "copied": self.copied,
+            }
+
     # -- active-meter plumbing --------------------------------------------
     @classmethod
     def current(cls) -> Optional[MemoryMeter]:

@@ -159,13 +159,26 @@ def test_one_item_transfer_copies_each_byte_at_most_once():
     assert meter.live == 0
 
 
-def test_single_chunk_items_copy_at_most_once():
-    """Items smaller than the chunk size are reassembled with exactly
-    one copy (header segment + payload view joined into the decode
-    buffer) — never the old join-then-slice double handling."""
+def test_single_chunk_items_receive_zero_copy():
+    """Items smaller than the chunk size decode straight off the chunk
+    segments: the segment-aware inner decoder reads the envelope header
+    from segment 0 and ``frombuffer``s the payload from segment 1, so a
+    plain single-chunk receive copies **zero** payload bytes — not even
+    the old single header+payload join."""
     sd = {f"l{i}": np.random.default_rng(i).standard_normal((64, 64))
           .astype(np.float32) for i in range(8)}
     meter = _transfer(sd, chunk_size=1 << 20)
+    assert meter.copied == 0
+
+
+def test_single_chunk_byte_staged_items_copy_at_most_once():
+    """Byte stages (zlib/crc) need contiguous input, so a staged stack
+    still joins once — but never the old join-then-slice double
+    handling."""
+    sd = {f"l{i}": np.random.default_rng(i).standard_normal((64, 64))
+          .astype(np.float32) for i in range(8)}
+    meter = _transfer(sd, chunk_size=1 << 20,
+                      stack=["quantize:blockwise8", "crc32"])
     payload = sum(v.nbytes for v in sd.values())
     assert meter.copied <= 1.1 * payload
 
