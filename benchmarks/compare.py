@@ -1,17 +1,26 @@
-"""Nightly benchmark regression gate: diff a fresh ``--smoke --json``
-report against the committed baseline (``BENCH_5.json``).
+"""Nightly benchmark regression gate: diff fresh ``--json`` report(s)
+against the committed baseline (``BENCH_5.json`` / ``BENCH_7.json``).
 
-    PYTHONPATH=src python -m benchmarks.compare BENCH_5.json BENCH_smoke.json \
-        [--max-regression 30] [--prefix wire/]
+    PYTHONPATH=src python -m benchmarks.compare BENCH_5.json \
+        BENCH_w1.json [BENCH_w2.json ...] [--max-regression 30] [--prefix wire/]
 
 Rows are the harness's ``name,us_per_call,derived`` CSV. Per row, the
 first applicable metric gates (one threshold, ``--max-regression``
 percent): the machine-independent ``new_over_legacy`` speedup ratio
 (both paths timed in the same run, so runner hardware cancels out),
-then deterministic ``copied`` byte volume (must not grow), then
-absolute ``items_per_s`` (must not drop), then ``us_per_call`` (must
-not grow) — so cross-machine baselines gate on ratios and copy counts,
-never on another host's absolute wall-clock.
+then deterministic ``peak_bytes`` (metered server/wire peak — same
+payload means the same peak on any machine; growth is a real code
+change), then deterministic ``copied`` byte volume (must not grow),
+then absolute ``items_per_s`` (must not drop), then ``us_per_call``
+(must not grow) — so cross-machine baselines gate on ratios and exact
+byte accounting, never on another host's absolute wall-clock.
+
+**Multiple current reports** merge best-of per row before gating (max
+of throughput ratios, min of times/copies/peaks): CI runners fluctuate
+±30% between runs on the same commit (see CHANGES.md), so the nightly
+runs the timing-sensitive suites best-of-3 — a regression must survive
+every repetition to go red, while a genuine one still fails all three.
+
 ``*/legacy`` rows (the re-enacted pre-refactor comparison path) never
 gate. A gated baseline row missing from the current report is itself a
 failure — a renamed suite must come with a deliberately regenerated
@@ -23,6 +32,11 @@ from __future__ import annotations
 import argparse
 import json
 import sys
+
+# merge direction for best-of-N current reports: metrics where bigger is
+# better take the max across runs, cost metrics take the min
+_BIGGER_IS_BETTER = ("new_over_legacy", "items_per_s")
+_SMALLER_IS_BETTER = ("us_per_call", "copied", "peak_bytes")
 
 
 def _parse_rows(report: dict) -> dict[str, dict]:
@@ -47,11 +61,31 @@ def _parse_rows(report: dict) -> dict[str, dict]:
     return out
 
 
-def compare(baseline: dict, current: dict, max_regression_pct: float,
+def merge_best_of(reports: list[dict]) -> dict[str, dict]:
+    """Best-of merge of several current reports' rows (see module doc)."""
+    merged: dict[str, dict] = {}
+    for report in reports:
+        for name, fields in _parse_rows(report).items():
+            have = merged.setdefault(name, dict(fields))
+            for k, v in fields.items():
+                if k in _BIGGER_IS_BETTER:
+                    have[k] = max(have.get(k, v), v)
+                elif k in _SMALLER_IS_BETTER:
+                    have[k] = min(have.get(k, v), v)
+                else:
+                    have.setdefault(k, v)
+    return merged
+
+
+def compare(baseline: dict, current, max_regression_pct: float,
             prefix: str) -> list[str]:
-    """Returns a list of human-readable failures (empty = gate passes)."""
+    """Returns a list of human-readable failures (empty = gate passes).
+
+    ``current`` may be one fresh report or a list of them; multiple
+    reports are best-of merged per row before gating (runner-drift
+    hardening — see module doc)."""
     base_rows = _parse_rows(baseline)
-    cur_rows = _parse_rows(current)
+    cur_rows = merge_best_of(current if isinstance(current, list) else [current])
     failures: list[str] = []
     threshold = max_regression_pct / 100.0
     for name, base in sorted(base_rows.items()):
@@ -80,6 +114,16 @@ def compare(baseline: dict, current: dict, max_regression_pct: float,
                 failures.append(
                     f"{name}: new_over_legacy {c:.2f} is "
                     f"{100 * (1 - c / b):.1f}% below baseline {b:.2f}"
+                )
+        elif "peak_bytes" in base and "peak_bytes" in cur:
+            # metered peak is deterministic for serialized folds (same
+            # payload => same buffer lifecycle on any machine): growth
+            # means the memory envelope actually regressed
+            b, c = base["peak_bytes"], cur["peak_bytes"]
+            if b > 0 and c > b * (1.0 + threshold):
+                failures.append(
+                    f"{name}: peak_bytes {c:.0f} is "
+                    f"{100 * (c / b - 1):.1f}% above baseline {b:.0f}"
                 )
         elif "copied" in base and "copied" in cur:
             # byte-copy volume is deterministic (same payload => same
@@ -110,7 +154,9 @@ def compare(baseline: dict, current: dict, max_regression_pct: float,
 def main(argv: list[str] | None = None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("baseline", help="committed baseline JSON (BENCH_5.json)")
-    ap.add_argument("current", help="fresh --smoke --json report")
+    ap.add_argument("current", nargs="+",
+                    help="fresh --json report(s); several are best-of merged "
+                         "per row before gating (runner-drift hardening)")
     ap.add_argument("--max-regression", type=float, default=30.0,
                     metavar="PCT", help="allowed throughput drop (default 30%%)")
     ap.add_argument("--prefix", default="wire/",
@@ -120,14 +166,17 @@ def main(argv: list[str] | None = None) -> int:
 
     with open(args.baseline) as fh:
         baseline = json.load(fh)
-    with open(args.current) as fh:
-        current = json.load(fh)
-    failures = compare(baseline, current, args.max_regression, args.prefix)
+    currents = []
+    for path in args.current:
+        with open(path) as fh:
+            currents.append(json.load(fh))
+    failures = compare(baseline, currents, args.max_regression, args.prefix)
     if failures:
         for f in failures:
             print(f"REGRESSION {f}", file=sys.stderr)
         return 1
     print(f"# benchmark gate passed (prefix={args.prefix!r}, "
+          f"{len(currents)} current report(s), "
           f"max regression {args.max_regression:.0f}%)")
     return 0
 

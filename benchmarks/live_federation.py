@@ -1,0 +1,226 @@
+"""Live federation plane: real-TCP round wall-clock, concurrent-uplink
+fold throughput, and server peak memory vs client count (ISSUE 7
+tentpole).
+
+Fold rows drive the real :class:`~repro.launch.federation.
+FederationServer` over localhost sockets with protocol-speaking raw
+clients whose uplink streams are **pre-encoded outside the meter** (the
+MemoryMeter is process-global, so client-side encode copies would
+otherwise pollute the server-side peak). Only the server's gather phase
+runs under the meter: with the default ordered uplink the folds are
+grant-serialized, so ``peak_bytes``/``copied`` are deterministic
+functions of the wire format — machine-independent gate metrics. The
+concurrent-mode row measures scheduler-dependent throughput and is
+deliberately named so the nightly compare gate skips it.
+
+``live/round/subprocess`` runs one true multi-process round
+(``run_live_federation`` spawning real client subprocesses) and reports
+wall seconds ungated — real-deployment latency for the record, not a
+regression signal.
+"""
+from __future__ import annotations
+
+import socket
+import threading
+import time
+from typing import Any
+
+import numpy as np
+
+from repro.core import streaming as sm
+from repro.core.messages import Message, MessageKind
+from repro.launch.federation import (
+    PROTO,
+    FederationServer,
+    aggregator_spec,
+    build_pipelines_from_spec,
+    pipeline_fingerprint,
+)
+from repro.utils.mem import MemoryMeter
+
+MODEL_ITEMS = 32
+ELEMS = 16384  # 32 x 64 KiB fp32 = 2 MiB model
+PIPELINE = {"task_result_out": ["quantize:blockwise8", "crc32"]}
+
+
+def model_dict() -> dict[str, np.ndarray]:
+    rng = np.random.default_rng(0)
+    return {f"layers.{i}.w": rng.standard_normal(ELEMS).astype(np.float32)
+            for i in range(MODEL_ITEMS)}
+
+
+def _spec(clients: int) -> dict[str, Any]:
+    return {"clients": clients, "rounds": 1, "pipeline": dict(PIPELINE),
+            "chunk_mb": 1}
+
+
+def _encode_uplink(spec: dict[str, Any], name: str,
+                   sd: dict[str, np.ndarray]) -> bytes:
+    """One client's complete uplink chunk stream as raw wire bytes."""
+    pipeline = build_pipelines_from_spec(spec)["task_result"]
+    msg = Message(MessageKind.TASK_RESULT, dict(sd),
+                  {"num_samples": 1, "client": name, "round": 0})
+    enc, ctx = pipeline.begin_encode(msg)
+
+    class _Capture:
+        def __init__(self) -> None:
+            self.bufs: list[bytes] = []
+
+        def send(self, chunk: sm.Chunk) -> None:
+            self.bufs.append(chunk.encode())
+
+    cap = _Capture()
+    sm.ContainerStreamer(cap, 1 << 20).send_items(
+        pipeline.iter_encode_views(enc, ctx), pipeline.n_items(enc)
+    )
+    return b"".join(cap.bufs)
+
+
+class _RawClient(threading.Thread):
+    """Protocol-speaking fake client: handshake, drain downlinks, replay
+    a pre-encoded uplink blob on every grant. No allocations are metered
+    client-side — ``sendall`` of prebuilt bytes, no-op chunk drain."""
+
+    def __init__(self, name: str, address: tuple, fingerprint: str,
+                 blob: bytes) -> None:
+        super().__init__(daemon=True, name=f"bench-{name}")
+        self.client = name
+        self.address = address
+        self.fingerprint = fingerprint
+        self.blob = blob
+
+    def run(self) -> None:
+        conn = None
+        try:
+            conn = sm.Connection(socket.create_connection(self.address))
+            conn.settimeout(120.0)
+            conn.send_ctrl({"type": "hello", "client": self.client,
+                            "epoch": 0, "proto": PROTO,
+                            "fingerprint": self.fingerprint})
+            if conn.recv_ctrl().get("type") != "welcome":
+                return
+            while True:
+                ctrl = conn.recv_ctrl()
+                kind = ctrl.get("type")
+                if kind == "task":
+                    conn.recv_stream(lambda c: None)
+                elif kind == "grant":
+                    conn.send_ctrl({"type": "result",
+                                    "round": ctrl["round"],
+                                    "client": self.client})
+                    conn.sock.sendall(self.blob)
+                elif kind == "done":
+                    return
+        except (OSError, ConnectionError, sm.ProtocolError):
+            pass
+        finally:
+            if conn is not None:
+                conn.close()
+
+
+def _run_fold(clients: int, uplink: str):
+    """One metered gather: returns (meter, fold_seconds, items folded)."""
+    spec = _spec(clients)
+    sd = model_dict()
+    server = FederationServer(spec, uplink=uplink, join_timeout_s=60.0,
+                              round_timeout_s=120.0).start()
+    fp = pipeline_fingerprint(build_pipelines_from_spec(spec),
+                              aggregator_spec(spec))
+    threads = [
+        _RawClient(f"site-{i}", server.address, fp,
+                   _encode_uplink(spec, f"site-{i}", sd))
+        for i in range(clients)
+    ]
+    try:
+        for t in threads:
+            t.start()
+        server.wait_for_clients()
+        roster = [f"site-{i}" for i in range(clients)]
+        # tiny downlink (outside the meter): the fold is what's measured
+        server._downlink(roster, 0, {"w": np.zeros(8, np.float32)})
+        meter = MemoryMeter()
+        t0 = time.perf_counter()
+        with meter.activate():
+            server._gather(roster, 0)
+        dt = time.perf_counter() - t0
+        for name in roster:
+            conn = server._conns.get(name)
+            if conn is not None:
+                try:
+                    conn.send_ctrl({"type": "done"})
+                except OSError:
+                    pass
+    finally:
+        server.close()
+        for t in threads:
+            t.join(timeout=10)
+    return meter, dt, clients * (MODEL_ITEMS + 1)  # +1: meta item
+
+
+def _subprocess_round() -> dict[str, Any]:
+    from repro.launch.federation import run_live_federation
+
+    result = run_live_federation({
+        "arch": "llama3.2-1b",
+        "smoke": True,
+        "rounds": 1,
+        "clients": 2,
+        "local_steps": 1,
+        "batch": 2,
+        "seq": 16,
+        "pipeline": dict(PIPELINE),
+        "server_streaming_agg": True,
+    })
+    return result
+
+
+def run() -> list[str]:
+    sd = model_dict()
+    model_bytes = sum(v.nbytes for v in sd.values())
+    max_item = max(v.nbytes for v in sd.values())
+    rows: list[str] = []
+
+    # ordered fold: deterministic peak/copied gate the nightly compare
+    meter, dt, items = _run_fold(8, "ordered")
+    rows.append(
+        f"live/fold/ordered_c8,{dt * 1e6:.0f},peak_bytes={meter.peak};"
+        f"copied={meter.copied};model_bytes={model_bytes};"
+        f"max_item_bytes={max_item};items={items}"
+    )
+
+    # concurrent fold: throughput mode; scheduler-dependent numbers, so
+    # the row carries only ungated conc_* fields (us_per_call=0 disarms
+    # the wall-clock fallback gate)
+    cmeter, cdt, citems = _run_fold(8, "concurrent")
+    rows.append(
+        f"live/fold/concurrent_c8,0.0,conc_items_per_s={citems / cdt:.0f};"
+        f"conc_peak_bytes={cmeter.peak};conc_wall_us={cdt * 1e6:.0f}"
+    )
+
+    # O(item) server peak vs client count: ordered folds keep the peak
+    # ~flat as the fleet grows — the paper's streaming-aggregation claim
+    # measured on real sockets
+    peaks = {}
+    for n in (2, 8, 16):
+        m, _, _ = _run_fold(n, "ordered")
+        peaks[n] = m.peak
+        rows.append(
+            f"live/peak/c{n},0.0,peak_bytes={m.peak};copied={m.copied};"
+            f"model_bytes={model_bytes};max_item_bytes={max_item}"
+        )
+    flat = peaks[16] <= peaks[2] * 1.5
+    rows.append(
+        f"live/peak/scaling,0.0,flat_2_to_16={int(flat)};"
+        f"c16_over_c2={peaks[16] / max(1, peaks[2]):.2f};"
+        f"model_over_peak={model_bytes / max(1, peaks[16]):.1f}"
+    )
+
+    # one true multi-process round: wall-clock for the record (ungated)
+    sub = _subprocess_round()
+    rows.append(
+        f"live/round/subprocess,0.0,wall_s={sub['wall_s']:.2f};"
+        f"round_wall_s={sub['round_log'][0]['wall_s']:.2f};clients=2;"
+        f"bytes_up={sub['bytes_up']};bytes_down={sub['bytes_down']};"
+        f"exit_ok={int(all(c == 0 for c in sub['client_exit_codes']))}"
+    )
+    return rows

@@ -36,6 +36,7 @@ SUITES: dict[str, str] = {
     "envelope": "benchmarks.pipeline_envelope",
     "agg_memory": "benchmarks.agg_memory",
     "wire": "benchmarks.wire_throughput",
+    "live": "benchmarks.live_federation",
 }
 
 # fast subset for the nightly smoke run (skips the convergence sweeps);
@@ -43,9 +44,12 @@ SUITES: dict[str, str] = {
 # under regression watch in BENCH_*.json, "agg_memory" does the same for
 # the streaming aggregation plane's O(item) server peak, and "wire"
 # carries the zero-copy plane's items/s rows that the nightly job diffs
-# against the committed BENCH_5.json baseline (benchmarks/compare.py)
+# against the committed BENCH_5.json baseline (benchmarks/compare.py);
+# "live" drives the real multi-process federation plane (TCP server +
+# protocol-speaking clients) whose deterministic ordered-fold peaks diff
+# against BENCH_7.json
 SMOKE_SUITES = ("table2", "table3", "kernels", "chunks", "async", "hetero",
-                "envelope", "agg_memory", "wire")
+                "envelope", "agg_memory", "wire", "live")
 
 
 def _metrics_snapshot(timings: dict[str, float]) -> dict:

@@ -50,6 +50,7 @@ benchmark measures the three envelopes deterministically.
 from __future__ import annotations
 
 import dataclasses
+import json
 import os
 import socket
 import struct
@@ -269,7 +270,11 @@ class TCPDriver(Driver):
 
     #: below this many payload bytes a chunk is joined into one buffer
     #: before hitting the socket (small-write coalescing: one syscall and
-    #: one TCP segment beat a scatter-gather call over tiny pieces)
+    #: one TCP segment beat a scatter-gather call over tiny pieces).
+    #: Per-socket senders raise this to the socket's actual SO_SNDBUF
+    #: (see :func:`socket_coalesce_bytes`) — writes smaller than the
+    #: kernel send buffer complete in one copy anyway, so gathering only
+    #: pays off past it.
     COALESCE_BYTES = 1 << 13
 
     def send(self, chunk: Chunk) -> None:
@@ -277,32 +282,19 @@ class TCPDriver(Driver):
         if tr is None:
             self._send(chunk)
             return
-        gather = chunk.nbytes >= self.COALESCE_BYTES \
-            and hasattr(socket.socket, "sendmsg")
+        coalesce = self._coalesce or self.COALESCE_BYTES
+        gather = chunk.nbytes >= coalesce and hasattr(socket.socket, "sendmsg")
         with tr.span("tcp.send", "net", nbytes=chunk.nbytes,
                      segments=len(chunk.segments), gather=gather):
             self._send(chunk)
 
+    _coalesce: Optional[int] = None
+
     def _send(self, chunk: Chunk) -> None:
         if self._sock is None:
             self._sock = socket.create_connection(self.address)
-        hdr = _HDR.pack(chunk.stream_id, chunk.seq, chunk.nbytes, chunk.flags)
-        segments = chunk.segments
-        if chunk.nbytes < self.COALESCE_BYTES or not hasattr(self._sock, "sendmsg"):
-            # small-write coalescing — and the portable fallback where
-            # the platform has no scatter-gather socket call (Windows)
-            self._sock.sendall(hdr + chunk.payload_bytes())
-            return
-        # scatter-gather write: the kernel gathers header + payload views
-        # in one syscall; no user-space join of the tensor bytes
-        bufs: list[Any] = [hdr, *segments]
-        while bufs:
-            sent = self._sock.sendmsg(bufs)
-            while bufs and sent >= len(bufs[0]):
-                sent -= len(bufs[0])
-                bufs.pop(0)
-            if sent and bufs:
-                bufs[0] = memoryview(bufs[0])[sent:]
+            self._coalesce = socket_coalesce_bytes(self._sock)
+        send_chunk(self._sock, chunk, self._coalesce)
 
     def close(self) -> None:
         """Idempotent shutdown: drains the receiver thread even when no
@@ -324,6 +316,308 @@ class TCPDriver(Driver):
         if self._thread is not None:
             self._thread.join(timeout=5)
             self._thread = None
+
+
+# ---------------------------------------------------------------------------
+# Real federation transport: shared frame I/O + the concurrent server plane
+# ---------------------------------------------------------------------------
+
+#: never coalesce past this, whatever SO_SNDBUF claims — joining a huge
+#: chunk in user space just to hand the kernel one buffer wastes the
+#: copy the scatter-gather path exists to avoid
+COALESCE_CAP = 1 << 16
+
+
+def socket_coalesce_bytes(sock: socket.socket) -> int:
+    """SO_SNDBUF-aware small-write coalescing threshold for ``sock``.
+
+    A write smaller than the kernel's send buffer is absorbed in one
+    copy regardless, so scatter-gather only wins once a chunk outgrows
+    it; below that, one joined ``sendall`` is one syscall and one TCP
+    segment. Clamped to [``TCPDriver.COALESCE_BYTES``, ``COALESCE_CAP``]
+    so a giant SO_SNDBUF can't reintroduce full-chunk user-space joins.
+    """
+    try:
+        sndbuf = sock.getsockopt(socket.SOL_SOCKET, socket.SO_SNDBUF)
+    except OSError:  # pragma: no cover - exotic socket object
+        return TCPDriver.COALESCE_BYTES
+    return max(TCPDriver.COALESCE_BYTES, min(int(sndbuf), COALESCE_CAP))
+
+
+def send_chunk(sock: socket.socket, chunk: Chunk,
+               coalesce: Optional[int] = None) -> None:
+    """Write one frame to ``sock``: header + payload segments.
+
+    The single chunk-egress path shared by :class:`TCPDriver` and the
+    federation server plane: small chunks are coalesced into one
+    ``sendall`` (threshold from :func:`socket_coalesce_bytes`), large
+    chunks go out as a kernel scatter-gather ``sendmsg`` over the
+    payload views with partial-send resume — no user-space join of the
+    tensor bytes, identical bytes on the wire either way.
+    """
+    if coalesce is None:
+        coalesce = TCPDriver.COALESCE_BYTES
+    hdr = _HDR.pack(chunk.stream_id, chunk.seq, chunk.nbytes, chunk.flags)
+    if chunk.nbytes < coalesce or not hasattr(sock, "sendmsg"):
+        # small-write coalescing — and the portable fallback where the
+        # platform has no scatter-gather socket call (Windows)
+        sock.sendall(hdr + chunk.payload_bytes())
+        return
+    bufs: list[Any] = [hdr, *chunk.segments]
+    while bufs:
+        sent = sock.sendmsg(bufs)
+        while bufs and sent >= len(bufs[0]):
+            sent -= len(bufs[0])
+            bufs.pop(0)
+        if sent and bufs:
+            bufs[0] = memoryview(bufs[0])[sent:]
+
+
+#: control frames are length-prefixed JSON; anything bigger than this is
+#: a corrupted stream, not a plausible control message
+CTRL_MAX_BYTES = 1 << 20
+
+_CTRL = struct.Struct("<I")
+
+
+class ProtocolError(ValueError):
+    """A peer sent bytes that violate the federation wire protocol."""
+
+
+class Connection:
+    """One established federation socket, either end.
+
+    Two frame vocabularies interleave on the stream, demarcated by
+    protocol state (each control frame says what follows):
+
+    * **control frames** — u32 LE length + JSON body (handshake, round
+      control, grants);
+    * **chunk streams** — raw :class:`Chunk` frames, byte-identical to
+      the point-to-point :class:`TCPDriver` wire, ending at a
+      ``FLAG_EOF`` chunk.
+
+    Reads go through one buffered reader; writes serialize on a lock so
+    a control frame can never tear through the middle of a chunk
+    stream when helper threads share the connection. Chunk egress uses
+    the same gather/coalesce path as :class:`TCPDriver`
+    (:func:`send_chunk`), with the coalescing threshold adapted to this
+    socket's ``SO_SNDBUF``.
+    """
+
+    def __init__(self, sock: socket.socket,
+                 peer: Optional[tuple] = None) -> None:
+        self.sock = sock
+        try:
+            self.peer = peer or sock.getpeername()
+        except OSError:  # pragma: no cover - already-dead socket
+            self.peer = peer or ("?", 0)
+        self._rf = sock.makefile("rb")
+        self._coalesce = socket_coalesce_bytes(sock)
+        self._wlock = threading.Lock()
+
+    def settimeout(self, timeout: Optional[float]) -> None:
+        self.sock.settimeout(timeout)
+
+    # -- control frames -----------------------------------------------------
+    def send_ctrl(self, obj: Mapping[str, Any]) -> None:
+        body = json.dumps(obj, sort_keys=True).encode()
+        with self._wlock:
+            self.sock.sendall(_CTRL.pack(len(body)) + body)
+
+    def recv_ctrl(self) -> dict[str, Any]:
+        (n,) = _CTRL.unpack(self._read_exact(_CTRL.size))
+        if n > CTRL_MAX_BYTES:
+            raise ProtocolError(
+                f"control frame declares {n} bytes (max {CTRL_MAX_BYTES}); "
+                "stream is corrupt or the peer speaks a different protocol"
+            )
+        try:
+            return json.loads(self._read_exact(n))
+        except json.JSONDecodeError as exc:
+            raise ProtocolError(f"control frame is not JSON: {exc}") from None
+
+    # -- chunk streams ------------------------------------------------------
+    def send_chunk(self, chunk: Chunk) -> None:
+        with self._wlock:
+            send_chunk(self.sock, chunk, self._coalesce)
+
+    def recv_chunk(self) -> Chunk:
+        hdr = self._read_exact(_HDR.size)
+        sid, seq, plen, flags = _HDR.unpack(hdr)
+        tr = obs_trace.ACTIVE
+        if tr is None:
+            return Chunk(sid, seq, self._read_exact(plen), flags)
+        with tr.span("tcp.recv", "net", nbytes=plen, seq=seq):
+            return Chunk(sid, seq, self._read_exact(plen), flags)
+
+    def recv_stream(self, on_chunk: Callable[[Chunk], None]) -> int:
+        """Receive chunk frames into ``on_chunk`` until a ``FLAG_EOF``
+        chunk closes the stream; returns total wire bytes (headers
+        included). Chunks are routed by their own ``stream_id``, so a
+        multiplexing peer may interleave frames of several logical
+        streams — this call returns when the *first-seen* stream ends
+        (others keep routing through the same callback via
+        :class:`StreamDemux` on the caller's side if needed)."""
+        total = 0
+        sid: Optional[bytes] = None
+        while True:
+            chunk = self.recv_chunk()
+            total += _HDR.size + chunk.nbytes
+            if sid is None:
+                sid = chunk.stream_id
+            on_chunk(chunk)
+            if chunk.eof and chunk.stream_id == sid:
+                return total
+
+    def _read_exact(self, n: int) -> bytes:
+        buf = self._rf.read(n)
+        if buf is None or len(buf) < n:
+            raise ConnectionError(
+                f"peer {self.peer} closed the connection mid-frame "
+                f"(wanted {n} bytes, got {0 if buf is None else len(buf)})"
+            )
+        return buf
+
+    def close(self) -> None:
+        try:
+            self._rf.close()
+        except OSError:  # pragma: no cover - peer already gone
+            pass
+        try:
+            self.sock.close()
+        except OSError:  # pragma: no cover
+            pass
+
+
+class ConnectionDriver(Driver):
+    """Send-side :class:`Driver` over an established :class:`Connection`,
+    so the standard streamers (:class:`ContainerStreamer`, ...) run
+    unchanged over a long-lived multiplexed federation socket instead of
+    a per-transfer point-to-point one. Counts egress frame bytes like
+    the simulator's CountingDriver (headers included)."""
+
+    def __init__(self, conn: Connection) -> None:
+        self.conn = conn
+        self.bytes_sent = 0
+
+    def send(self, chunk: Chunk) -> None:
+        self.bytes_sent += _HDR.size + chunk.nbytes
+        tr = obs_trace.ACTIVE
+        if tr is None:
+            self.conn.send_chunk(chunk)
+            return
+        with tr.span("tcp.send", "net", nbytes=chunk.nbytes,
+                     segments=len(chunk.segments)):
+            self.conn.send_chunk(chunk)
+
+    def close(self) -> None:
+        # the connection outlives one logical stream — never closed here
+        pass
+
+
+class StreamDemux:
+    """Connection multiplexing: routes interleaved chunk frames to
+    per-stream receivers keyed by the frame's own ``stream_id``.
+
+    ``receiver_factory(stream_id)`` builds the receiver for a stream's
+    first chunk; :meth:`route` feeds every chunk to its stream's
+    receiver and returns the finished receiver when an EOF frame closes
+    a stream (``None`` otherwise). One connection can therefore carry
+    several logical transfers at once — the federation server's uplink
+    plane and any future bidirectional traffic share this primitive.
+    """
+
+    def __init__(self, receiver_factory: Callable[[bytes], Any]) -> None:
+        self._factory = receiver_factory
+        self._live: dict[bytes, Any] = {}
+
+    @property
+    def open_streams(self) -> int:
+        return len(self._live)
+
+    def route(self, chunk: Chunk) -> Optional[Any]:
+        recv = self._live.get(chunk.stream_id)
+        if recv is None:
+            recv = self._factory(chunk.stream_id)
+            self._live[chunk.stream_id] = recv
+        recv.on_chunk(chunk)
+        if chunk.eof:
+            return self._live.pop(chunk.stream_id)
+        return None
+
+
+class TCPServer:
+    """Concurrent accept loop: the real-deployment listener grown from
+    the point-to-point :class:`TCPDriver`.
+
+    Every accepted socket becomes a :class:`Connection` handed to
+    ``on_connection`` on its own daemon thread, so hundreds of clients
+    can be in handshake or mid-stream simultaneously while the owner
+    (the federation server) drives round logic. Frames, gather writes
+    and coalescing are byte-identical to the driver wire — a client
+    cannot tell which end it speaks to.
+    """
+
+    def __init__(self, host: str = "127.0.0.1", port: int = 0,
+                 backlog: int = 128) -> None:
+        self._srv = socket.create_server((host, port), backlog=backlog)
+        self.address = self._srv.getsockname()
+        self._accept_thread: Optional[threading.Thread] = None
+        self._conn_threads: list[threading.Thread] = []
+        self._lock = threading.Lock()
+        self._closing = False
+        self.accepted = 0
+
+    def serve(self, on_connection: Callable[[Connection], None]) -> None:
+        """Start accepting; each connection runs ``on_connection(conn)``
+        on a dedicated thread. Idempotent close via :meth:`close`."""
+        if self._accept_thread is not None:
+            raise RuntimeError("serve() already called")
+
+        def accept_loop() -> None:
+            while True:
+                try:
+                    sock, peer = self._srv.accept()
+                except OSError:
+                    return  # listener closed — clean shutdown
+                if self._closing:
+                    sock.close()  # the close() wake-up self-connection
+                    return
+                conn = Connection(sock, peer)
+                with self._lock:
+                    self.accepted += 1
+                    t = threading.Thread(
+                        target=on_connection, args=(conn,), daemon=True,
+                        name=f"fed-conn-{peer[1]}",
+                    )
+                    self._conn_threads.append(t)
+                t.start()
+
+        self._accept_thread = threading.Thread(
+            target=accept_loop, daemon=True, name="fed-accept"
+        )
+        self._accept_thread.start()
+
+    def close(self) -> None:
+        # closing the listener fd does NOT wake a thread blocked in
+        # accept() on Linux — it would sit out the whole join timeout.
+        # shutdown() does; where a platform refuses shutdown on a
+        # listener, a throwaway self-connection unblocks it instead.
+        self._closing = True
+        try:
+            self._srv.shutdown(socket.SHUT_RDWR)
+        except OSError:
+            try:
+                socket.create_connection(self.address, timeout=1).close()
+            except OSError:
+                pass
+        self._srv.close()
+        if self._accept_thread is not None:
+            self._accept_thread.join(timeout=5)
+        with self._lock:
+            threads = list(self._conn_threads)
+        for t in threads:
+            t.join(timeout=5)
 
 
 # ---------------------------------------------------------------------------

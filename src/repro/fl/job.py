@@ -113,6 +113,15 @@ DEFAULTS: dict[str, Any] = {
 }
 
 
+def normalize_spec(spec: dict[str, Any]) -> dict[str, Any]:
+    """The canonical spec every builder consumes: ``DEFAULTS`` applied.
+
+    Shared by :func:`build_job` and the live federation plane
+    (:mod:`repro.launch.federation`) so both resolve identical settings
+    from the same declarative input."""
+    return {**DEFAULTS, **spec}
+
+
 def _adaptive_filter(q: dict[str, Any], network: Optional[Any]) -> AdaptiveQuantizeFilter:
     f = AdaptiveQuantizeFilter(
         bandwidth_bps=float(q.get("bandwidth_mbps", 80.0)) * 1e6,  # wifi-class fallback
@@ -176,6 +185,125 @@ def _build_pipelines(spec: dict[str, Any], network: Optional[Any]):
                     stage.bind_network(network)
                 adaptive.append(stage)
     return pipelines, adaptive
+
+
+def build_pipelines_from_spec(
+    spec: dict[str, Any], network: Optional[Any] = None
+) -> dict[str, Any]:
+    """Wire pipelines for a job spec — the single construction path both
+    federation planes share, so the server and every client subprocess of
+    a live deployment provably run the same stage stacks the simulator
+    would (the pipeline fingerprint in the live handshake hashes these).
+
+    Specs without a ``"pipeline"`` block get identity pipelines (same
+    wire container, no transforms). The legacy ``"quantization"`` /
+    ``"dp_sigma"`` filter keys have no pipeline form and are rejected.
+    """
+    spec = normalize_spec(spec)
+    if spec.get("pipeline"):
+        pipelines, _ = _build_pipelines(spec, network)
+        return pipelines
+    if spec.get("quantization") or spec.get("dp_sigma"):
+        raise ValueError(
+            'the legacy "quantization"/"dp_sigma" keys build whole-message '
+            'Filter chains with no streaming-pipeline form; declare them as '
+            '"pipeline" stages (e.g. "quantize:nf4", '
+            '{"stage": "dp-noise", "sigma": 0.01})'
+        )
+    keep_wire = bool(spec.get("server_quantized_aggregation"))
+    return {
+        "task_data": build_pipeline([]),
+        "task_result": build_pipeline([], decode_values=not keep_wire),
+    }
+
+
+def aggregator_spec(spec: dict[str, Any]) -> Any:
+    """Resolve the spec's aggregator selection (registry key or config
+    dict) exactly as :func:`build_job` does — shared with the live plane
+    so a real server folds with the same aggregator the simulator would."""
+    spec = normalize_spec(spec)
+    agg = spec.get("aggregator")
+    if agg is None:
+        agg = (
+            "quantized-fedavg"
+            if spec.get("server_quantized_aggregation")
+            and (spec.get("quantization") or spec.get("pipeline"))
+            else "fedavg"
+        )
+    return agg
+
+
+def _client_datasets(spec: dict[str, Any], cfg: Any) -> list[Any]:
+    """Deterministic per-client datasets: seed-keyed partition, so every
+    process that evaluates this (simulator or client subprocess) derives
+    the identical per-client data streams."""
+    if spec["partition"] == "dirichlet":
+        return dirichlet_partition(
+            cfg.vocab_size, spec["seq"], spec["clients"],
+            alpha=spec["alpha"], seed=spec["seed"],
+        )
+    return iid_partition(
+        cfg.vocab_size, spec["seq"], spec["clients"], seed=spec["seed"]
+    )
+
+
+def _jit_local_step(model: Any, lr: float):
+    @jax.jit
+    def local_step(params, opt, batch):
+        (loss, _), grads = jax.value_and_grad(model.loss, has_aux=True)(params, batch)
+        params, opt, _ = adamw_update(params, grads, opt, jnp.float32(lr))
+        return params, opt, loss
+
+    return local_step
+
+
+def _train_executor(
+    name: str, data: Any, spec: dict[str, Any], local_step: Any,
+    history: Optional[list[float]] = None,
+) -> TrainExecutor:
+    def train_fn(flat_params, rnd):
+        p = unflatten_state_dict(
+            {k: jnp.asarray(np.asarray(v)) for k, v in flat_params.items()}
+        )
+        opt = adamw_init(p)
+        loss = None
+        for _ in range(spec["local_steps"]):
+            batch = {k: jnp.asarray(v) for k, v in data.sample(spec["batch"]).items()}
+            p, opt, loss = local_step(p, opt, batch)
+        if history is not None:
+            history.append(float(loss))
+        return flatten_state_dict(p), spec["batch"] * spec["local_steps"], {"loss": float(loss)}
+
+    return TrainExecutor(name, train_fn)
+
+
+def build_client_executor(
+    spec: dict[str, Any], index: int, history: Optional[list[float]] = None
+) -> TrainExecutor:
+    """The executor for client ``index`` exactly as the simulator builds
+    it — same model init path, same jitted local step, same seed-keyed
+    data partition slice. The live federation plane's client subprocess
+    entrypoint: bitwise sim-vs-real weight equality rests on this being
+    one construction path, not two that happen to agree."""
+    spec = normalize_spec(spec)
+    cfg = get_smoke_config(spec["arch"]) if spec["smoke"] else get_config(spec["arch"])
+    model = create_model(cfg)
+    datasets = _client_datasets(spec, cfg)
+    if not 0 <= index < len(datasets):
+        raise ValueError(f"client index {index} out of range for {len(datasets)} clients")
+    return _train_executor(
+        f"site-{index}", datasets[index], spec, _jit_local_step(model, spec["lr"]), history
+    )
+
+
+def initial_weights(spec: dict[str, Any]) -> dict[str, Any]:
+    """Round-0 global weights for a spec (flat state dict) — the shared
+    starting point the live server downlinks, identical to what
+    :func:`build_job` hands the simulator."""
+    spec = normalize_spec(spec)
+    cfg = get_smoke_config(spec["arch"]) if spec["smoke"] else get_config(spec["arch"])
+    model = create_model(cfg)
+    return flatten_state_dict(model.init(jax.random.PRNGKey(spec["seed"])))
 
 
 def _build_filters(spec: dict[str, Any], network: Optional[Any] = None):
@@ -321,50 +449,18 @@ def build_job(spec: dict[str, Any]) -> Job:
     ``run_job`` is exactly ``build_job(spec).run()`` — tests use this to
     check the declarative surface against direct FLSimulator construction.
     """
-    spec = {**DEFAULTS, **spec}
+    spec = normalize_spec(spec)
     cfg = get_smoke_config(spec["arch"]) if spec["smoke"] else get_config(spec["arch"])
     model = create_model(cfg)
-
-    if spec["partition"] == "dirichlet":
-        datasets = dirichlet_partition(
-            cfg.vocab_size, spec["seq"], spec["clients"], alpha=spec["alpha"], seed=spec["seed"]
-        )
-    else:
-        datasets = iid_partition(cfg.vocab_size, spec["seq"], spec["clients"], seed=spec["seed"])
-
-    @jax.jit
-    def local_step(params, opt, batch):
-        (loss, _), grads = jax.value_and_grad(model.loss, has_aux=True)(params, batch)
-        params, opt, _ = adamw_update(params, grads, opt, jnp.float32(spec["lr"]))
-        return params, opt, loss
-
+    datasets = _client_datasets(spec, cfg)
+    local_step = _jit_local_step(model, spec["lr"])
     history: list[float] = []
 
     def make_client(name, data):
-        def train_fn(flat_params, rnd):
-            p = unflatten_state_dict(
-                {k: jnp.asarray(np.asarray(v)) for k, v in flat_params.items()}
-            )
-            opt = adamw_init(p)
-            loss = None
-            for _ in range(spec["local_steps"]):
-                batch = {k: jnp.asarray(v) for k, v in data.sample(spec["batch"]).items()}
-                p, opt, loss = local_step(p, opt, batch)
-            history.append(float(loss))
-            return flatten_state_dict(p), spec["batch"] * spec["local_steps"], {"loss": float(loss)}
-
-        return TrainExecutor(name, train_fn)
+        return _train_executor(name, data, spec, local_step, history)
 
     client_names = [f"site-{i}" for i in range(len(datasets))]
-    agg_spec = spec.get("aggregator")
-    if agg_spec is None:
-        agg_spec = (
-            "quantized-fedavg"
-            if spec.get("server_quantized_aggregation")
-            and (spec.get("quantization") or spec.get("pipeline"))
-            else "fedavg"
-        )
-    agg = build_aggregator(agg_spec)
+    agg = build_aggregator(aggregator_spec(spec))
     runtime_kwargs = _build_runtime(spec, agg, client_names)
     if spec.get("pipeline"):
         pipelines, adaptive = _build_pipelines(spec, runtime_kwargs.get("network"))

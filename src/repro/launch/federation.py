@@ -1,0 +1,800 @@
+"""Real multi-process federation over TCP — the live deployment plane.
+
+The simulator proves the paper's quantization + streaming claims on a
+simulated clock; this module proves them on a real one. One server
+process opens a :class:`~repro.core.streaming.TCPServer` accept loop,
+``N`` client subprocesses (``python -m repro.launch.federation
+--client-index i --connect host:port``) connect, and real wall-clock
+rounds run over the exact wire format, stage pipelines, and streaming
+aggregators the simulator uses — driven by the *same* declarative job
+spec ``run_job`` takes.
+
+Equivalence guarantee
+    With the default ``ordered`` uplink, the server grants uplinks in
+    roster order and folds each client's decoded items into one live
+    aggregator (``WireDecoder(sink=...)`` — O(item) server memory, never
+    K models), executing **identical arithmetic in identical order** to
+    the sequential simulator. Deterministic data partitioning + seeds
+    make the client subprocesses compute the same local updates, so the
+    final weights are **bitwise-equal** to ``run_job`` on the same spec
+    (``--verify-sim`` asserts this; the ``live-smoke`` CI job runs it on
+    every push). ``--uplink concurrent`` folds all uplinks at once from
+    per-connection threads — maximum throughput, order-free arithmetic,
+    so equality weakens to numerical closeness.
+
+Protocol (PROTO 1)
+    JSON control frames and raw chunk streams interleave on one socket
+    (:class:`~repro.core.streaming.Connection`). A client opens with
+    ``hello`` (name, round epoch, pipeline fingerprint); the server
+    answers ``welcome`` or ``reject`` — a mismatched stage stack or a
+    stale epoch fails fast at the handshake instead of corrupting a
+    fold. Rounds then alternate ``task`` + downlink stream and ``grant``
+    / ``result`` + uplink stream, ending with ``done``.
+
+Crash/rejoin semantics
+    A client dying mid-uplink must not register phantom weight: its
+    ``begin`` already counted sample weight and its partial items are in
+    the running sums, so the server discards the poisoned fold, rebuilds
+    the aggregator, and re-grants the surviving roster in order
+    (clients cache the round's result and re-encode on each grant;
+    stateless pipelines make the re-encode deterministic). A crashed
+    client may reconnect with the server's *current* round epoch and
+    participates from the next downlink.
+"""
+from __future__ import annotations
+
+import argparse
+import contextlib
+import hashlib
+import json
+import os
+import socket
+import subprocess
+import sys
+import tempfile
+import threading
+import time
+from struct import error as struct_error
+from typing import Any, Mapping, Optional
+
+import numpy as np
+
+from repro.core import streaming as sm
+from repro.core.messages import Message, MessageKind
+from repro.core.pipeline import WirePipeline, registered_stages
+from repro.fl.aggregator import build_aggregator
+from repro.fl.controller import make_task
+from repro.fl.job import (
+    aggregator_spec,
+    build_client_executor,
+    build_pipelines_from_spec,
+    initial_weights,
+    normalize_spec,
+)
+from repro.obs import trace as obs_trace
+
+PROTO = 1
+
+#: uplink scheduling modes: "ordered" serializes grants in roster order
+#: (one live fold, bitwise sim-equivalent); "concurrent" folds every
+#: uplink at once from per-connection threads (throughput mode)
+UPLINK_MODES = ("ordered", "concurrent")
+
+
+def pipeline_fingerprint(pipelines: Mapping[str, WirePipeline],
+                         agg_spec: Any) -> str:
+    """Capability fingerprint exchanged at the handshake.
+
+    Hashes everything that must agree for a fold to be meaningful: the
+    protocol revision, each hop's stage stack and decode mode, the
+    stage registry (a client with extra/missing registered stages could
+    decode a task differently), and the aggregator selection. Two
+    processes with equal fingerprints provably run the same wire stack.
+    """
+    desc = {
+        "proto": PROTO,
+        "stages": {d: [s.name for s in pl.stages]
+                   for d, pl in sorted(pipelines.items())},
+        "decode_values": {d: bool(pl.decode_values)
+                          for d, pl in sorted(pipelines.items())},
+        "registry": list(registered_stages()),
+        "aggregator": agg_spec,
+    }
+    return hashlib.sha256(
+        json.dumps(desc, sort_keys=True).encode()
+    ).hexdigest()[:16]
+
+
+def live_spec(spec: Mapping[str, Any], clients: Optional[int] = None,
+              rounds: Optional[int] = None) -> dict[str, Any]:
+    """Normalize + validate a job spec for live deployment.
+
+    The live plane runs real processes on a real clock, so the pieces of
+    the spec surface that only make sense inside the simulator are
+    rejected up front: the ``runtime`` scenario block (simulated
+    networks/availability), the legacy whole-message filter keys, and
+    stateful pipelines (crash recovery re-encodes a cached result, which
+    must be deterministic — error feedback / DP noise streams are not).
+    """
+    out = normalize_spec(dict(spec))
+    if clients is not None:
+        out["clients"] = int(clients)
+    if rounds is not None:
+        out["rounds"] = int(rounds)
+    if out.get("runtime"):
+        raise ValueError(
+            'the "runtime" block configures the *simulated* scenario engine '
+            "(virtual networks, availability, async policies); the live plane "
+            "runs real clients on a real clock — remove it from live specs"
+        )
+    if out.get("quantization") or out.get("dp_sigma"):
+        raise ValueError(
+            'live deployment requires the streaming "pipeline" form; the '
+            'legacy "quantization"/"dp_sigma" filter keys are not supported'
+        )
+    if int(out["clients"]) < 1:
+        raise ValueError(f'need at least one client, got {out["clients"]}')
+    pipelines = build_pipelines_from_spec(out)
+    for direction, pl in pipelines.items():
+        if pl.stateful:
+            stateful = [s.name for s in pl.stages if s.stateful]
+            raise ValueError(
+                f"stateful stage(s) {stateful} in {direction!r}: live crash "
+                "recovery re-encodes cached results, which requires "
+                "deterministic (stateless) pipelines"
+            )
+    return out
+
+
+def weights_bitwise_equal(a: Mapping[str, Any], b: Mapping[str, Any]) -> bool:
+    """True iff two flat state dicts are bitwise-identical."""
+    if set(a) != set(b):
+        return False
+    for k in a:
+        x, y = np.asarray(a[k]), np.asarray(b[k])
+        if x.shape != y.shape or x.dtype != y.dtype:
+            return False
+        if x.tobytes() != y.tobytes():
+            return False
+    return True
+
+
+class _ClientLost(Exception):
+    """One client's connection failed mid-round (carries the name)."""
+
+    def __init__(self, name: str, why: str) -> None:
+        super().__init__(f"{name}: {why}")
+        self.client = name
+        self.why = why
+
+
+class FederationServer:
+    """The live server: accept loop, handshakes, real wall-clock rounds.
+
+    Owns a :class:`~repro.core.streaming.TCPServer`; every accepted
+    connection handshakes on its own thread, then round logic drives all
+    traffic — per-client downlink sender threads, and either ordered
+    grant-serialized uplinks (default, sim-bitwise) or concurrent
+    per-connection fold threads. Server memory stays O(item): each uplink
+    decodes straight into the shared streaming aggregator via
+    ``WireDecoder(sink=...)`` — no client payload dict ever materializes.
+    """
+
+    def __init__(self, spec: Mapping[str, Any], host: str = "127.0.0.1",
+                 port: int = 0, uplink: str = "ordered",
+                 join_timeout_s: float = 60.0,
+                 round_timeout_s: float = 600.0) -> None:
+        if uplink not in UPLINK_MODES:
+            raise ValueError(f"uplink mode {uplink!r}; valid: {UPLINK_MODES}")
+        self.spec = live_spec(spec)
+        self.n_clients = int(self.spec["clients"])
+        self.rounds = int(self.spec["rounds"])
+        self.chunk_size = int(self.spec["chunk_mb"] * (1 << 20))
+        self.pipelines = build_pipelines_from_spec(self.spec)
+        self.agg_spec = aggregator_spec(self.spec)
+        self.fingerprint = pipeline_fingerprint(self.pipelines, self.agg_spec)
+        self.uplink = uplink
+        self.join_timeout_s = join_timeout_s
+        self.round_timeout_s = round_timeout_s
+        self._server = sm.TCPServer(host, port)
+        self.address = self._server.address
+        self._lock = threading.Lock()
+        self._join_cv = threading.Condition(self._lock)
+        self._conns: dict[str, sm.Connection] = {}
+        self._lost: set[str] = set()
+        self._round = 0
+        self._roster = tuple(f"site-{i}" for i in range(self.n_clients))
+        self.round_log: list[dict[str, Any]] = []
+        self.bytes_down = 0
+        self.bytes_up = 0
+        self.restarts = 0
+        self.rejects: list[dict[str, str]] = []
+
+    # -- lifecycle ----------------------------------------------------------
+    def start(self) -> "FederationServer":
+        self._server.serve(self._on_connection)
+        return self
+
+    def close(self) -> None:
+        with self._lock:
+            conns = list(self._conns.values())
+            self._conns.clear()
+        for c in conns:
+            c.close()
+        self._server.close()
+
+    @property
+    def current_round(self) -> int:
+        with self._lock:
+            return self._round
+
+    # -- handshake ----------------------------------------------------------
+    def _reject(self, conn: sm.Connection, reason: str) -> None:
+        with self._lock:
+            self.rejects.append({"peer": str(conn.peer), "reason": reason})
+        with contextlib.suppress(OSError):
+            conn.send_ctrl({"type": "reject", "reason": reason})
+        conn.close()
+
+    def _on_connection(self, conn: sm.Connection) -> None:
+        conn.settimeout(self.round_timeout_s)
+        tr = obs_trace.ACTIVE
+        span = (tr.span("fed.handshake", "fed", peer=str(conn.peer))
+                if tr else contextlib.nullcontext())
+        with span:
+            try:
+                hello = conn.recv_ctrl()
+            except (OSError, sm.ProtocolError, ConnectionError):
+                conn.close()
+                return
+            if hello.get("type") != "hello":
+                return self._reject(
+                    conn, f'expected "hello", got {hello.get("type")!r}')
+            if hello.get("proto") != PROTO:
+                return self._reject(
+                    conn, f"protocol revision {hello.get('proto')} != {PROTO}")
+            name = str(hello.get("client", ""))
+            if name not in self._roster:
+                return self._reject(
+                    conn, f"unknown client {name!r}; roster is "
+                          f"site-0..site-{self.n_clients - 1}")
+            if hello.get("fingerprint") != self.fingerprint:
+                return self._reject(
+                    conn,
+                    f"pipeline fingerprint mismatch: server runs "
+                    f"{self.fingerprint}, client {hello.get('fingerprint')} — "
+                    "stage stacks or aggregator differ; refusing to fold",
+                )
+            with self._lock:
+                epoch = int(hello.get("epoch", 0))
+                if epoch != self._round:
+                    reason = (f"stale round epoch {epoch}: server is at round "
+                              f"{self._round}; reconnect with the current epoch")
+                    self.rejects.append({"peer": str(conn.peer),
+                                         "reason": reason})
+                    with contextlib.suppress(OSError):
+                        conn.send_ctrl({"type": "reject", "reason": reason})
+                    conn.close()
+                    return
+                if name in self._conns:
+                    reason = f"duplicate client {name!r}: already connected"
+                    self.rejects.append({"peer": str(conn.peer),
+                                         "reason": reason})
+                    with contextlib.suppress(OSError):
+                        conn.send_ctrl({"type": "reject", "reason": reason})
+                    conn.close()
+                    return
+                self._conns[name] = conn
+                self._lost.discard(name)
+                self._join_cv.notify_all()
+            conn.send_ctrl({"type": "welcome", "round": self._round,
+                            "rounds": self.rounds, "clients": self.n_clients,
+                            "uplink": self.uplink})
+
+    def wait_for_clients(self, n: Optional[int] = None) -> None:
+        """Block until ``n`` (default: the full roster) clients joined."""
+        want = self.n_clients if n is None else n
+        deadline = time.monotonic() + self.join_timeout_s
+        with self._join_cv:
+            while len(self._conns) < want:
+                left = deadline - time.monotonic()
+                if left <= 0 or not self._join_cv.wait(timeout=left):
+                    missing = [c for c in self._roster if c not in self._conns]
+                    raise TimeoutError(
+                        f"{len(self._conns)}/{want} clients joined within "
+                        f"{self.join_timeout_s}s; missing {missing}"
+                    )
+
+    # -- client failure -----------------------------------------------------
+    def _drop(self, name: str, why: str) -> None:
+        with self._lock:
+            conn = self._conns.pop(name, None)
+            self._lost.add(name)
+        if conn is not None:
+            conn.close()
+
+    # -- downlink -----------------------------------------------------------
+    def _downlink_one(self, name: str, rnd: int,
+                      weights: Mapping[str, Any]) -> None:
+        conn = self._conns.get(name)
+        if conn is None:
+            raise _ClientLost(name, "not connected at downlink")
+        task = make_task(rnd, weights)
+        # destination in the headers, same as the simulator's proxy, so
+        # egress stages can be link/client-aware
+        task.headers.setdefault("client", name)
+        pipeline = self.pipelines["task_data"]
+        try:
+            conn.send_ctrl({"type": "task", "round": rnd})
+            driver = sm.ConnectionDriver(conn)
+            msg, ctx = pipeline.begin_encode(task)
+            sm.ContainerStreamer(driver, self.chunk_size).send_items(
+                pipeline.iter_encode_views(msg, ctx), pipeline.n_items(msg)
+            )
+        except (OSError, ConnectionError) as exc:
+            raise _ClientLost(name, f"downlink failed: {exc}") from exc
+        with self._lock:
+            self.bytes_down += driver.bytes_sent
+
+    def _downlink(self, roster: list[str], rnd: int,
+                  weights: Mapping[str, Any]) -> list[str]:
+        """Broadcast the round's task to ``roster`` from parallel sender
+        threads; returns the clients that actually received it."""
+        tr = obs_trace.ACTIVE
+        failed: dict[str, str] = {}
+
+        def send(name: str) -> None:
+            span = (tr.span("fed.downlink", "fed", client=name, round=rnd)
+                    if tr else contextlib.nullcontext())
+            try:
+                with span:
+                    self._downlink_one(name, rnd, weights)
+            except _ClientLost as exc:
+                failed[name] = exc.why
+
+        threads = [threading.Thread(target=send, args=(n,), daemon=True,
+                                    name=f"fed-downlink-{n}") for n in roster]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        for name, why in failed.items():
+            self._drop(name, why)
+        return [n for n in roster if n not in failed]
+
+    # -- uplink -------------------------------------------------------------
+    def _uplink_one(self, name: str, rnd: int, agg: Any) -> dict[str, Any]:
+        """Grant ``name``'s uplink and fold its stream into ``agg``.
+
+        Raises :class:`_ClientLost` on any transport/decode failure — the
+        caller must then treat the whole fold as poisoned (a partial
+        contribution is already in the running sums) and restart it.
+        """
+        conn = self._conns.get(name)
+        if conn is None:
+            raise _ClientLost(name, "not connected at uplink")
+        tr = obs_trace.ACTIVE
+        span = (tr.span("fed.uplink", "fed", client=name, round=rnd)
+                if tr else contextlib.nullcontext())
+        with span as sp:
+            try:
+                conn.send_ctrl({"type": "grant", "round": rnd})
+                ctrl = conn.recv_ctrl()
+                if ctrl.get("type") != "result" or ctrl.get("round") != rnd:
+                    raise _ClientLost(
+                        name, f"expected result/round={rnd}, got {ctrl}")
+                decoder = self.pipelines["task_result"].decoder(sink=agg)
+                recv = sm.ContainerReceiver(consume=decoder.on_item,
+                                            decode_item=decoder.decode_item)
+                nbytes = conn.recv_stream(recv.on_chunk)
+                result = decoder.finish(MessageKind.TASK_RESULT)
+            except _ClientLost:
+                raise
+            except (OSError, ConnectionError, sm.ProtocolError,
+                    ValueError, KeyError, struct_error) as exc:
+                raise _ClientLost(name, f"uplink failed: {exc}") from exc
+            if sp is not None:
+                sp.args["nbytes"] = nbytes
+        with self._lock:
+            self.bytes_up += nbytes
+        return dict(result.headers)
+
+    def _gather(self, roster: list[str],
+                rnd: int) -> tuple[dict[str, Any], list[str]]:
+        """One round's aggregation with crash recovery; returns the new
+        global weights and the clients whose contribution is in them.
+
+        Folds every roster client's uplink into a fresh aggregator. If a
+        client dies mid-uplink its partial items (and its ``begin``
+        sample weight) have poisoned the running sums, so the fold is
+        discarded wholesale and restarted over the surviving roster —
+        clients re-encode their cached result on the repeat grant, and
+        the dead client contributes exactly zero weight.
+        """
+        survivors = list(roster)
+        while True:
+            if not survivors:
+                raise RuntimeError(
+                    f"round {rnd}: every client was lost; nothing to aggregate"
+                )
+            agg = build_aggregator(self.agg_spec)
+            lost: dict[str, str] = {}
+            if self.uplink == "ordered":
+                for name in survivors:
+                    try:
+                        self._uplink_one(name, rnd, agg)
+                    except _ClientLost as exc:
+                        lost[name] = exc.why
+                        break  # the fold is poisoned — no point continuing
+            else:
+                def fold(name: str) -> None:
+                    try:
+                        self._uplink_one(name, rnd, agg)
+                    except _ClientLost as exc:
+                        lost[name] = exc.why
+
+                threads = [threading.Thread(target=fold, args=(n,),
+                                            daemon=True,
+                                            name=f"fed-uplink-{n}")
+                           for n in survivors]
+                for t in threads:
+                    t.start()
+                for t in threads:
+                    t.join()
+            if not lost:
+                return agg.finish(), survivors
+            for name, why in lost.items():
+                self._drop(name, why)
+            survivors = [n for n in survivors if n not in lost]
+            with self._lock:
+                self.restarts += 1
+
+    # -- the round loop -----------------------------------------------------
+    def run(self, init_weights: Mapping[str, Any]) -> dict[str, Any]:
+        """Run all rounds; returns the final global weights."""
+        tracer = None
+        trace_spec = self.spec.get("trace")
+        if trace_spec:
+            tracer = obs_trace.Tracer()
+        ctx = (obs_trace.activate(tracer) if tracer is not None
+               else contextlib.nullcontext())
+        with ctx:
+            self.wait_for_clients()
+            weights = dict(init_weights)
+            for rnd in range(self.rounds):
+                with self._lock:
+                    self._round = rnd
+                    roster = [n for n in self._roster if n in self._conns]
+                if not roster:
+                    raise RuntimeError(f"round {rnd}: no clients connected")
+                tr = obs_trace.ACTIVE
+                span = (tr.span("fed.round", "round", round=rnd,
+                                clients=len(roster))
+                        if tr else contextlib.nullcontext())
+                t0 = time.monotonic()
+                with span:
+                    active = self._downlink(roster, rnd, weights)
+                    weights, contributed = self._gather(active, rnd)
+                self.round_log.append({
+                    "round": rnd,
+                    "clients": contributed,
+                    "wall_s": round(time.monotonic() - t0, 6),
+                })
+                with self._lock:
+                    self._round = rnd + 1
+            with self._lock:
+                conns = list(self._conns.values())
+            for conn in conns:
+                with contextlib.suppress(OSError):
+                    conn.send_ctrl({"type": "done"})
+        if tracer is not None and isinstance(trace_spec, str):
+            tracer.write(trace_spec)
+        return weights
+
+
+class FederationClient:
+    """One live client: connect, handshake, then react to server control.
+
+    ``run()`` loops on control frames: ``task`` (receive + decode the
+    downlink stream, execute the local computation, cache the result),
+    ``grant`` (re-encode the cached round result and stream it up —
+    idempotent, so a server-side fold restart can simply grant again),
+    ``done`` (exit). A ``reject`` at the handshake raises with the
+    server's reason.
+    """
+
+    def __init__(self, name: str, executor: Any,
+                 pipelines: Mapping[str, WirePipeline],
+                 address: tuple[str, int], fingerprint: str,
+                 epoch: int = 0, chunk_size: int = 1 << 20,
+                 timeout_s: Optional[float] = None) -> None:
+        self.name = name
+        self.executor = executor
+        self.pipelines = dict(pipelines)
+        self.address = tuple(address)
+        self.fingerprint = fingerprint
+        self.epoch = epoch
+        self.chunk_size = chunk_size
+        self.timeout_s = timeout_s
+        self.rounds_done = 0
+
+    @classmethod
+    def for_spec(cls, spec: Mapping[str, Any], index: int,
+                 address: tuple[str, int], epoch: int = 0,
+                 timeout_s: Optional[float] = None) -> "FederationClient":
+        """Build the client exactly as the spec describes it — same
+        executor/pipeline construction path as the simulator, which is
+        what makes live weights bitwise-comparable to ``run_job``."""
+        spec = live_spec(spec)
+        pipelines = build_pipelines_from_spec(spec)
+        return cls(
+            name=f"site-{index}",
+            executor=build_client_executor(spec, index),
+            pipelines=pipelines,
+            address=address,
+            fingerprint=pipeline_fingerprint(pipelines, aggregator_spec(spec)),
+            epoch=epoch,
+            chunk_size=int(spec["chunk_mb"] * (1 << 20)),
+            timeout_s=timeout_s,
+        )
+
+    def run(self) -> int:
+        """Participate until the server says ``done``; returns the number
+        of rounds this client's results were (last) granted for."""
+        sock = socket.create_connection(self.address)
+        conn = sm.Connection(sock)
+        conn.settimeout(self.timeout_s)
+        try:
+            conn.send_ctrl({"type": "hello", "client": self.name,
+                            "epoch": self.epoch, "proto": PROTO,
+                            "fingerprint": self.fingerprint})
+            resp = conn.recv_ctrl()
+            if resp.get("type") != "welcome":
+                raise RuntimeError(
+                    f"{self.name}: server rejected the handshake: "
+                    f"{resp.get('reason', resp)}"
+                )
+            cached: dict[int, Message] = {}
+            while True:
+                ctrl = conn.recv_ctrl()
+                kind = ctrl.get("type")
+                if kind == "task":
+                    rnd = int(ctrl["round"])
+                    task = self._recv_task(conn)
+                    result = self.executor.execute(task)
+                    # one round's cache only: grants never reach back
+                    # further than the current round's fold restarts
+                    cached.clear()
+                    cached[rnd] = result
+                elif kind == "grant":
+                    rnd = int(ctrl["round"])
+                    if rnd not in cached:
+                        raise RuntimeError(
+                            f"{self.name}: granted round {rnd} but no cached "
+                            f"result (have {sorted(cached)})"
+                        )
+                    self._send_result(conn, rnd, cached[rnd])
+                    self.rounds_done = rnd + 1
+                elif kind == "done":
+                    return self.rounds_done
+                else:
+                    raise RuntimeError(
+                        f"{self.name}: unexpected control frame {ctrl}")
+        finally:
+            conn.close()
+
+    def _recv_task(self, conn: sm.Connection) -> Message:
+        decoder = self.pipelines["task_data"].decoder()
+        recv = sm.ContainerReceiver(consume=decoder.on_item,
+                                    decode_item=decoder.decode_item)
+        conn.recv_stream(recv.on_chunk)
+        return decoder.finish(MessageKind.TASK_DATA)
+
+    def _send_result(self, conn: sm.Connection, rnd: int,
+                     result: Message) -> None:
+        # fresh copy per grant: begin_encode may rewrite headers/payload,
+        # and a fold restart will ask for this result again
+        msg = Message(result.kind, dict(result.payload), dict(result.headers))
+        pipeline = self.pipelines["task_result"]
+        msg, ctx = pipeline.begin_encode(msg)
+        conn.send_ctrl({"type": "result", "round": rnd, "client": self.name})
+        sm.ContainerStreamer(sm.ConnectionDriver(conn),
+                             self.chunk_size).send_items(
+            pipeline.iter_encode_views(msg, ctx), pipeline.n_items(msg)
+        )
+
+
+# ---------------------------------------------------------------------------
+# Orchestration: spawn subprocess clients + run the server
+# ---------------------------------------------------------------------------
+
+def _client_cmd(spec_path: str, index: int, address: tuple[str, int]) -> list[str]:
+    return [
+        sys.executable, "-m", "repro.launch.federation",
+        "--spec", spec_path,
+        "--client-index", str(index),
+        "--connect", f"{address[0]}:{address[1]}",
+    ]
+
+
+def _client_env() -> dict[str, str]:
+    env = dict(os.environ)
+    src = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.dirname(os.path.abspath(__file__)))))
+    pp = env.get("PYTHONPATH", "")
+    if src not in pp.split(os.pathsep):
+        env["PYTHONPATH"] = f"{src}{os.pathsep}{pp}" if pp else src
+    return env
+
+
+def run_live_federation(
+    spec: Mapping[str, Any],
+    clients: Optional[int] = None,
+    rounds: Optional[int] = None,
+    host: str = "127.0.0.1",
+    port: int = 0,
+    uplink: str = "ordered",
+    join_timeout_s: float = 120.0,
+    round_timeout_s: float = 600.0,
+    spawn: bool = True,
+) -> dict[str, Any]:
+    """Run one real federation: server in this process, clients as
+    subprocesses (``spawn=True``) or left to the caller (``spawn=False``
+    — e.g. clients on other machines pointing at ``result["address"]``...
+    which in-process tests also use, running :class:`FederationClient`
+    on threads).
+
+    Returns final weights, the per-round log (participants + wall
+    seconds), wire byte totals, and the clients' exit codes.
+    """
+    spec = live_spec(spec, clients=clients, rounds=rounds)
+    server = FederationServer(
+        spec, host=host, port=port, uplink=uplink,
+        join_timeout_s=join_timeout_s, round_timeout_s=round_timeout_s,
+    ).start()
+    procs: list[subprocess.Popen] = []
+    spec_path: Optional[str] = None
+    t0 = time.monotonic()
+    try:
+        if spawn:
+            # subprocesses must see the *fully resolved* spec (clients /
+            # rounds overrides included): the partition is keyed by the
+            # client count, so a drifting spec would train on wrong data
+            fd, spec_path = tempfile.mkstemp(suffix=".json",
+                                             prefix="live_spec_")
+            with os.fdopen(fd, "w") as fh:
+                json.dump({k: v for k, v in spec.items() if k != "trace"}, fh)
+            for i in range(server.n_clients):
+                procs.append(subprocess.Popen(
+                    _client_cmd(spec_path, i, server.address),
+                    env=_client_env(),
+                ))
+        final = server.run(initial_weights(spec))
+        wall_s = time.monotonic() - t0
+        exit_codes = []
+        for p in procs:
+            try:
+                exit_codes.append(p.wait(timeout=60))
+            except subprocess.TimeoutExpired:
+                p.kill()
+                exit_codes.append(p.wait())
+        return {
+            "final_weights": final,
+            "address": server.address,
+            "round_log": server.round_log,
+            "bytes_down": server.bytes_down,
+            "bytes_up": server.bytes_up,
+            "restarts": server.restarts,
+            "rejects": server.rejects,
+            "wall_s": round(wall_s, 6),
+            "client_exit_codes": exit_codes,
+        }
+    finally:
+        for p in procs:
+            if p.poll() is None:
+                p.kill()
+        server.close()
+        if spec_path is not None:
+            with contextlib.suppress(OSError):
+                os.unlink(spec_path)
+
+
+# ---------------------------------------------------------------------------
+# CLI: `python -m repro.launch.federation`
+# ---------------------------------------------------------------------------
+
+def _parse_address(s: str) -> tuple[str, int]:
+    host, _, port = s.rpartition(":")
+    return host or "127.0.0.1", int(port)
+
+
+def main(argv: Optional[list[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.launch.federation",
+        description="Run a real multi-process federation from a job spec "
+                    "(server mode), or one client of it (--client-index).",
+    )
+    ap.add_argument("--spec", required=True, help="path to a JSON job spec")
+    ap.add_argument("--clients", type=int, default=None,
+                    help="override the spec's client count (server mode)")
+    ap.add_argument("--rounds", type=int, default=None,
+                    help="override the spec's round count (server mode)")
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=0,
+                    help="listen port (0 = ephemeral)")
+    ap.add_argument("--uplink", choices=UPLINK_MODES, default="ordered")
+    ap.add_argument("--join-timeout", type=float, default=120.0)
+    ap.add_argument("--round-timeout", type=float, default=600.0)
+    ap.add_argument("--no-spawn", action="store_true",
+                    help="server only; clients connect from elsewhere")
+    ap.add_argument("--trace", metavar="OUT_JSON", default=None,
+                    help="write the server's Chrome trace-event file "
+                         "(open in Perfetto)")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="write the run summary as JSON")
+    ap.add_argument("--verify-sim", action="store_true",
+                    help="also run the sequential simulator on the same spec "
+                         "and fail unless final weights are bitwise-equal")
+    ap.add_argument("--client-index", type=int, default=None,
+                    help="client mode: which roster slot this process is")
+    ap.add_argument("--connect", metavar="HOST:PORT", default=None,
+                    help="client mode: the server address")
+    ap.add_argument("--epoch", type=int, default=0,
+                    help="client mode: round epoch to present (rejoin)")
+    args = ap.parse_args(argv)
+
+    with open(args.spec) as fh:
+        spec = json.load(fh)
+
+    if args.client_index is not None:
+        if not args.connect:
+            ap.error("--client-index requires --connect HOST:PORT")
+        client = FederationClient.for_spec(
+            spec, args.client_index, _parse_address(args.connect),
+            epoch=args.epoch, timeout_s=args.round_timeout,
+        )
+        client.run()
+        return 0
+
+    if args.trace:
+        spec["trace"] = args.trace
+    result = run_live_federation(
+        spec, clients=args.clients, rounds=args.rounds,
+        host=args.host, port=args.port, uplink=args.uplink,
+        join_timeout_s=args.join_timeout, round_timeout_s=args.round_timeout,
+        spawn=not args.no_spawn,
+    )
+    final = result.pop("final_weights")
+    result["weights_sha256"] = hashlib.sha256(
+        b"".join(np.asarray(final[k]).tobytes() for k in sorted(final))
+    ).hexdigest()
+
+    if args.verify_sim:
+        from repro.fl.job import run_job
+
+        sim_spec = {k: v for k, v in live_spec(
+            spec, clients=args.clients, rounds=args.rounds).items()
+            if k != "trace"}
+        sim = run_job(sim_spec)
+        equal = weights_bitwise_equal(final, sim["final_weights"])
+        result["sim_bitwise_equal"] = equal
+        if not equal:
+            out = json.dumps(result, indent=1, default=str)
+            if args.json:
+                with open(args.json, "w") as fh:
+                    fh.write(out + "\n")
+            print(out)
+            print("FAIL: live weights differ from the sequential simulator",
+                  file=sys.stderr)
+            return 1
+
+    out = json.dumps(result, indent=1, default=str)
+    if args.json:
+        with open(args.json, "w") as fh:
+            fh.write(out + "\n")
+    print(out)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
