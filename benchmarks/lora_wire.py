@@ -1,0 +1,141 @@
+"""Parameter-efficient uplink: wire bytes + encode throughput vs LoRA
+rank, against the fp32 and nf4 baselines (ISSUE 8 tentpole).
+
+A ≥1M-param synthetic model (4 x 512x512 fp32 matrices) is encoded
+through ``lora:r`` stacks and the baselines; rows report the uplink
+payload bytes each variant actually frames and the encode rate. The
+``run()`` asserts the headline acceptance claim — ``lora:8`` ships
+>=20x fewer payload bytes than dense fp32 — so a violation fails the
+nightly suite, not just a diff.
+
+The metered rows (``peak_bytes``/``copied``) are deterministic
+byte-accounting via MemoryMeter — a full streamed transfer per variant,
+plus the streaming low-rank fold (4 clients into one
+LoRAFedAvgAggregator) whose server peak stays factor-sized while the
+dense model is 4 MB. Wall-clock on the SVD-bound rows is reported as a
+derived key only (``us=0.0``): CPU SVD timing is too noisy to gate.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import pipeline as pl
+from repro.core import streaming as sm
+from repro.core.messages import Message, MessageKind
+from repro.fl.aggregator import LoRAFedAvgAggregator
+from repro.utils.mem import MemoryMeter
+
+DIM = 512
+TENSORS = 4
+CLIENTS = 4
+
+VARIANTS = {
+    "fp32": [],
+    "nf4": ["quantize:nf4"],
+    "lora4": ["lora:4"],
+    "lora8": ["lora:8"],
+    "lora16": ["lora:16"],
+}
+
+
+def model_dict():
+    rng = np.random.default_rng(0)
+    return {f"layers.{i}.w": rng.standard_normal((DIM, DIM)).astype(np.float32)
+            for i in range(TENSORS)}
+
+
+def _encode_bytes(stack, sd):
+    """One full encode: (payload_bytes, items, elapsed_s). Payload bytes
+    exclude the meta item so the ratio is about tensors, not headers."""
+    p = pl.build_pipeline(list(stack))
+    msg, ctx = p.begin_encode(
+        Message(MessageKind.TASK_RESULT, dict(sd), {"num_samples": 1}))
+    t0 = time.perf_counter()
+    blobs = [(n, len(b)) for n, b in p.iter_encode(msg, ctx)]
+    dt = time.perf_counter() - t0
+    payload = sum(nb for n, nb in blobs[1:])
+    return payload, len(blobs) - 1, dt
+
+
+def _metered_transfer(stack, sd):
+    """Container-streamed transfer over loopback; returns the meter."""
+    p = pl.build_pipeline(list(stack), decode_values=False)
+    meter = MemoryMeter()
+    with meter.activate():
+        msg = Message(MessageKind.TASK_RESULT, dict(sd), {"num_samples": 1})
+        enc, ctx = p.begin_encode(msg)
+        dec = p.decoder()
+        recv = sm.ContainerReceiver(consume=lambda n, v: None,
+                                    decode_item=dec.decode_item)
+        driver = sm.LoopbackDriver()
+        driver.connect(recv.on_chunk)
+        sm.ContainerStreamer(driver, 1 << 16).send_items(
+            p.iter_encode_views(enc, ctx), p.n_items(enc))
+        dec.finish(msg.kind, p.unsent_headers(enc))
+    return meter
+
+
+def _fold_peak(sd):
+    """CLIENTS lora:8 uplinks streamed into one aggregator; the server
+    peak (transmission holds + factor state) via MemoryMeter."""
+    agg = LoRAFedAvgAggregator()
+    meter = MemoryMeter()
+    with meter.activate():
+        for i in range(CLIENTS):
+            p = pl.build_pipeline(["lora:8"], decode_values=False)
+            msg = Message(MessageKind.TASK_RESULT, dict(sd),
+                          {"num_samples": 1, "client": f"site-{i}"})
+            enc, ctx = p.begin_encode(msg)
+            dec = p.decoder(sink=agg)
+            recv = sm.ContainerReceiver(consume=dec.on_item,
+                                        decode_item=dec.decode_item)
+            driver = sm.LoopbackDriver()
+            driver.connect(recv.on_chunk)
+            sm.ContainerStreamer(driver, 1 << 16).send_items(
+                p.iter_encode_views(enc, ctx), p.n_items(enc))
+            dec.finish(msg.kind, p.unsent_headers(enc))
+    agg.finish()
+    return meter.peak
+
+
+def run() -> list[str]:
+    sd = model_dict()
+    model_bytes = sum(v.nbytes for v in sd.values())
+    n_params = sum(v.size for v in sd.values())
+    rows = []
+    payload_bytes = {}
+    for name, stack in VARIANTS.items():
+        payload, items, dt = _encode_bytes(stack, sd)
+        payload_bytes[name] = payload
+        rows.append(
+            f"lora/bytes/{name},0.0,wire_payload_bytes={payload};"
+            f"fp32_over={model_bytes / payload:.1f}x;"
+            f"enc_items_per_s={items / dt:.0f};enc_ms={dt * 1e3:.1f};"
+            f"n_params={n_params}"
+        )
+    reduction = model_bytes / payload_bytes["lora8"]
+    ok = reduction >= 20.0
+    rows.append(
+        f"lora/reduction,0.0,fp32_over_lora8={reduction:.1f}x;"
+        f"nf4_over_lora8={payload_bytes['nf4'] / payload_bytes['lora8']:.1f}x;"
+        f"target=20x;ok={ok}"
+    )
+    if not ok:
+        raise AssertionError(
+            f"lora:8 uplink reduction {reduction:.1f}x < 20x acceptance floor"
+        )
+    for name in ("nf4", "lora8"):
+        meter = _metered_transfer(VARIANTS[name], sd)
+        rows.append(
+            f"lora/transfer/{name},0.0,peak_bytes={meter.peak};"
+            f"copied={meter.copied};model_bytes={model_bytes}"
+        )
+    fold_peak = _fold_peak(sd)
+    rows.append(
+        f"lora/fold/c{CLIENTS},0.0,peak_bytes={fold_peak};"
+        f"model_bytes={model_bytes};clients={CLIENTS};"
+        f"peak_over_model={fold_peak / model_bytes:.3f}"
+    )
+    return rows

@@ -36,6 +36,7 @@ SUITES: dict[str, str] = {
     "envelope": "benchmarks.pipeline_envelope",
     "agg_memory": "benchmarks.agg_memory",
     "wire": "benchmarks.wire_throughput",
+    "lora": "benchmarks.lora_wire",
     "live": "benchmarks.live_federation",
 }
 
@@ -47,9 +48,10 @@ SUITES: dict[str, str] = {
 # against the committed BENCH_5.json baseline (benchmarks/compare.py);
 # "live" drives the real multi-process federation plane (TCP server +
 # protocol-speaking clients) whose deterministic ordered-fold peaks diff
-# against BENCH_7.json
+# against BENCH_7.json, and "lora" pins the parameter-efficient uplink
+# (bytes-vs-rank + streaming low-rank fold peak) against BENCH_8.json
 SMOKE_SUITES = ("table2", "table3", "kernels", "chunks", "async", "hetero",
-                "envelope", "agg_memory", "wire", "live")
+                "envelope", "agg_memory", "wire", "lora", "live")
 
 
 def _metrics_snapshot(timings: dict[str, float]) -> dict:

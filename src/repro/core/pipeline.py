@@ -77,6 +77,7 @@ from repro.core.quantization import (
 )
 from repro.core.sparse import SparseTensor, topk_sparsify
 from repro.obs import trace as obs_trace
+from repro.peft.lowrank import LowRankDelta
 from repro.utils import mem
 
 try:  # optional dependency: the zstd stage registers only when importable
@@ -245,7 +246,9 @@ def _lookup(name: str) -> type[Stage]:
 # ---------------------------------------------------------------------------
 
 def _is_quantizable(value: Any, min_params: int) -> bool:
-    if isinstance(value, QuantizedTensor):
+    # already-wire-form containers pass through quantize untouched (their
+    # factor/index payloads still compress under the byte stages)
+    if isinstance(value, (QuantizedTensor, SparseTensor, LowRankDelta)):
         return False
     arr = np.asarray(value)
     return bool(
@@ -669,7 +672,7 @@ class Crc32Stage(Stage):
 
 
 def _is_plain_float(value: Any) -> bool:
-    if isinstance(value, (QuantizedTensor, SparseTensor)):
+    if isinstance(value, (QuantizedTensor, SparseTensor, LowRankDelta)):
         return False
     return bool(np.issubdtype(np.asarray(value).dtype, np.floating))
 
@@ -1355,3 +1358,13 @@ def _json_safe(headers: Mapping[str, Any]) -> tuple[dict[str, Any], dict[str, An
 def build_pipeline(specs: Optional[list[StageSpec]], *, decode_values: bool = True) -> WirePipeline:
     """Declarative constructor: ``["quantize:nf4", "zlib", "crc32"]``."""
     return WirePipeline(list(specs or []), decode_values=decode_values)
+
+
+# The lora stage lives in repro.peft (it carries model-plane semantics)
+# but must register whenever the pipeline registry exists: both ends of a
+# live federation fingerprint the *full* registry at the handshake, so a
+# stage present on one side only would fail every connection. Imported at
+# the bottom — the stage subclasses Stage and calls register_stage, both
+# defined above; importing it at the top would close the cycle
+# pipeline -> serialization -> peft.lowrank / peft.stage -> pipeline.
+from repro.peft import stage as _peft_stage  # noqa: E402,F401

@@ -189,6 +189,69 @@ def quantize_batch(
     return out
 
 
+def _fused_dequantize_group(
+    items: Mapping[str, Any], names: list[str], fmt: str
+) -> dict[str, np.ndarray]:
+    """Inverse of :func:`_fused_quantize_group`: payload/absmax rows of
+    every same-format tensor are laid back to back and the blocked
+    kernel runs once over the whole group. Block boundaries never span
+    tensors, so the per-tensor slices are element-wise identical to
+    dequantizing each tensor alone."""
+    block = _BLOCK_OF[fmt]
+    spans: list[tuple[str, QuantizedTensor, int, int]] = []  # name, qt, start, nblocks
+    total = 0
+    for name in names:
+        qt = items[name]
+        nb = int(qt.absmax.shape[0])
+        spans.append((name, qt, total, nb))
+        total += nb
+    q_cat = np.concatenate([np.asarray(qt.payload) for _n, qt, _s, _nb in spans])
+    am_cat = np.concatenate([np.asarray(qt.absmax) for _n, qt, _s, _nb in spans])
+    if fmt == "blockwise8":
+        flat = ops.dequantize_blockwise8(q_cat, am_cat, (total * block,), np.float32)
+    else:
+        flat = ops.dequantize_4bit(q_cat, am_cat, fmt, (total * block,), np.float32)
+    flat_np = np.asarray(flat)   # the one sync point
+    out: dict[str, np.ndarray] = {}
+    for name, qt, start, _nb in spans:
+        size = int(np.prod(qt.orig_shape)) if qt.orig_shape else 1
+        out[name] = (
+            flat_np[start * block: start * block + size]
+            .reshape(qt.orig_shape)
+            .astype(np.dtype(qt.orig_dtype), copy=False)
+        )
+    return out
+
+
+def dequantize_batch(items: Mapping[str, Any]) -> dict[str, Any]:
+    """Whole-message dequantization: one kernel dispatch **per format
+    group**, one device sync per group — the receive-side mirror of
+    :func:`quantize_batch`. Items that are not :class:`QuantizedTensor`
+    (dense arrays, other wire kinds) pass through untouched; cast
+    formats (fp32/fp16/bf16) are cheap per-tensor host work. Results
+    are bitwise-identical to calling :func:`dequantize` per item —
+    only the dispatch schedule changes."""
+    out: dict[str, Any] = {}
+    groups: dict[str, list[str]] = {}
+    for name, value in items.items():
+        if isinstance(value, QuantizedTensor) and value.fmt in _BLOCK_OF:
+            groups.setdefault(value.fmt, []).append(name)
+            out[name] = None   # placeholder keeps payload ordering stable
+        elif isinstance(value, QuantizedTensor):
+            out[name] = np.asarray(dequantize(value))
+        else:
+            out[name] = value
+    tr = obs_trace.ACTIVE
+    for fmt, names in groups.items():
+        if tr is None:
+            out.update(_fused_dequantize_group(items, names, fmt))
+        else:
+            with tr.span("kernel.dequantize_batch", "kernel", fmt=fmt,
+                         items=len(names)):
+                out.update(_fused_dequantize_group(items, names, fmt))
+    return out
+
+
 def dequantize_state_dict(qsd: Mapping[str, QuantizedTensor]) -> dict[str, jnp.ndarray]:
     return {name: dequantize(qt) for name, qt in qsd.items()}
 

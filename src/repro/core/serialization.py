@@ -40,6 +40,7 @@ import numpy as np
 
 from repro.core.quantization import QuantizedTensor
 from repro.core.sparse import SparseTensor
+from repro.peft.lowrank import LowRankDelta
 from repro.utils import mem
 
 _U32 = struct.Struct("<I")
@@ -187,6 +188,23 @@ def serialize_item_views(name: str, value: Any) -> Views:
         }
         hbytes = json.dumps(header, sort_keys=True).encode()
         return [_U32.pack(len(hbytes)) + hbytes, idx, vals]
+    if isinstance(value, LowRankDelta):
+        a = _as_view(value.a)
+        b = _as_view(value.b)
+        header = {
+            "kind": "lowrank",
+            "name": name,
+            "a_shape": list(np.asarray(value.a).shape),
+            "a_dtype": str(np.asarray(value.a).dtype),
+            "b_shape": list(np.asarray(value.b).shape),
+            "b_dtype": str(np.asarray(value.b).dtype),
+            "alpha": float(value.alpha),
+            "rank": int(value.rank),
+            "orig_shape": list(value.orig_shape),
+            "orig_dtype": str(np.dtype(value.orig_dtype)),
+        }
+        hbytes = json.dumps(header, sort_keys=True).encode()
+        return [_U32.pack(len(hbytes)) + hbytes, a, b]
     if isinstance(value, QuantizedTensor):
         payload = _as_view(value.payload)
         absmax = _as_view(value.absmax) if value.absmax is not None else b""
@@ -218,8 +236,9 @@ def serialize_item_views(name: str, value: Any) -> Views:
 
 
 def serialize_item(name: str, value: Any) -> bytes:
-    """Serialize one state-dict item (array, QuantizedTensor or
-    SparseTensor) to contiguous bytes — the views, joined."""
+    """Serialize one state-dict item (array, QuantizedTensor,
+    SparseTensor or LowRankDelta) to contiguous bytes — the views,
+    joined."""
     return join_views(serialize_item_views(name, value))
 
 
@@ -255,6 +274,11 @@ def declared_item_nbytes(buf: Union[bytes, bytearray, memoryview]) -> int | None
             k = int(header["k"])
             body = k * (np.dtype(header["idx_dtype"]).itemsize
                         + np.dtype(header["val_dtype"]).itemsize)
+        elif kind == "lowrank":
+            a_shape = tuple(header["a_shape"])
+            b_shape = tuple(header["b_shape"])
+            body = (int(np.prod(a_shape)) * np.dtype(header["a_dtype"]).itemsize
+                    + int(np.prod(b_shape)) * np.dtype(header["b_dtype"]).itemsize)
         else:
             return None
     except (KeyError, TypeError, ValueError):
@@ -294,6 +318,21 @@ def deserialize_item(buf: Union[bytes, bytearray, memoryview, Sequence]) -> tupl
         sp = SparseTensor(indices, values, tuple(header["orig_shape"]),
                           np.dtype(header["orig_dtype"]))
         return header["name"], sp, off
+    if header["kind"] == "lowrank":
+        a_shape = tuple(header["a_shape"])
+        b_shape = tuple(header["b_shape"])
+        a_dtype = np.dtype(header["a_dtype"])
+        b_dtype = np.dtype(header["b_dtype"])
+        a = np.frombuffer(mv, a_dtype, count=int(np.prod(a_shape)),
+                          offset=off).reshape(a_shape)
+        off += int(np.prod(a_shape)) * a_dtype.itemsize
+        b = np.frombuffer(mv, b_dtype, count=int(np.prod(b_shape)),
+                          offset=off).reshape(b_shape)
+        off += int(np.prod(b_shape)) * b_dtype.itemsize
+        lr = LowRankDelta(a, b, float(header["alpha"]), int(header["rank"]),
+                          tuple(header["orig_shape"]),
+                          np.dtype(header["orig_dtype"]))
+        return header["name"], lr, off
     if header["kind"] == "qtensor":
         pshape = tuple(header["payload_shape"])
         pdtype = np.dtype(header["payload_dtype"])
@@ -334,6 +373,21 @@ def _deserialize_item_segments(cur: SegmentCursor) -> tuple[str, Any, int]:
         sp = SparseTensor(indices, values, tuple(header["orig_shape"]),
                           np.dtype(header["orig_dtype"]))
         return header["name"], sp, cur.consumed
+    if header["kind"] == "lowrank":
+        a_shape = tuple(header["a_shape"])
+        b_shape = tuple(header["b_shape"])
+        a_dtype = np.dtype(header["a_dtype"])
+        b_dtype = np.dtype(header["b_dtype"])
+        a_count = int(np.prod(a_shape))
+        b_count = int(np.prod(b_shape))
+        a = np.frombuffer(cur.read(a_count * a_dtype.itemsize), a_dtype,
+                          count=a_count).reshape(a_shape)
+        b = np.frombuffer(cur.read(b_count * b_dtype.itemsize), b_dtype,
+                          count=b_count).reshape(b_shape)
+        lr = LowRankDelta(a, b, float(header["alpha"]), int(header["rank"]),
+                          tuple(header["orig_shape"]),
+                          np.dtype(header["orig_dtype"]))
+        return header["name"], lr, cur.consumed
     if header["kind"] == "qtensor":
         pshape = tuple(header["payload_shape"])
         pdtype = np.dtype(header["payload_dtype"])

@@ -2,7 +2,9 @@ from repro.fl.aggregator import (
     Aggregator,
     CollectingSink,
     FedAvgAggregator,
+    LoRAFedAvgAggregator,
     QuantizedFedAvgAggregator,
+    aggregator_consumes_wire,
     build_aggregator,
     register_aggregator,
     registered_aggregators,
@@ -15,7 +17,9 @@ __all__ = [
     "Aggregator",
     "CollectingSink",
     "FedAvgAggregator",
+    "LoRAFedAvgAggregator",
     "QuantizedFedAvgAggregator",
+    "aggregator_consumes_wire",
     "build_aggregator",
     "register_aggregator",
     "registered_aggregators",

@@ -10,6 +10,7 @@ drivers, or the mesh view.
 from __future__ import annotations
 
 import inspect
+import time
 from collections.abc import Callable, Mapping, Sequence
 from typing import Any, Optional
 
@@ -73,6 +74,9 @@ class ScatterAndGather:
         self.num_rounds = num_rounds
         self.on_round_end = on_round_end
         self.streaming = streaming
+        # per-round wall timing, same entry shape the live federation
+        # server records — the --verify-sim summary zips the two
+        self.round_log: list[dict[str, Any]] = []
         if streaming and not (
             hasattr(aggregator, "begin") and hasattr(aggregator, "accept_item")
         ):
@@ -102,8 +106,10 @@ class ScatterAndGather:
 
         and aggregation of returns."""
         global_weights = dict(initial_weights)
+        self.round_log = []
         for rnd in range(self.num_rounds):
             results: list[Message] = []
+            t0 = time.monotonic()
             with obs_trace.span("round", "round", round=rnd):
                 for client in self.clients:
                     task = make_task(rnd, global_weights)
@@ -120,6 +126,11 @@ class ScatterAndGather:
                             self.aggregator.accept(result)
                     results.append(result)
                 global_weights = self.aggregator.finish()
+            self.round_log.append({
+                "round": rnd,
+                "clients": len(results),
+                "wall_s": time.monotonic() - t0,
+            })
             if self.on_round_end is not None:
                 self.on_round_end(rnd, global_weights, results)
         return global_weights

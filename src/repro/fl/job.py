@@ -69,7 +69,7 @@ from repro.core.filters import (
 )
 from repro.core.pipeline import AdaptiveQuantizeStage, build_pipeline
 from repro.data import dirichlet_partition, iid_partition
-from repro.fl.aggregator import build_aggregator
+from repro.fl.aggregator import aggregator_consumes_wire, build_aggregator
 from repro.fl.executor import TrainExecutor
 from repro.fl.simulator import FLSimulator, SimulationConfig
 from repro.models import create_model
@@ -165,9 +165,10 @@ def _build_pipelines(spec: dict[str, Any], network: Optional[Any]):
     specs: dict[str, list[Any]] = {"task_data": [], "task_result": []}
     for key, stages in p.items():
         specs[_PIPELINE_DIRECTIONS[key]] += list(stages or [])
-    # quantized server-side aggregation consumes wire-form (QuantizedTensor)
-    # payloads: leave the uplink undecoded
-    keep_wire = bool(spec.get("server_quantized_aggregation"))
+    # aggregators that fold wire-form payloads (QuantizedTensor /
+    # LowRankDelta) need the uplink left undecoded
+    keep_wire = bool(spec.get("server_quantized_aggregation")) or \
+        aggregator_consumes_wire(aggregator_spec(spec))
     pipelines = {
         "task_data": build_pipeline(specs["task_data"]),
         "task_result": build_pipeline(specs["task_result"], decode_values=not keep_wire),
@@ -210,7 +211,8 @@ def build_pipelines_from_spec(
             '"pipeline" stages (e.g. "quantize:nf4", '
             '{"stage": "dp-noise", "sigma": 0.01})'
         )
-    keep_wire = bool(spec.get("server_quantized_aggregation"))
+    keep_wire = bool(spec.get("server_quantized_aggregation")) or \
+        aggregator_consumes_wire(aggregator_spec(spec))
     return {
         "task_data": build_pipeline([]),
         "task_result": build_pipeline([], decode_values=not keep_wire),
@@ -427,6 +429,7 @@ class Job:
             "history": self.history,
             "messages": self.sim.stats.messages,
             "wire_bytes": self.sim.stats.bytes_sent,
+            "round_log": self.sim.round_log,
             "telemetry": self.sim.telemetry(),
         }
         if self.sim.scheduler is not None:

@@ -592,6 +592,16 @@ class FLSimulator:
         return out
 
     @property
+    def round_log(self) -> list[dict[str, Any]]:
+        """Per-round wall timing from the sequential controller
+        (``{"round", "clients", "wall_s"}`` per entry, same shape the
+        live federation server records); empty under the async
+        scheduler, whose clock is simulated."""
+        if self.controller is None:
+            return []
+        return list(self.controller.round_log)
+
+    @property
     def sim_time_s(self) -> Optional[float]:
         """Simulated makespan (async runtime only; None for the classic path)."""
         if self.scheduler is None:

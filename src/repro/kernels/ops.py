@@ -273,3 +273,60 @@ def dequant_accumulate8_into(
         acc, q, absmax, jnp.float32(weight),
         interpret=(backend == "pallas_interpret"),
     )
+
+
+# ---------------------------------------------------------------------------
+# low-rank (LoRA) factorization
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("rank",))
+def _ref_lowrank_decompose(x: jnp.ndarray, rank: int) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Fused truncated SVD: cast + decompose + truncate + canonicalize in
+    one executable per input shape. The SVD's per-component sign is
+    mathematically arbitrary; flipping each right-factor row so its
+    largest-|x| entry is positive pins one canonical factorization, so
+    the same tensor always decomposes to the same wire bytes."""
+    u, s, vt = jnp.linalg.svd(x.astype(jnp.float32), full_matrices=False)
+    u, s, vt = u[:, :rank], s[:rank], vt[:rank, :]
+    j = jnp.argmax(jnp.abs(vt), axis=1)
+    signs = jnp.sign(vt[jnp.arange(rank), j])
+    signs = jnp.where(signs == 0, jnp.float32(1.0), signs)
+    a = u * (s * signs)[None, :]
+    b = vt * signs[:, None]
+    return a.astype(jnp.float32), b.astype(jnp.float32)
+
+
+_REF_LOWRANK_MERGE = jax.jit(
+    lambda a, b, scale: (a.astype(jnp.float32) @ b.astype(jnp.float32)) * scale
+)
+
+
+def low_rank_decompose(x: jnp.ndarray, rank: int) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """``(m, n)`` float array -> deterministic rank-``rank`` factors
+    ``a (m, rank)``, ``b (rank, n)`` with ``a @ b`` the best (Eckart–
+    Young) rank-``rank`` approximation of ``x``. Singular values are
+    absorbed into ``a``; the factor signs are canonicalized so repeated
+    calls on the same input are bitwise-identical (the wire's
+    re-encode-equality contract).
+
+    Backend note: every backend currently shares the fused ref jit —
+    XLA has no Pallas-level SVD, so this entry point exists as the
+    dispatch seam for a future randomized-subspace kernel, exactly like
+    the quantize ops' ``backend == "ref"`` branches.
+    """
+    if rank < 1:
+        raise ValueError(f"low-rank decompose needs rank >= 1, got {rank}")
+    x = jnp.asarray(x)
+    if x.ndim != 2:
+        raise ValueError(f"low_rank_decompose takes a 2-D array, got shape {x.shape}")
+    if rank > min(x.shape):
+        raise ValueError(f"rank {rank} exceeds min dim of shape {x.shape}")
+    return _ref_lowrank_decompose(x, int(rank))
+
+
+def low_rank_merge(a: jnp.ndarray, b: jnp.ndarray, scale: float) -> jnp.ndarray:
+    """Merge a factor pair: ``scale * (a @ b)`` as one jitted fp32
+    matmul dispatch (shape-bucketed like every other op here). Also the
+    server-side fused aggregation primitive: concatenated factor blocks
+    from K clients merge in one dispatch per tensor."""
+    return _REF_LOWRANK_MERGE(jnp.asarray(a), jnp.asarray(b), jnp.float32(scale))

@@ -778,6 +778,22 @@ def main(argv: Optional[list[str]] = None) -> int:
         sim = run_job(sim_spec)
         equal = weights_bitwise_equal(final, sim["final_weights"])
         result["sim_bitwise_equal"] = equal
+        # wall-vs-sim per-round timing: the live server and the
+        # sequential controller record the same round_log shape, so the
+        # summary can show where deployment overhead (process hops, TCP
+        # framing, stragglers) lands round by round
+        result["round_timing"] = [
+            {
+                "round": lv.get("round", i),
+                "live_wall_s": lv.get("wall_s"),
+                "sim_wall_s": sv.get("wall_s"),
+                "delta_s": round(float(lv.get("wall_s", 0.0))
+                                 - float(sv.get("wall_s", 0.0)), 6),
+            }
+            for i, (lv, sv) in enumerate(
+                zip(result.get("round_log", []), sim.get("round_log", []))
+            )
+        ]
         if not equal:
             out = json.dumps(result, indent=1, default=str)
             if args.json:

@@ -454,6 +454,87 @@ def lm_logits(x: jnp.ndarray, p: dict[str, jnp.ndarray]) -> jnp.ndarray:
 
 
 # ---------------------------------------------------------------------------
+# LoRA adapters (parameter-efficient payloads)
+# ---------------------------------------------------------------------------
+
+def _lora_eligible(pd: ParamDef, rank: int) -> bool:
+    if len(pd.shape) != 2:
+        return False
+    m, n = pd.shape
+    return rank <= min(m, n) and rank * (m + n) < m * n
+
+
+def lora_adapter_spec(spec: dict[str, Any], rank: int) -> dict[str, Any]:
+    """The adapter ParamDef tree for a base parameter spec: every
+    eligible 2-D matrix (rank fits, factors beat the dense form) maps to
+    an ``{"a", "b"}`` factor pair carrying the base spec's sharding axes
+    on its outer dims. ``b`` is zero-initialized, so a freshly built
+    adapter contributes an exactly-zero delta — standard LoRA init.
+    Norms, biases, and stacked (3-D) tensors are left out: those ship
+    dense (the ``lora`` wire stage skips them for the same reason)."""
+    out: dict[str, Any] = {}
+    for k, v in spec.items():
+        if isinstance(v, ParamDef):
+            if _lora_eligible(v, rank):
+                m, n = v.shape
+                out[k] = {
+                    "a": ParamDef((m, rank), (v.axes[0], None)),
+                    "b": ParamDef((rank, n), (None, v.axes[1]), init="zeros"),
+                }
+        else:
+            sub = lora_adapter_spec(v, rank)
+            if sub:
+                out[k] = sub
+    return out
+
+
+def lora_adapter_params(
+    rng: jax.Array, spec: dict[str, Any], rank: int,
+    dtype=jnp.float32, alpha: Optional[float] = None,
+) -> dict[str, Any]:
+    """Native-adapter mode: trainable LoRA pairs as a **flat** dict of
+    :class:`~repro.peft.lowrank.LowRankDelta`, keyed by the base
+    parameter's flat path. Clients training adapters put these straight
+    into the Task Result payload — the ``lowrank`` wire kind, byte
+    stages, and :class:`~repro.fl.aggregator.LoRAFedAvgAggregator`
+    handle them identically to stage-decomposed deltas, and the uplink
+    carries ``rank * (m + n)`` floats per matrix instead of ``m * n``."""
+    from repro.peft.lowrank import LowRankDelta
+
+    adapter_spec = lora_adapter_spec(spec, rank)
+    arrays = build_params(rng, adapter_spec, dtype)
+    alpha_f = float(alpha) if alpha is not None else float(rank)
+    out: dict[str, Any] = {}
+
+    def walk(base_node: dict[str, Any], pair_node: dict[str, Any], path: str) -> None:
+        for k, pair in pair_node.items():
+            p = f"{path}/{k}" if path else k
+            base = base_node[k]
+            if isinstance(base, ParamDef):
+                a = np.asarray(pair["a"])
+                out[p] = LowRankDelta(
+                    a, np.asarray(pair["b"]), alpha_f, rank,
+                    tuple(base.shape), a.dtype,
+                )
+            else:
+                walk(base, pair, p)
+
+    walk(spec, arrays, "")
+    return out
+
+
+def merge_lora(params: dict[str, Any], adapters: dict[str, Any]) -> dict[str, Any]:
+    """Fold adapter deltas into a flat base state dict:
+    ``params[name] + (alpha/rank) * a @ b`` per adapter entry, other
+    entries untouched. The result dtype follows the base parameters."""
+    out = dict(params)
+    for name, delta in adapters.items():
+        base = out[name]
+        out[name] = (base + delta.to_dense().astype(base.dtype)).astype(base.dtype)
+    return out
+
+
+# ---------------------------------------------------------------------------
 # losses
 # ---------------------------------------------------------------------------
 

@@ -1,0 +1,14 @@
+"""Parameter-efficient payload plane (LoRA-style low-rank wire kinds).
+
+:mod:`repro.peft.lowrank` defines :class:`LowRankDelta`, the factor-pair
+wire container; :mod:`repro.peft.stage` registers the ``lora[:rank]``
+pipeline stage. The stage module is deliberately NOT imported here —
+``repro.core.serialization`` imports this package for the wire kind, and
+the stage imports ``repro.core.pipeline``; importing it at package level
+would close that cycle. ``repro.core.pipeline`` imports the stage module
+itself (bottom of the file, once the registry exists), so the ``lora``
+stage is always registered wherever the pipeline registry is in use.
+"""
+from repro.peft.lowrank import LowRankDelta
+
+__all__ = ["LowRankDelta"]

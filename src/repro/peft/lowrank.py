@@ -1,0 +1,64 @@
+"""Low-rank factor-pair wire type (LoRA adapters / truncated deltas).
+
+:class:`LowRankDelta` is the wire form of a parameter-efficient payload
+item: instead of a dense ``(m, n)`` tensor the message carries the factor
+pair ``a (m, r)`` / ``b (r, n)`` plus the LoRA scaling metadata, so the
+item costs ``r * (m + n)`` floats on the wire instead of ``m * n`` —
+orders of magnitude below even nf4 at LLM shapes. It crosses the wire
+through :mod:`repro.core.serialization` exactly like
+:class:`~repro.core.sparse.SparseTensor` (its own ``"lowrank"`` item
+kind, scatter-gather views over the factor buffers), and the ``lora``
+pipeline stage (:mod:`repro.peft.stage`) produces/consumes it per item
+inside the streaming loop. Byte stages (``zstd``, ``crc32``) see the
+factors as opaque item bytes; value stages (``quantize``, ``delta``)
+pass the container through untouched, like they do sparse items.
+
+The dense form is ``(alpha / rank) * (a @ b)`` — the standard LoRA
+scaling convention, so natively-trained adapter pairs (see
+``repro.models.layers.lora_adapter_spec``) ship on the wire without any
+decomposition step.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class LowRankDelta:
+    """Wire format for one low-rank factored tensor."""
+
+    a: np.ndarray                        # (m, rank) left factor
+    b: np.ndarray                        # (rank, n) right factor
+    alpha: float                         # LoRA scale numerator
+    rank: int
+    orig_shape: tuple[int, ...]          # dense shape ((m, n) or higher-rank)
+    orig_dtype: Any
+
+    @property
+    def total_bytes(self) -> int:
+        return int(np.asarray(self.a).nbytes) + int(np.asarray(self.b).nbytes)
+
+    @property
+    def scale(self) -> float:
+        """The LoRA merge scale ``alpha / rank``."""
+        return float(self.alpha) / float(self.rank)
+
+    @property
+    def dense_bytes(self) -> int:
+        """What the dense form would cost at original dtype."""
+        n = int(np.prod(self.orig_shape)) if self.orig_shape else 1
+        return n * np.dtype(self.orig_dtype).itemsize
+
+    def to_dense(self) -> np.ndarray:
+        """Merge the factors: ``(alpha / rank) * (a @ b)`` reshaped and
+        cast back to the original dtype (one fused jitted dispatch —
+        :func:`repro.kernels.ops.low_rank_merge`)."""
+        from repro.kernels import ops  # lazy: keep the wire type import-light
+
+        dense = np.asarray(ops.low_rank_merge(self.a, self.b, self.scale))
+        return dense.reshape(self.orig_shape).astype(
+            np.dtype(self.orig_dtype), copy=False
+        )

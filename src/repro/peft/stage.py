@@ -1,0 +1,107 @@
+"""The ``lora[:rank]`` pipeline stage: dense deltas -> low-rank factors.
+
+Encode decomposes each eligible float matrix into a truncated-SVD factor
+pair (:func:`repro.kernels.ops.low_rank_decompose`, one fused jitted
+dispatch per tensor) and ships a
+:class:`~repro.peft.lowrank.LowRankDelta`; decode merges the factors
+back to a dense array. Spec forms::
+
+    "lora"                     # rank 8
+    "lora:16"                  # rank 16
+    {"stage": "lora", "rank": 8, "alpha": 16, "min_params": 4096}
+
+Eligibility mirrors the other lossy stages (``quantize``/``topk``):
+plain float tensors only, with at least 2 dims, ``min_params`` or more
+elements, and small enough rank that the factors actually beat the
+dense form (``rank * (m + n) < m * n``); everything else passes through
+untouched — so a stacked ``lora:8 -> quantize:nf4`` pipeline low-ranks
+the big matrices and nf4-quantizes the norms/biases the lora stage
+skipped. Higher-rank tensors flatten their leading dims (``orig_shape``
+restores them on merge).
+
+Decomposition is deterministic (jitted SVD + sign canonicalization), so
+the stage is stateless and re-encoding the same payload yields identical
+wire bytes — the contract both the async scheduler's double-encode path
+and the live federation's re-grant path rely on.
+
+Native-adapter mode needs no stage at all: clients that train LoRA
+pairs directly (``repro.models.layers.lora_adapter_params``) put
+:class:`LowRankDelta` items straight into the payload, and the wire
+kind, byte stages, and :class:`~repro.fl.aggregator.LoRAFedAvgAggregator`
+treat them identically to decomposed deltas.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import numpy as np
+
+from repro.core.pipeline import Stage, WireContext, register_stage
+from repro.kernels import ops
+from repro.peft.lowrank import LowRankDelta
+
+
+def _matrix_dims(shape: tuple[int, ...]) -> tuple[int, int]:
+    """Collapse leading dims: the decomposed matrix is (prod(lead), last)."""
+    return int(np.prod(shape[:-1])), int(shape[-1])
+
+
+@register_stage("lora")
+class LoRAStage(Stage):
+    """Per-item low-rank decomposition (parameter-efficient payloads)."""
+
+    def __init__(self, rank: int = 8, alpha: Optional[float] = None,
+                 min_params: int = 1024) -> None:
+        if rank < 1:
+            raise ValueError(f"lora stage needs rank >= 1, got {rank}")
+        self.rank = int(rank)
+        # alpha defaults to rank: merge scale alpha/rank == 1, so a
+        # decomposed delta round-trips to its best rank-r approximation
+        self.alpha = float(alpha) if alpha is not None else float(rank)
+        self.min_params = int(min_params)
+
+    @classmethod
+    def from_spec(cls, arg: Optional[str] = None, **kwargs: Any) -> LoRAStage:
+        if arg is not None:
+            kwargs.setdefault("rank", int(arg))
+        return cls(**kwargs)
+
+    def _eligible(self, value: Any) -> bool:
+        if isinstance(value, LowRankDelta):  # already factored (native adapters)
+            return False
+        arr = np.asarray(value) if not hasattr(value, "dtype") else value
+        try:
+            dtype = np.dtype(arr.dtype)
+            shape = tuple(arr.shape)
+        except (TypeError, AttributeError):
+            return False
+        if not np.issubdtype(dtype, np.floating) or len(shape) < 2:
+            return False
+        m, n = _matrix_dims(shape)
+        if m * n < self.min_params or self.rank > min(m, n):
+            return False
+        # factors must actually be smaller than the dense tensor
+        return self.rank * (m + n) < m * n
+
+    def begin_encode(self, message, ctx: WireContext):
+        ctx.headers["lora_rank"] = self.rank
+        return message
+
+    def end_decode(self, message, ctx: WireContext):
+        if ctx.decode_values:
+            message.headers.pop("lora_rank", None)
+        return message
+
+    def encode_item(self, name: str, value: Any, ctx: WireContext) -> Any:
+        if not self._eligible(value):
+            return value
+        arr = np.asarray(value)
+        m, n = _matrix_dims(arr.shape)
+        a, b = ops.low_rank_decompose(arr.reshape(m, n), self.rank)
+        ctx.vmeta["r"] = self.rank
+        ctx.vmeta["n"] = int(arr.size)
+        return LowRankDelta(np.asarray(a), np.asarray(b), self.alpha,
+                            self.rank, tuple(arr.shape), arr.dtype)
+
+    def decode_item(self, name: str, value: Any, ctx: WireContext) -> Any:
+        return value.to_dense() if isinstance(value, LowRankDelta) else value

@@ -100,7 +100,9 @@ class AggregationPolicy:
         """
         sink = CollectingSink()
         msg = deliver(sink)
-        return self.on_result(dispatch, Message(msg.kind, sink.payload, dict(msg.headers)))
+        # finish() dequantizes any wire-form items in one fused dispatch
+        # per format group (no-op on already-decoded payloads)
+        return self.on_result(dispatch, Message(msg.kind, sink.finish(), dict(msg.headers)))
 
     def on_client_failed(self, dispatch: Dispatch) -> list[Dispatch]:
         """Called when a client exhausted its dropout retries."""

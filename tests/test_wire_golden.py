@@ -422,10 +422,13 @@ def test_stage_overriding_only_views_hook_runs_on_the_wire():
 def test_declared_item_nbytes_covers_every_wire_kind():
     from repro.core.quantization import quantize
     from repro.core.sparse import topk_sparsify
+    from repro.peft.lowrank import LowRankDelta
 
     x = np.random.default_rng(0).standard_normal((37, 21)).astype(np.float32)
+    lrd = LowRankDelta(x[:, :4].copy(), x[:4, :].copy(), 4.0, 4,
+                       (37, 21), np.float32)
     for value in (x, np.asarray(5, np.int64), quantize(x, "nf4"),
-                  quantize(x, "blockwise8"), topk_sparsify(x, 0.1)):
+                  quantize(x, "blockwise8"), topk_sparsify(x, 0.1), lrd):
         blob = ser.serialize_item("w", value)
         assert ser.declared_item_nbytes(blob) == len(blob)
         # a partial prefix (header not yet complete) reports unknown
