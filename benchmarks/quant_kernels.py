@@ -58,7 +58,7 @@ def run() -> list[str]:
     us_u, _ = _time(jax.jit(unfused))
     rows.append(
         f"kernels/fused_dequant_agg_k4,{us_f:.0f},unfused_us={us_u:.0f};"
-        f"speedup={us_u / us_f:.2f};note=cpu-ref-einsum-path--kernel-targets-TPU-MXU;"
+        f"speedup={us_u / us_f:.2f};note=cpu-ref-donated-fold-loop--kernel-targets-TPU-MXU;"
         f"memory_win=holds-1-not-K-fp32-copies"
     )
     return rows

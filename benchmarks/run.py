@@ -38,6 +38,7 @@ SUITES: dict[str, str] = {
     "wire": "benchmarks.wire_throughput",
     "lora": "benchmarks.lora_wire",
     "live": "benchmarks.live_federation",
+    "overlap": "benchmarks.overlap_throughput",
 }
 
 # fast subset for the nightly smoke run (skips the convergence sweeps);
@@ -48,10 +49,13 @@ SUITES: dict[str, str] = {
 # against the committed BENCH_5.json baseline (benchmarks/compare.py);
 # "live" drives the real multi-process federation plane (TCP server +
 # protocol-speaking clients) whose deterministic ordered-fold peaks diff
-# against BENCH_7.json, and "lora" pins the parameter-efficient uplink
-# (bytes-vs-rank + streaming low-rank fold peak) against BENCH_8.json
+# against BENCH_7.json, "lora" pins the parameter-efficient uplink
+# (bytes-vs-rank + streaming low-rank fold peak) against BENCH_8.json,
+# and "overlap" pins the encode-ahead send path (depth>=1 must keep
+# beating the sequential depth-0 loop on a paced link) against
+# BENCH_9.json
 SMOKE_SUITES = ("table2", "table3", "kernels", "chunks", "async", "hetero",
-                "envelope", "agg_memory", "wire", "lora", "live")
+                "envelope", "agg_memory", "wire", "lora", "live", "overlap")
 
 
 def _metrics_snapshot(timings: dict[str, float]) -> dict:

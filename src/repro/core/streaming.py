@@ -52,14 +52,17 @@ from __future__ import annotations
 import dataclasses
 import json
 import os
+import queue
 import socket
 import struct
 import threading
+import time
 import uuid
 from collections.abc import Callable, Iterable, Iterator, Mapping
 from typing import Any, Optional
 
 from repro.core import serialization as ser
+from repro.obs import metrics as obs_metrics
 from repro.obs import trace as obs_trace
 from repro.utils import mem
 
@@ -885,6 +888,130 @@ def _chunk_iter_views(item: ser.ViewsLike, chunk_size: int) -> Iterator[tuple[An
         yield (cur[0] if len(cur) == 1 else tuple(cur)), True
 
 
+# ---------------------------------------------------------------------------
+# Encode-ahead (compute/IO overlap)
+# ---------------------------------------------------------------------------
+
+#: default encode-ahead depth for senders on real-IO transports (TCP,
+#: the live-federation connection). 0 disables lookahead entirely — the
+#: classic fully-sequential encode->send loop. Override per process
+#: with ``REPRO_WIRE_PREFETCH``.
+DEFAULT_ENCODE_AHEAD = int(os.environ.get("REPRO_WIRE_PREFETCH", "2"))
+
+_EA_DONE = object()
+
+
+def iter_encode_ahead(
+    items: Iterable[tuple[str, ser.ViewsLike]], depth: int
+) -> Iterator[tuple[str, ser.ViewsLike]]:
+    """Bounded-depth encode-ahead over a ``(name, item)`` encode iterator.
+
+    A background thread drives the underlying iterator **strictly in
+    order** — stateful stages (``delta``, ``crc32``, error-feedback
+    quantize) observe items exactly as they would without lookahead —
+    at most ``depth`` items ahead of the consumer. While the sender
+    blocks in ``sendmsg`` for item k (a syscall that releases the GIL),
+    the worker encodes item k+1, and any quantize it dispatched keeps
+    computing on XLA's own threadpool. The same items flow to the
+    consumer in the same order, so wire bytes are bitwise-identical to
+    the sequential loop (pinned by the golden-hash suite).
+
+    Queued items register with the active :class:`~repro.utils.mem.
+    MemoryMeter` — they *are* live bytes — so the container envelope
+    honestly reports the ~(1 + depth)-item peak the lookahead trades
+    for overlap. Worker exceptions re-raise at the consumer; abandoning
+    the iterator stops the worker promptly.
+
+    Telemetry (when active): a ``wire.encode_wait_us`` histogram of
+    sender stall time per item, a ``wire.encode_ahead_depth`` gauge,
+    and ``wire.encode_ahead`` / ``wire.encode_wait`` spans on the
+    worker / sender threads so a Perfetto trace shows encode-of-k+1
+    overlapping tcp.send-of-k.
+    """
+    if depth <= 0:
+        yield from items
+        return
+    q: queue.Queue = queue.Queue(maxsize=depth)
+    stop = threading.Event()
+    err: list[BaseException] = []
+
+    def _put(entry: Any) -> bool:
+        while not stop.is_set():
+            try:
+                q.put(entry, timeout=0.05)
+                return True
+            except queue.Full:
+                continue
+        return False
+
+    def pump() -> None:
+        it = iter(items)
+        try:
+            while True:
+                tr = obs_trace.ACTIVE
+                if tr is None:
+                    got = next(it, _EA_DONE)
+                else:
+                    with tr.span("wire.encode_ahead", "wire"):
+                        got = next(it, _EA_DONE)
+                if got is _EA_DONE:
+                    return
+                name, item = got
+                nbytes = ser.views_nbytes(item)
+                mem.record_alloc(nbytes)
+                if not _put((name, item, nbytes)):
+                    mem.record_free(nbytes)
+                    return
+        except BaseException as exc:  # noqa: BLE001 — re-raised at the consumer
+            err.append(exc)
+        finally:
+            _put(_EA_DONE)
+
+    worker = threading.Thread(target=pump, daemon=True,
+                              name="wire-encode-ahead")
+    worker.start()
+    reg = obs_metrics.ACTIVE
+    if reg is not None:
+        reg.gauge("wire.encode_ahead_depth").max(depth)
+    try:
+        while True:
+            tr = obs_trace.ACTIVE
+            t0 = time.perf_counter()
+            if tr is None:
+                got = q.get()
+            else:
+                with tr.span("wire.encode_wait", "wire"):
+                    got = q.get()
+            if got is _EA_DONE:
+                break
+            reg = obs_metrics.ACTIVE
+            if reg is not None:
+                reg.histogram("wire.encode_wait_us").observe(
+                    (time.perf_counter() - t0) * 1e6)
+            name, item, nbytes = got
+            try:
+                yield name, item
+            finally:
+                mem.record_free(nbytes)
+    finally:
+        stop.set()
+        # join before draining: a put already in flight when the stop
+        # flag was set may still land an item in the queue (the worker
+        # re-checks stop only between put attempts), and items drained
+        # must stop arriving before the drain runs or their metered
+        # bytes leak
+        worker.join(timeout=10.0)
+        try:
+            while True:
+                got = q.get_nowait()
+                if got is not _EA_DONE:
+                    mem.record_free(got[2])
+        except queue.Empty:
+            pass
+        if err:
+            raise err[0]
+
+
 class ObjectStreamer:
     """Regular transmission: whole container encoded, then chunked."""
 
@@ -908,22 +1035,37 @@ class ObjectStreamer:
 
 
 class ContainerStreamer:
-    """Paper §III: transmit **one parameter-dict item at a time**."""
+    """Paper §III: transmit **one parameter-dict item at a time**.
 
-    def __init__(self, driver: Driver, chunk_size: int = DEFAULT_CHUNK_SIZE) -> None:
+    ``prefetch`` enables bounded-depth encode-ahead
+    (:func:`iter_encode_ahead`): a worker thread encodes up to that many
+    items past the one currently on the wire, overlapping quantize
+    dispatch with socket writes. 0 (the default) keeps the classic
+    fully-sequential loop — in-process loopback delivery has no IO to
+    overlap, so only real-transport senders (the TCP driver, the live
+    federation plane) opt in, typically at
+    :data:`DEFAULT_ENCODE_AHEAD`.
+    """
+
+    def __init__(self, driver: Driver, chunk_size: int = DEFAULT_CHUNK_SIZE,
+                 prefetch: int = 0) -> None:
         self.driver = driver
         self.chunk_size = chunk_size
+        self.prefetch = prefetch
 
     def send_items(self, items: Iterable[tuple[str, ser.ViewsLike]], total: int) -> bytes:
         """Stream ``total`` pre-encoded items, framing item boundaries.
 
         The item source is any (name, item) iterator — the plain
         serialization codec or a wire pipeline's envelope encoder — and
-        is consumed lazily, so peak live bytes stays ~one encoded item.
-        Each item may be contiguous bytes or a scatter-gather view list
+        is consumed lazily, so peak live bytes stays ~one encoded item
+        (~1 + ``prefetch`` items with encode-ahead on). Each item may be
+        contiguous bytes or a scatter-gather view list
         (:data:`repro.core.serialization.Views`); views flow through to
         the driver unjoined.
         """
+        if self.prefetch > 0:
+            items = iter_encode_ahead(items, self.prefetch)
         sid = uuid.uuid4().bytes
         seq = 0
         for i, (_name, item) in enumerate(items):

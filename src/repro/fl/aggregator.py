@@ -239,6 +239,11 @@ class QuantizedFedAvgAggregator(Aggregator):
 
     def finish(self) -> dict[str, np.ndarray]:
         with obs_trace.span("agg.finish", "agg"), self._lock:
+            # the fold's single sync point: every accept_item dispatch so
+            # far was async (the donated fold kernel queues on XLA's own
+            # threadpool while the receiver assembles the next item); one
+            # barrier here beats a device round trip per tensor below
+            ops.block_until_ready(list(self._acc.values()))
             out: dict[str, np.ndarray] = {}
             inv = np.float32(1.0) / np.float32(self._weight if self._weight else 1.0)
             for name, acc in self._acc.items():

@@ -48,6 +48,7 @@ runtime network, each client's wire precision tracks its simulated link
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import json
 from typing import Any, Optional
@@ -70,6 +71,7 @@ from repro.core.filters import (
 from repro.core.pipeline import AdaptiveQuantizeStage, build_pipeline
 from repro.data import dirichlet_partition, iid_partition
 from repro.fl.aggregator import aggregator_consumes_wire, build_aggregator
+from repro.kernels import ops
 from repro.fl.executor import TrainExecutor
 from repro.fl.simulator import FLSimulator, SimulationConfig
 from repro.models import create_model
@@ -104,6 +106,14 @@ DEFAULTS: dict[str, Any] = {
     # None resolves from server_quantized_aggregation
     "aggregator": None,
     "runtime": None,
+    # quantize-kernel backend for the whole run ("ref", "pallas",
+    # "pallas_interpret", "auto"); None keeps the process default
+    # (REPRO_KERNEL_BACKEND env, else auto). All backends produce
+    # bitwise-identical payloads — this selects an implementation, never
+    # a format — so it is a pure performance knob, declarative like
+    # everything else here. The live federation plane passes it through
+    # to the server and every client subprocess.
+    "kernel_backend": None,
     # observability: truthy turns on the span tracer (flight recorder);
     # a string is also the Chrome-trace output path the run writes
     # (viewable in Perfetto / chrome://tracing). result["telemetry"]
@@ -119,7 +129,23 @@ def normalize_spec(spec: dict[str, Any]) -> dict[str, Any]:
     Shared by :func:`build_job` and the live federation plane
     (:mod:`repro.launch.federation`) so both resolve identical settings
     from the same declarative input."""
-    return {**DEFAULTS, **spec}
+    out = {**DEFAULTS, **spec}
+    kb = out.get("kernel_backend")
+    if kb is not None and kb not in ops.BACKENDS:
+        raise ValueError(
+            f'"kernel_backend" must be one of {ops.BACKENDS}, got {kb!r}'
+        )
+    return out
+
+
+def kernel_backend_scope(spec: dict[str, Any]) -> Any:
+    """Scoped application of the spec's ``"kernel_backend"`` selection —
+    a :func:`repro.kernels.ops.backend` context when the key is set, a
+    no-op otherwise. Shared by :meth:`Job.run` and the live federation
+    plane (server run loop and client subprocess main), so one spec key
+    selects the kernel implementation on every process of a deployment."""
+    kb = spec.get("kernel_backend")
+    return ops.backend(kb) if kb else contextlib.nullcontext()
 
 
 def _adaptive_filter(q: dict[str, Any], network: Optional[Any]) -> AdaptiveQuantizeFilter:
@@ -423,7 +449,8 @@ class Job:
     adaptive_filters: list[Any]
 
     def run(self) -> dict[str, Any]:
-        final = self.sim.run(self.init_weights)
+        with kernel_backend_scope(self.spec):
+            final = self.sim.run(self.init_weights)
         out = {
             "final_weights": final,
             "history": self.history,

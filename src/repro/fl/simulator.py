@@ -53,6 +53,7 @@ from repro.core.pipeline import StageSpec, WirePipeline, legacy_wire_pipelines
 from repro.fl.controller import ClientProxy, ScatterAndGather
 from repro.fl.executor import Executor
 from repro.obs import MetricsRegistry, Tracer
+from repro.obs import metrics as obs_metrics
 from repro.obs import trace as obs_trace
 from repro.utils import mem
 from repro.utils.mem import MemoryMeter
@@ -560,7 +561,7 @@ class FLSimulator:
                 loop = self.scheduler.loop
                 self.tracer.sim_clock = lambda: loop.now
             tracing = obs_trace.activate(self.tracer)
-        with tracing, self.meter.activate():
+        with tracing, self.meter.activate(), obs_metrics.activate(self.metrics):
             out = driver.run(initial_weights)
         self._publish_metrics()
         return out

@@ -18,6 +18,7 @@ loop.
 """
 from __future__ import annotations
 
+import contextlib
 import functools
 import os
 
@@ -31,7 +32,6 @@ from repro.kernels import ref
 # 16-select networks — uncompiled tracing per call would dominate on CPU)
 _REF_Q8 = jax.jit(ref.quantize_blockwise8)
 _REF_D8 = jax.jit(ref.dequantize_blockwise8)
-_REF_AGG = jax.jit(ref.dequant_accumulate8)
 _REF_Q4 = {
     fmt: jax.jit(functools.partial(ref.quantize_4bit, code=code))
     for fmt, code in (("fp4", ref.FP4_CODE), ("nf4", ref.NF4_CODE))
@@ -102,7 +102,9 @@ from repro.kernels.fused_dequant_agg import (
     dequant_accumulate8_pallas,
 )
 
-_BACKENDS = ("auto", "ref", "pallas", "pallas_interpret")
+#: valid backend selections (public: job specs validate against this)
+BACKENDS = ("auto", "ref", "pallas", "pallas_interpret")
+_BACKENDS = BACKENDS
 _backend = os.environ.get("REPRO_KERNEL_BACKEND", "auto")
 
 
@@ -118,6 +120,22 @@ def get_backend() -> str:
         return _backend
     # Pallas compiled path on TPU; ref (identical semantics) on CPU hosts.
     return "pallas" if jax.default_backend() == "tpu" else "ref"
+
+
+@contextlib.contextmanager
+def backend(name: str):
+    """Scoped backend override: ``with ops.backend("pallas_interpret"):``.
+
+    Restores the previous selection on exit, so tests and benchmarks can
+    compare backends without mutating (and forgetting to restore) the
+    module global."""
+    global _backend
+    prev = _backend
+    set_backend(name)
+    try:
+        yield
+    finally:
+        _backend = prev
 
 
 def _pad_to_blocks(flat: jnp.ndarray, block: int) -> tuple[jnp.ndarray, int]:
@@ -222,7 +240,16 @@ def dequant_accumulate8(
 ) -> jnp.ndarray:
     backend = get_backend()
     if backend == "ref":
-        return _REF_AGG(qs, absmaxes, weights)
+        # On CPU the K-way einsum materializes a (K, nblocks, 4096) fp32
+        # cast and benches *slower* than unfused (BENCH_5 speedup=0.22);
+        # K donated in-place folds beat it and hold one fp32 buffer.
+        qs = jnp.asarray(qs)
+        absmaxes = jnp.asarray(absmaxes)
+        weights = jnp.asarray(weights, jnp.float32)
+        acc = jnp.zeros(qs.shape[1:], jnp.float32)
+        for k in range(qs.shape[0]):
+            acc = _REF_FOLD8(acc, qs[k], absmaxes[k], weights[k])
+        return acc
     nblocks = qs.shape[1]
     padded = int(np.ceil(nblocks / ROWS)) * ROWS
     if padded != nblocks:

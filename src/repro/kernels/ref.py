@@ -83,19 +83,18 @@ def dequantize_blockwise8(q: jnp.ndarray, absmax: jnp.ndarray) -> jnp.ndarray:
 def _bin_codes(xnorm: jnp.ndarray, code: np.ndarray) -> jnp.ndarray:
     """Nearest-codebook-entry index (uint8 values 0..15) via midpoints.
 
-    Branchless: rank = sum(x > midpoint_i), then permute rank -> original
-    codebook index. This is the same comparison network the Pallas kernel
-    uses (TPU-friendly: no gathers).
+    Branchless: rank = sum(x > midpoint_i), then a 16-entry gather maps
+    the sorted rank back to the original codebook index. Same comparison
+    network as the Pallas kernel.
     """
     sorted_code, perm = _sorted_code_and_perm(code)
     mids = (sorted_code[1:] + sorted_code[:-1]) / 2.0  # (15,)
     rank = jnp.zeros(xnorm.shape, dtype=jnp.int32)
     for m in mids.tolist():
         rank = rank + (xnorm > m).astype(jnp.int32)
-    # map sorted-rank back to code index
-    idx = jnp.zeros(xnorm.shape, dtype=jnp.int32)
-    for r, p in enumerate(perm.tolist()):
-        idx = jnp.where(rank == r, p, idx)
+    # map sorted-rank back to code index: one gather instead of a 16-way
+    # select chain (bitwise-identical; perm[rank] == select(rank == r, p))
+    idx = jnp.asarray(perm)[rank]
     return idx.astype(jnp.uint8)
 
 
@@ -118,10 +117,9 @@ def dequantize_4bit(packed: jnp.ndarray, absmax: jnp.ndarray, code: np.ndarray) 
     lo = (packed & 0xF).astype(jnp.int32)
     nb, half = packed.shape
     idx = jnp.stack([hi, lo], axis=-1).reshape(nb, half * 2)
-    # branchless codebook lookup (16-way select; no gather)
-    vals = jnp.zeros(idx.shape, dtype=jnp.float32)
-    for i, v in enumerate(np.asarray(code, dtype=np.float32).tolist()):
-        vals = jnp.where(idx == i, jnp.float32(v), vals)
+    # vectorized codebook lookup: one 16-entry gather (bitwise-identical
+    # to the old 16-way select chain, ~4x fewer VPU passes)
+    vals = jnp.asarray(code, dtype=jnp.float32)[idx]
     return vals * absmax[..., None].astype(jnp.float32)
 
 

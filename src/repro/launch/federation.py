@@ -69,6 +69,7 @@ from repro.fl.job import (
     build_client_executor,
     build_pipelines_from_spec,
     initial_weights,
+    kernel_backend_scope,
     normalize_spec,
 )
 from repro.obs import trace as obs_trace
@@ -115,6 +116,12 @@ def live_spec(spec: Mapping[str, Any], clients: Optional[int] = None,
     networks/availability), the legacy whole-message filter keys, and
     stateful pipelines (crash recovery re-encodes a cached result, which
     must be deterministic — error feedback / DP noise streams are not).
+
+    ``"kernel_backend"`` passes through: the resolved spec ships to
+    every client subprocess, so one key selects the quantize-kernel
+    implementation on the server and all clients (payloads are
+    bitwise-identical across backends, so mixed deployments still fold
+    correctly — the key is a per-process performance knob).
     """
     out = normalize_spec(dict(spec))
     if clients is not None:
@@ -328,7 +335,12 @@ class FederationServer:
             conn.send_ctrl({"type": "task", "round": rnd})
             driver = sm.ConnectionDriver(conn)
             msg, ctx = pipeline.begin_encode(task)
-            sm.ContainerStreamer(driver, self.chunk_size).send_items(
+            # encode-ahead: this is a real socket, so while item k's
+            # segments sit in sendmsg the worker encodes item k+1
+            # (bitwise-identical wire bytes — see iter_encode_ahead)
+            sm.ContainerStreamer(
+                driver, self.chunk_size, prefetch=sm.DEFAULT_ENCODE_AHEAD
+            ).send_items(
                 pipeline.iter_encode_views(msg, ctx), pipeline.n_items(msg)
             )
         except (OSError, ConnectionError) as exc:
@@ -458,7 +470,10 @@ class FederationServer:
             tracer = obs_trace.Tracer()
         ctx = (obs_trace.activate(tracer) if tracer is not None
                else contextlib.nullcontext())
-        with ctx:
+        # the spec's kernel_backend selection applies to the whole run:
+        # the server's fold kernels here, each client's quantize in its
+        # own process (for_spec plumbs the same key)
+        with ctx, kernel_backend_scope(self.spec):
             self.wait_for_clients()
             weights = dict(init_weights)
             for rnd in range(self.rounds):
@@ -507,7 +522,8 @@ class FederationClient:
                  pipelines: Mapping[str, WirePipeline],
                  address: tuple[str, int], fingerprint: str,
                  epoch: int = 0, chunk_size: int = 1 << 20,
-                 timeout_s: Optional[float] = None) -> None:
+                 timeout_s: Optional[float] = None,
+                 kernel_backend: Optional[str] = None) -> None:
         self.name = name
         self.executor = executor
         self.pipelines = dict(pipelines)
@@ -516,6 +532,7 @@ class FederationClient:
         self.epoch = epoch
         self.chunk_size = chunk_size
         self.timeout_s = timeout_s
+        self.kernel_backend = kernel_backend
         self.rounds_done = 0
 
     @classmethod
@@ -536,11 +553,16 @@ class FederationClient:
             epoch=epoch,
             chunk_size=int(spec["chunk_mb"] * (1 << 20)),
             timeout_s=timeout_s,
+            kernel_backend=spec.get("kernel_backend"),
         )
 
     def run(self) -> int:
         """Participate until the server says ``done``; returns the number
         of rounds this client's results were (last) granted for."""
+        with kernel_backend_scope({"kernel_backend": self.kernel_backend}):
+            return self._run()
+
+    def _run(self) -> int:
         sock = socket.create_connection(self.address)
         conn = sm.Connection(sock)
         conn.settimeout(self.timeout_s)
@@ -598,8 +620,12 @@ class FederationClient:
         pipeline = self.pipelines["task_result"]
         msg, ctx = pipeline.begin_encode(msg)
         conn.send_ctrl({"type": "result", "round": rnd, "client": self.name})
-        sm.ContainerStreamer(sm.ConnectionDriver(conn),
-                             self.chunk_size).send_items(
+        # encode-ahead on the uplink too: quantize/crc of item k+1
+        # overlaps the socket write of item k (same wire bytes)
+        sm.ContainerStreamer(
+            sm.ConnectionDriver(conn), self.chunk_size,
+            prefetch=sm.DEFAULT_ENCODE_AHEAD,
+        ).send_items(
             pipeline.iter_encode_views(msg, ctx), pipeline.n_items(msg)
         )
 

@@ -20,15 +20,43 @@ counter that used to live on an island travels in one schema.
 Instruments are thread-safe (one lock per instrument; the registry lock
 only guards series creation), matching the async runtime's concurrent
 worker threads.
+
+Activation mirrors :mod:`repro.obs.trace` and
+:class:`repro.utils.mem.MemoryMeter`: a module-level :data:`ACTIVE`
+slot set by the :func:`activate` context manager. Hot paths (the wire
+encode-ahead loop) read ``metrics.ACTIVE`` once and branch on None, so
+an inactive registry costs one global load per item.
 """
 from __future__ import annotations
 
+import contextlib
 import math
 import threading
-from collections.abc import Mapping
+from collections.abc import Iterator, Mapping
 from typing import Any, Optional, Union
 
 Number = Union[int, float]
+
+#: the active registry; hot paths read this directly and branch on None
+ACTIVE: Optional["MetricsRegistry"] = None
+
+
+def active() -> Optional["MetricsRegistry"]:
+    return ACTIVE
+
+
+@contextlib.contextmanager
+def activate(registry: "MetricsRegistry") -> Iterator["MetricsRegistry"]:
+    """Install ``registry`` as the process-wide active registry, so
+    instrumented hot paths (wire encode-ahead stalls, queue depths)
+    record into the run that is currently executing."""
+    global ACTIVE
+    prev = ACTIVE
+    ACTIVE = registry
+    try:
+        yield registry
+    finally:
+        ACTIVE = prev
 
 
 def _series_key(name: str, labels: Mapping[str, Any]) -> str:

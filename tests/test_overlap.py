@@ -1,0 +1,389 @@
+"""Compute/IO-overlapped wire hot path + backend selection (ISSUE 9).
+
+The encode-ahead primitive (:func:`repro.core.streaming.iter_encode_ahead`)
+buys overlap by running the encode iterator on a worker thread at a
+bounded depth. Everything observable must stay exactly as in the
+sequential loop: item order (stateful stages like ``delta`` depend on
+it), wire bytes (bitwise), exception behavior, and the memory envelope
+(queued items are live bytes). These tests pin each of those, plus:
+
+* the sender-stall telemetry (``wire.encode_wait_us`` histogram and
+  ``wire.encode_ahead_depth`` gauge) lands in the active registry;
+* an in-process live federation with lookahead enabled on both
+  directions still trains to weights bitwise-equal to the simulator;
+* the ``kernel_backend`` job-spec key: validation, the scoped
+  :func:`repro.kernels.ops.backend` override, and a full quantized
+  federation that is bitwise-identical under ``ref`` and
+  ``pallas_interpret`` — backends select an implementation, never a
+  format.
+"""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import pipeline as pl
+from repro.core import serialization as ser
+from repro.core import streaming as sm
+from repro.core.messages import Message, MessageKind
+from repro.fl.job import kernel_backend_scope, normalize_spec, run_job
+from repro.kernels import ops
+from repro.obs import MetricsRegistry
+from repro.obs import metrics as obs_metrics
+from repro.utils.mem import MemoryMeter
+
+
+def _views(payload: bytes) -> list[memoryview]:
+    return [memoryview(payload)]
+
+
+# ---------------------------------------------------------------------------
+# iter_encode_ahead: order, bounds, errors, memory
+# ---------------------------------------------------------------------------
+
+def test_encode_ahead_preserves_items_and_order():
+    items = [(f"t{i}", _views(bytes([i]) * 8)) for i in range(16)]
+    for depth in (1, 2, 4, 32):
+        got = list(sm.iter_encode_ahead(iter(items), depth))
+        assert [n for n, _ in got] == [n for n, _ in items]
+        assert [ser.join_views(v) for _, v in got] == \
+            [ser.join_views(v) for _, v in items]
+
+
+def test_encode_ahead_drives_source_strictly_in_order():
+    """The worker advances the underlying iterator in item order — the
+    contract stateful stages (delta, crc32 chains) rely on."""
+    produced: list[int] = []
+
+    def source():
+        for i in range(12):
+            produced.append(i)
+            yield f"t{i}", _views(b"x" * 4)
+
+    consumed = []
+    for name, _ in sm.iter_encode_ahead(source(), depth=3):
+        # at every observation point the production log is a prefix of
+        # 0..n in order, never a permutation
+        assert produced == sorted(produced)
+        consumed.append(name)
+    assert consumed == [f"t{i}" for i in range(12)]
+    assert produced == list(range(12))
+
+
+def test_encode_ahead_lookahead_is_bounded():
+    """With the consumer parked, the worker encodes at most depth items
+    plus the one blocked in ``put`` — not the whole stream."""
+    produced = threading.Semaphore(0)
+    n_produced = [0]
+
+    def source():
+        for i in range(64):
+            n_produced[0] += 1
+            produced.release()
+            yield f"t{i}", _views(b"y" * 4)
+
+    depth = 2
+    it = sm.iter_encode_ahead(source(), depth)
+    next(it)  # start the worker, take one item
+    for _ in range(depth):
+        assert produced.acquire(timeout=5.0)
+    time.sleep(0.2)  # give an unbounded worker time to run away
+    assert n_produced[0] <= depth + 2
+    it.close()
+
+
+def test_encode_ahead_reraises_source_exception():
+    def source():
+        yield "ok", _views(b"z" * 4)
+        raise RuntimeError("encode stage blew up")
+
+    it = sm.iter_encode_ahead(source(), depth=2)
+    assert next(it)[0] == "ok"
+    with pytest.raises(RuntimeError, match="encode stage blew up"):
+        list(it)
+
+
+def test_encode_ahead_abandon_stops_worker_and_frees_queue():
+    """Closing the consumer mid-stream stops the pump promptly and
+    releases every queued item's metered bytes."""
+    meter = MemoryMeter()
+    with meter.activate():
+        it = sm.iter_encode_ahead(
+            ((f"t{i}", _views(b"q" * 1024)) for i in range(1000)), depth=4)
+        next(it)
+        it.close()
+    assert meter.live == 0
+    assert meter.peak >= 1024
+    # no lingering encode-ahead worker
+    assert not [t for t in threading.enumerate()
+                if t.name == "wire-encode-ahead" and t.is_alive()]
+
+
+def test_encode_ahead_meters_queued_items_as_live_bytes():
+    item = 1 << 16
+    meter = MemoryMeter()
+    with meter.activate():
+        for _ in sm.iter_encode_ahead(
+                ((f"t{i}", _views(b"m" * item)) for i in range(8)), depth=3):
+            pass
+    assert meter.live == 0
+    # the queue held real lookahead at some point, and never more than
+    # depth queued + 1 yielded + 1 in-flight
+    assert item <= meter.peak <= 5 * item
+
+
+def test_depth_zero_is_the_identity():
+    items = [("a", _views(b"1")), ("b", _views(b"2"))]
+    src = iter(items)
+    assert sm.iter_encode_ahead(src, 0) is not src  # generator wrapper
+    assert list(sm.iter_encode_ahead(iter(items), 0)) == items
+    assert not [t for t in threading.enumerate()
+                if t.name == "wire-encode-ahead" and t.is_alive()]
+
+
+# ---------------------------------------------------------------------------
+# wire bytes: lookahead reorders work, never bytes
+# ---------------------------------------------------------------------------
+
+def _sd(round_no: int = 0):
+    rng = np.random.default_rng(7 + round_no)
+    return {
+        "embed.w": rng.standard_normal((64, 32)).astype(np.float32),
+        "layers.0.attn.wq": rng.standard_normal((32, 32)).astype(np.float32),
+        "layers.0.norm": rng.standard_normal((32,)).astype(np.float32),
+    }
+
+
+def _container_bytes(pipeline, prefetch: int, rounds: int = 2) -> bytes:
+    sent = bytearray()
+
+    class _Tap(sm.LoopbackDriver):
+        def send(self, chunk):
+            for seg in chunk.segments:
+                sent.extend(seg)
+            super().send(chunk)
+
+    driver = _Tap()
+    decoder = pipeline.decoder()
+    recv = sm.ContainerReceiver(consume=lambda n, v: None,
+                                decode_item=decoder.decode_item)
+    driver.connect(recv.on_chunk)
+    for rnd in range(rounds):
+        msg = Message(MessageKind.TASK_RESULT, _sd(rnd),
+                      {"round": rnd, "num_samples": 5})
+        msg, ctx = pipeline.begin_encode(msg)
+        sm.ContainerStreamer(driver, 4096, prefetch=prefetch).send_items(
+            pipeline.iter_encode_views(msg, ctx), pipeline.n_items(msg))
+    return bytes(sent)
+
+
+@pytest.mark.parametrize("stack", [
+    ["quantize:nf4", "zlib", "crc32"],
+    ["quantize:nf4", "delta", "zlib", "crc32"],  # stateful across rounds
+    [],
+], ids=["nf4-zlib-crc32", "nf4-delta-zlib-crc32", "plain"])
+def test_wire_bytes_bitwise_identical_with_prefetch(stack):
+    baseline = _container_bytes(pl.build_pipeline(list(stack)), prefetch=0)
+    for depth in (1, 2, 4):
+        assert _container_bytes(pl.build_pipeline(list(stack)),
+                                prefetch=depth) == baseline
+
+
+def test_delta_stage_decodes_correctly_under_lookahead():
+    """Two delta rounds (snapshot, then residual) through a prefetching
+    streamer decode back to the exact original tensors."""
+    p = pl.build_pipeline(["quantize:fp16", "delta", "crc32"])
+    decoded: dict[int, dict[str, np.ndarray]] = {}
+    for rnd in range(2):
+        decoder = p.decoder()
+        got: dict[str, np.ndarray] = {}
+
+        def consume(name, value, _got=got):
+            if name != pl.META_ITEM:
+                _got[name] = np.asarray(value)
+
+        driver = sm.LoopbackDriver()
+        recv = sm.ContainerReceiver(consume=consume,
+                                    decode_item=decoder.decode_item)
+        driver.connect(recv.on_chunk)
+        msg = Message(MessageKind.TASK_RESULT, _sd(rnd),
+                      {"round": rnd, "num_samples": 5})
+        msg, ctx = p.begin_encode(msg)
+        sm.ContainerStreamer(driver, 4096, prefetch=3).send_items(
+            p.iter_encode_views(msg, ctx), p.n_items(msg))
+        decoded[rnd] = got
+    for rnd in range(2):
+        want = {k: v.astype(np.float16).astype(np.float32)
+                for k, v in _sd(rnd).items()}
+        assert set(decoded[rnd]) == set(want)
+        for k in want:
+            np.testing.assert_array_equal(decoded[rnd][k], want[k])
+
+
+# ---------------------------------------------------------------------------
+# telemetry: stall histogram + depth gauge
+# ---------------------------------------------------------------------------
+
+def test_encode_wait_telemetry_lands_in_active_registry():
+    reg = MetricsRegistry()
+    with obs_metrics.activate(reg):
+        _container_bytes(pl.build_pipeline(["quantize:nf4", "crc32"]),
+                         prefetch=2, rounds=1)
+    hist = reg.histogram("wire.encode_wait_us").as_value()
+    assert hist["count"] > 0
+    assert reg.gauge("wire.encode_ahead_depth").as_value() == 2
+
+
+def test_no_telemetry_without_active_registry():
+    reg = MetricsRegistry()  # never activated
+    _container_bytes(pl.build_pipeline(["crc32"]), prefetch=2, rounds=1)
+    assert reg.histogram("wire.encode_wait_us").as_value()["count"] == 0
+
+
+def test_metrics_activate_restores_previous_registry():
+    outer, inner = MetricsRegistry(), MetricsRegistry()
+    assert obs_metrics.active() is None
+    with obs_metrics.activate(outer):
+        assert obs_metrics.active() is outer
+        with obs_metrics.activate(inner):
+            assert obs_metrics.active() is inner
+        assert obs_metrics.active() is outer
+        with pytest.raises(RuntimeError):
+            with obs_metrics.activate(inner):
+                raise RuntimeError("boom")
+        assert obs_metrics.active() is outer
+    assert obs_metrics.active() is None
+
+
+# ---------------------------------------------------------------------------
+# backend selection: scoped override + job-spec key
+# ---------------------------------------------------------------------------
+
+def test_ops_backend_scope_restores_on_exit_and_exception():
+    before = ops.get_backend()
+    with ops.backend("pallas_interpret"):
+        assert ops.get_backend() == "pallas_interpret"
+        with ops.backend("ref"):
+            assert ops.get_backend() == "ref"
+        assert ops.get_backend() == "pallas_interpret"
+    assert ops.get_backend() == before
+    with pytest.raises(ValueError, match="carrier-pigeon"):
+        with ops.backend("carrier-pigeon"):
+            pass  # pragma: no cover - never entered
+    assert ops.get_backend() == before
+    with pytest.raises(RuntimeError):
+        with ops.backend("ref"):
+            raise RuntimeError("boom")
+    assert ops.get_backend() == before
+
+
+def test_job_spec_validates_kernel_backend():
+    assert normalize_spec({})["kernel_backend"] is None
+    for kb in ops.BACKENDS:
+        assert normalize_spec({"kernel_backend": kb})["kernel_backend"] == kb
+    with pytest.raises(ValueError, match="kernel_backend"):
+        normalize_spec({"kernel_backend": "cuda"})
+
+
+def test_kernel_backend_scope_helper():
+    before = ops.get_backend()
+    with kernel_backend_scope({"kernel_backend": "pallas_interpret"}):
+        assert ops.get_backend() == "pallas_interpret"
+    assert ops.get_backend() == before
+    with kernel_backend_scope({"kernel_backend": None}):  # nullcontext
+        assert ops.get_backend() == before
+
+
+@pytest.mark.slow
+def test_quantized_federation_bitwise_identical_across_backends():
+    """The whole point of the backend knob: ref and pallas_interpret run
+    the same federation to bitwise-identical weights, so a job spec can
+    flip implementations without changing results (or wire bytes)."""
+    base = {
+        "arch": "llama3.2-1b", "smoke": True, "rounds": 2, "clients": 2,
+        "local_steps": 1, "batch": 4, "seq": 32,
+        "pipeline": {"task_result_out": ["quantize:nf4", "crc32"]},
+        "server_streaming_agg": True,
+    }
+    ref = run_job({**base, "kernel_backend": "ref"})
+    pi = run_job({**base, "kernel_backend": "pallas_interpret"})
+    assert set(ref["final_weights"]) == set(pi["final_weights"])
+    for k in ref["final_weights"]:
+        np.testing.assert_array_equal(np.asarray(ref["final_weights"][k]),
+                                      np.asarray(pi["final_weights"][k]))
+
+
+# ---------------------------------------------------------------------------
+# live federation with lookahead on both directions
+# ---------------------------------------------------------------------------
+
+def test_live_federation_bitwise_matches_sim_with_prefetch(monkeypatch):
+    """Raise the encode-ahead depth on the live plane's downlink and
+    uplink streamers and train a real TCP federation: weights must stay
+    bitwise-equal to the sequential simulator (lookahead reorders work,
+    never bytes, so the fold arithmetic is untouched)."""
+    from repro.fl import FedAvgAggregator, FLSimulator, SimulationConfig, \
+        TrainExecutor
+    from repro.launch.federation import FederationServer, FederationClient, \
+        build_pipelines_from_spec, weights_bitwise_equal
+
+    monkeypatch.setattr(sm, "DEFAULT_ENCODE_AHEAD", 3)
+
+    w_true = np.arange(1, 9, dtype=np.float32) / 8.0
+
+    def lsq(name, seed):
+        rng = np.random.default_rng(seed)
+        X = rng.standard_normal((64, 8)).astype(np.float32)
+        y = X @ w_true
+
+        def train_fn(params, rnd):
+            w = np.asarray(params["w"]).copy()
+            for _ in range(3):
+                w = w - 0.3 * (X.T @ (X @ w - y) / 64)
+            return {"w": w}, 64, {}
+
+        return TrainExecutor(name, train_fn)
+
+    stack = ["quantize:blockwise8", "crc32"]
+    spec = {"clients": 2, "rounds": 2, "chunk_mb": 1,
+            "pipeline": {"task_data": list(stack),
+                         "task_result": list(stack)}}
+    init = {"w": np.zeros(8, np.float32)}
+
+    server = FederationServer(spec, join_timeout_s=30).start()
+    try:
+        pipelines = build_pipelines_from_spec(server.spec)
+        errors: list[Exception] = []
+        threads = []
+        for i in range(2):
+            client = FederationClient(
+                name=f"site-{i}", executor=lsq(f"site-{i}", i),
+                pipelines=pipelines, address=server.address,
+                fingerprint=server.fingerprint, timeout_s=60.0)
+
+            def run(c=client):
+                try:
+                    c.run()
+                except Exception as exc:  # noqa: BLE001 - surfaced below
+                    errors.append(exc)
+
+            t = threading.Thread(target=run, daemon=True)
+            t.start()
+            threads.append(t)
+        live = server.run(dict(init))
+        for t in threads:
+            t.join(timeout=60)
+            assert not t.is_alive()
+        assert not errors
+    finally:
+        server.close()
+
+    sim = FLSimulator(
+        [lsq(f"site-{i}", i) for i in range(2)],
+        FedAvgAggregator(),
+        SimulationConfig(num_rounds=2, transmission="container"),
+        pipelines={"task_data": list(stack), "task_result": list(stack)},
+        server_streaming_agg=True,
+    )
+    assert weights_bitwise_equal(live, sim.run(dict(init)))

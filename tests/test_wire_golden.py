@@ -328,7 +328,11 @@ def test_dequant_accumulate_into_matches_unfused():
         w * np.asarray(ref.dequantize_blockwise8(*ops.quantize_blockwise8(x)))
         for x, w in zip(xs, ws)
     )
-    np.testing.assert_allclose(np.asarray(acc), want, rtol=1e-5, atol=1e-5)
+    # the pallas path may row-pad the donated accumulator (documented
+    # contract: callers slice to the original element count, as the
+    # streaming aggregator does)
+    got = np.asarray(acc)[: want.shape[0]]
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
 
 
 def test_dequant_accumulate_into_pallas_interpret_matches_ref():
