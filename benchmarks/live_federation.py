@@ -17,6 +17,14 @@ deliberately named so the nightly compare gate skips it.
 (``run_live_federation`` spawning real client subprocesses) and reports
 wall seconds ungated — real-deployment latency for the record, not a
 regression signal.
+
+``live/degraded/stragglersN`` rows (ISSUE 10) measure quorum-mode folds
+with 0%/12%/25% of an 8-client fleet straggling past the grace: the
+round closes early over the contributors it has, and the deterministic
+``peak_bytes``/``copied`` of the partial fold gate against the
+committed ``BENCH_10.json`` — degraded-mode memory/copy behavior is a
+regression surface, degraded-mode wall-clock (dominated by the grace
+deadline itself) is not.
 """
 from __future__ import annotations
 
@@ -82,12 +90,15 @@ class _RawClient(threading.Thread):
     client-side — ``sendall`` of prebuilt bytes, no-op chunk drain."""
 
     def __init__(self, name: str, address: tuple, fingerprint: str,
-                 blob: bytes) -> None:
+                 blob: bytes, grant_delay_s: float = 0.0) -> None:
         super().__init__(daemon=True, name=f"bench-{name}")
         self.client = name
         self.address = address
         self.fingerprint = fingerprint
         self.blob = blob
+        # straggler knob: sit on the grant past the server's grace, then
+        # send anyway — the late stream must be drained and discarded
+        self.grant_delay_s = grant_delay_s
 
     def run(self) -> None:
         conn = None
@@ -105,6 +116,8 @@ class _RawClient(threading.Thread):
                 if kind == "task":
                     conn.recv_stream(lambda c: None)
                 elif kind == "grant":
+                    if self.grant_delay_s:
+                        time.sleep(self.grant_delay_s)
                     conn.send_ctrl({"type": "result",
                                     "round": ctrl["round"],
                                     "client": self.client})
@@ -137,7 +150,9 @@ def _run_fold(clients: int, uplink: str):
         server.wait_for_clients()
         roster = [f"site-{i}" for i in range(clients)]
         # tiny downlink (outside the meter): the fold is what's measured
-        server._downlink(roster, 0, {"w": np.zeros(8, np.float32)})
+        active = server._downlink(roster, 0, {"w": np.zeros(8, np.float32)})
+        with server._lock:
+            server._tasked = set(active)
         meter = MemoryMeter()
         t0 = time.perf_counter()
         with meter.activate():
@@ -155,6 +170,60 @@ def _run_fold(clients: int, uplink: str):
         for t in threads:
             t.join(timeout=10)
     return meter, dt, clients * (MODEL_ITEMS + 1)  # +1: meta item
+
+
+def _run_degraded(stragglers: int):
+    """Quorum fold over 8 clients with the last ``stragglers`` of them
+    sitting on the grant past ``straggler_grace_s``: the round closes
+    early over the contributors it has, and the late uplinks are drained
+    off-meter. Returns (meter, fold_seconds, contributors, faults)."""
+    clients = 8
+    spec = _spec(clients)
+    spec.update({"quorum": 0.75, "straggler_grace_s": 0.25})
+    sd = model_dict()
+    server = FederationServer(spec, uplink="ordered", join_timeout_s=60.0,
+                              round_timeout_s=120.0).start()
+    fp = pipeline_fingerprint(build_pipelines_from_spec(spec),
+                              aggregator_spec(spec))
+    threads = [
+        _RawClient(f"site-{i}", server.address, fp,
+                   _encode_uplink(spec, f"site-{i}", sd),
+                   grant_delay_s=1.0 if i >= clients - stragglers else 0.0)
+        for i in range(clients)
+    ]
+    try:
+        for t in threads:
+            t.start()
+        server.wait_for_clients()
+        roster = [f"site-{i}" for i in range(clients)]
+        active = server._downlink(roster, 0, {"w": np.zeros(8, np.float32)})
+        with server._lock:
+            server._tasked = set(active)
+        meter = MemoryMeter()
+        t0 = time.perf_counter()
+        with meter.activate():
+            _, contributed = server._gather(roster, 0)
+        dt = time.perf_counter() - t0
+        # let the late uplinks finish draining before tearing down, so
+        # the stragglers end the bench connected, not lost mid-drain
+        deadline = time.monotonic() + 15.0
+        with server._drain_cv:
+            while server._draining and time.monotonic() < deadline:
+                server._drain_cv.wait(timeout=0.2)
+        for name in roster:
+            conn = server._conns.get(name)
+            if conn is not None:
+                try:
+                    conn.send_ctrl({"type": "done"})
+                except OSError:
+                    pass
+        faults = {k: (dict(v) if isinstance(v, dict) else v)
+                  for k, v in server.faults.items()}
+    finally:
+        server.close()
+        for t in threads:
+            t.join(timeout=10)
+    return meter, dt, list(contributed), faults
 
 
 def _subprocess_round() -> dict[str, Any]:
@@ -214,6 +283,20 @@ def run() -> list[str]:
         f"c16_over_c2={peaks[16] / max(1, peaks[2]):.2f};"
         f"model_over_peak={model_bytes / max(1, peaks[16]):.1f}"
     )
+
+    # degraded-mode quorum folds: 0%/12%/25% of the fleet straggles past
+    # the grace; peak/copied of the partial fold are deterministic and
+    # gate against BENCH_10.json (us_per_call=0 disarms the wall gate —
+    # degraded wall-clock is dominated by the grace deadline itself)
+    for k in (0, 1, 2):
+        dmeter, ddt, contributed, faults = _run_degraded(k)
+        pct = round(100 * k / 8)
+        rows.append(
+            f"live/degraded/stragglers{pct},0.0,peak_bytes={dmeter.peak};"
+            f"copied={dmeter.copied};contributors={len(contributed)};"
+            f"stragglers={len(faults['stragglers'])};"
+            f"fold_wall_s={ddt:.2f}"
+        )
 
     # one true multi-process round: wall-clock for the record (ungated)
     sub = _subprocess_round()

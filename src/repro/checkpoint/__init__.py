@@ -1,7 +1,15 @@
 from repro.checkpoint.streaming_ckpt import (
+    latest_server_state,
     load_checkpoint,
     load_checkpoint_streaming,
     save_checkpoint,
+    save_server_state,
 )
 
-__all__ = ["save_checkpoint", "load_checkpoint", "load_checkpoint_streaming"]
+__all__ = [
+    "save_checkpoint",
+    "load_checkpoint",
+    "load_checkpoint_streaming",
+    "save_server_state",
+    "latest_server_state",
+]

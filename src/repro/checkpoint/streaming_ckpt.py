@@ -93,3 +93,81 @@ def load_checkpoint_streaming(
         consume(name, value)
         count += 1
     return count
+
+
+# ---------------------------------------------------------------------------
+# Live-server round state (crash/resume for the federation plane)
+# ---------------------------------------------------------------------------
+
+def save_server_state(ckpt_dir: str, rnd: int, weights: Any,
+                      meta: Optional[dict[str, Any]] = None,
+                      keep: int = 3) -> str:
+    """Atomically persist one completed federation round.
+
+    Two files per round: ``round_NNNNNN.ckpt`` — the flat global weights
+    in the wire item format (unquantized, so a resume is bitwise) — and
+    ``round_NNNNNN.json`` — round number + caller metadata (roster,
+    round log). Both are written to a temp name, fsynced, and renamed
+    into place, weights first: the meta JSON is the **commit point**, so
+    a crash at any instant leaves either a complete older checkpoint or
+    a complete newer one, never a half-valid state. Keeps the newest
+    ``keep`` rounds and prunes older pairs. Returns the meta path.
+    """
+    import json
+
+    os.makedirs(ckpt_dir, exist_ok=True)
+    wname = f"round_{rnd:06d}.ckpt"
+    wtmp = os.path.join(ckpt_dir, wname + ".tmp")
+    save_checkpoint(wtmp, dict(weights))
+    with open(wtmp, "rb") as fh:
+        os.fsync(fh.fileno())
+    os.replace(wtmp, os.path.join(ckpt_dir, wname))
+    doc = {"round": int(rnd), "weights": wname, **dict(meta or {})}
+    mname = f"round_{rnd:06d}.json"
+    mtmp = os.path.join(ckpt_dir, mname + ".tmp")
+    with open(mtmp, "w") as fh:
+        json.dump(doc, fh)
+        fh.flush()
+        os.fsync(fh.fileno())
+    mpath = os.path.join(ckpt_dir, mname)
+    os.replace(mtmp, mpath)
+    rounds = sorted(
+        f[:-5] for f in os.listdir(ckpt_dir)
+        if f.startswith("round_") and f.endswith(".json"))
+    for stem in rounds[:-keep] if keep > 0 else []:
+        for suffix in (".json", ".ckpt"):
+            try:
+                os.unlink(os.path.join(ckpt_dir, stem + suffix))
+            except OSError:
+                pass
+    return mpath
+
+
+def latest_server_state(ckpt_dir: str) -> Optional[dict[str, Any]]:
+    """Newest complete round checkpoint in ``ckpt_dir``, or ``None``.
+
+    Scans meta files newest-first and returns the first whose weights
+    file exists, as ``{"round", "weights" (flat state dict), "meta"}``.
+    The weights load **flat** (``dict(iter_checkpoint(...))``), never
+    through ``load_checkpoint`` — unflattening dotted wire names into
+    nested dicts would change the state-dict shape the server folds and
+    downlinks.
+    """
+    import json
+
+    if not os.path.isdir(ckpt_dir):
+        return None
+    metas = sorted(
+        (f for f in os.listdir(ckpt_dir)
+         if f.startswith("round_") and f.endswith(".json")),
+        reverse=True)
+    for mname in metas:
+        try:
+            with open(os.path.join(ckpt_dir, mname)) as fh:
+                doc = json.load(fh)
+            wpath = os.path.join(ckpt_dir, doc["weights"])
+            weights = dict(iter_checkpoint(wpath))
+        except (OSError, ValueError, KeyError, struct.error):
+            continue  # torn leftovers from a crash mid-write: skip
+        return {"round": int(doc["round"]), "weights": weights, "meta": doc}
+    return None

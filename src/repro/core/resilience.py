@@ -15,6 +15,11 @@ Components:
   chunks, transmits through the (possibly lossy) driver, then
   retransmits whatever the receiver reports missing until the stream
   completes (NVFlare's resend-on-gap, pull-based) or retries exhaust.
+* :class:`ChaosProxy` — the live-plane sibling of :class:`LossyDriver`:
+  a TCP forwarder that injects deterministic byte-offset-triggered
+  faults (stall / blackhole / corrupt / throttle) between one real
+  client and the federation server, so the fault-tolerance layer is
+  tested against real sockets, not simulated drivers.
 
 Works with every streamer/receiver pair unchanged — resilience is a
 transport concern, invisible to the container/file layers above
@@ -27,9 +32,13 @@ async runtime's simulated transfer time.
 """
 from __future__ import annotations
 
+import contextlib
 import random
-from collections.abc import Callable
-from typing import Optional
+import socket
+import threading
+import time
+from collections.abc import Callable, Mapping
+from typing import Any, Optional
 
 from repro.core import streaming as sm
 
@@ -194,3 +203,170 @@ class ReliableTransfer:
             lambda d: sm.ObjectStreamer(d, self.chunk_size).send_blob(blob),
             receiver, max_rounds,
         )
+
+
+class ChaosProxy:
+    """Deterministic TCP fault injector between one client and a server.
+
+    Listens on its own port and forwards every accepted connection to
+    ``target``, two pump threads per connection (one per direction).
+    The fault ``plan`` triggers at an exact byte offset of the faulted
+    direction's stream, so a given (plan, traffic) pair always fails at
+    the same protocol position — chaos tests are reproducible, and a
+    seeded offset (``plan["seed"]`` when ``after_bytes`` is omitted) is
+    still a pure function of the plan:
+
+    * ``{"kind": "stall", "after_bytes": N, "stall_s": S}`` — stop
+      forwarding the faulted direction for ``S`` seconds at offset ``N``
+      (the other direction keeps flowing), then resume losslessly: a
+      straggler, not a crash.
+    * ``{"kind": "blackhole", "after_bytes": N}`` — forward ``N`` bytes,
+      then drop both sockets: the mid-stream death a flaky link causes.
+    * ``{"kind": "corrupt", "after_bytes": N, "xor": M}`` — flip the
+      byte at offset ``N`` (XOR with ``M``, default 0xFF) and keep
+      forwarding: framing survives, payload integrity does not — the
+      receiver's crc32/decode stage must catch it.
+    * ``{"kind": "throttle", "after_bytes": N, "bps": R}`` — pace the
+      faulted direction at ``R`` bytes/second from offset ``N`` on.
+
+    ``direction`` selects the counted stream (``"up"`` = client→server,
+    the default; ``"down"`` = server→client). ``triggers`` (default 1)
+    arms the fault on that many connections; later connections through
+    the same proxy forward untouched, so a client reconnecting after a
+    blackhole lands on a clean path — exactly the transient-fault shape
+    reconnect-with-backoff must survive.
+    """
+
+    def __init__(self, target: tuple, plan: Optional[Mapping[str, Any]] = None,
+                 host: str = "127.0.0.1", port: int = 0) -> None:
+        self.target = (str(target[0]), int(target[1]))
+        self.plan = dict(plan or {})
+        if self.plan and "after_bytes" not in self.plan:
+            self.plan["after_bytes"] = random.Random(
+                int(self.plan.get("seed", 0))).randrange(1 << 10, 1 << 16)
+        self._srv = socket.create_server((host, port))
+        self.address = self._srv.getsockname()
+        self._accept_thread: Optional[threading.Thread] = None
+        self._threads: list[threading.Thread] = []
+        self._socks: list[socket.socket] = []
+        self._lock = threading.Lock()
+        self._closing = False
+        self.connections = 0
+        self.triggered = 0
+
+    def start(self) -> "ChaosProxy":
+        if self._accept_thread is not None:
+            raise RuntimeError("start() already called")
+        self._accept_thread = threading.Thread(
+            target=self._accept_loop, daemon=True,
+            name=f"chaos-accept-{self.address[1]}")
+        self._accept_thread.start()
+        return self
+
+    def _accept_loop(self) -> None:
+        while True:
+            try:
+                csock, _peer = self._srv.accept()
+            except OSError:
+                return  # listener closed — clean shutdown
+            if self._closing:
+                csock.close()
+                return
+            try:
+                ssock = socket.create_connection(self.target)
+            except OSError:
+                csock.close()
+                continue
+            with self._lock:
+                self.connections += 1
+                armed = bool(self.plan) and \
+                    self.connections <= int(self.plan.get("triggers", 1))
+                if armed:
+                    self.triggered += 1
+                self._socks += [csock, ssock]
+            faulted = self.plan.get("direction", "up")
+            for src, dst, tag in ((csock, ssock, "up"), (ssock, csock, "down")):
+                plan = self.plan if armed and tag == faulted else None
+                t = threading.Thread(
+                    target=self._pump, args=(src, dst, plan), daemon=True,
+                    name=f"chaos-{tag}-{self.address[1]}")
+                t.start()
+                with self._lock:
+                    self._threads.append(t)
+
+    def _pump(self, src: socket.socket, dst: socket.socket,
+              plan: Optional[Mapping[str, Any]]) -> None:
+        kind = (plan or {}).get("kind")
+        after = int((plan or {}).get("after_bytes", 0))
+        seen = 0
+        fired = False
+        kill = False
+        try:
+            while True:
+                data = src.recv(1 << 16)
+                if not data:
+                    break
+                if kind and not fired and seen + len(data) > after:
+                    cut = after - seen  # bytes before the fault offset
+                    fired = True
+                    if kind == "stall":
+                        if cut:
+                            dst.sendall(data[:cut])
+                        time.sleep(float(plan.get("stall_s", 1.0)))
+                        dst.sendall(data[cut:])
+                    elif kind == "blackhole":
+                        if cut:
+                            dst.sendall(data[:cut])
+                        kill = True
+                        break
+                    elif kind == "corrupt":
+                        flipped = bytearray(data)
+                        flipped[cut] ^= int(plan.get("xor", 0xFF)) or 0xFF
+                        dst.sendall(bytes(flipped))
+                    else:  # throttle: pacing starts at the offset
+                        dst.sendall(data)
+                        time.sleep(len(data) / float(plan.get("bps", 1e6)))
+                elif kind == "throttle" and fired:
+                    dst.sendall(data)
+                    time.sleep(len(data) / float(plan.get("bps", 1e6)))
+                else:
+                    dst.sendall(data)
+                seen += len(data)
+        except OSError:
+            kill = True
+        if kill:
+            # shutdown before close: a plain close is deferred while the
+            # opposite pump blocks in recv on the same socket (CPython
+            # holds the fd open), so no FIN would reach either peer and
+            # the "dead" link would hang everyone until their timeouts.
+            # shutdown() takes effect immediately.
+            for s in (src, dst):
+                with contextlib.suppress(OSError):
+                    s.shutdown(socket.SHUT_RDWR)
+                with contextlib.suppress(OSError):
+                    s.close()
+        else:
+            # clean EOF: half-close downstream so the opposite pump can
+            # keep forwarding until its own side ends
+            with contextlib.suppress(OSError):
+                dst.shutdown(socket.SHUT_WR)
+
+    def close(self) -> None:
+        self._closing = True
+        try:
+            self._srv.shutdown(socket.SHUT_RDWR)
+        except OSError:
+            with contextlib.suppress(OSError):
+                socket.create_connection(self.address, timeout=1).close()
+        self._srv.close()
+        if self._accept_thread is not None:
+            self._accept_thread.join(timeout=5)
+        with self._lock:
+            socks, threads = list(self._socks), list(self._threads)
+        for s in socks:
+            with contextlib.suppress(OSError):
+                s.shutdown(socket.SHUT_RDWR)  # wake pumps blocked in recv
+            with contextlib.suppress(OSError):
+                s.close()
+        for t in threads:
+            t.join(timeout=5)

@@ -59,7 +59,7 @@ import threading
 import time
 import uuid
 from collections.abc import Callable, Iterable, Iterator, Mapping
-from typing import Any, Optional
+from typing import Any, Optional, Union
 
 from repro.core import serialization as ser
 from repro.obs import metrics as obs_metrics
@@ -405,6 +405,14 @@ class Connection:
     the same gather/coalesce path as :class:`TCPDriver`
     (:func:`send_chunk`), with the coalescing threshold adapted to this
     socket's ``SO_SNDBUF``.
+
+    The reader is **timeout-safe**: bytes received before a socket
+    timeout stay in the connection's own buffer, and the next read
+    resumes at the exact byte position — unlike ``socket.makefile``,
+    whose internal buffer is undefined after a timeout. The federation
+    server leans on this to *drain* a straggler's late uplink after a
+    grace deadline fired mid-frame: the drain picks up where the granted
+    read stopped, so leftover bytes never desync the frame stream.
     """
 
     def __init__(self, sock: socket.socket,
@@ -414,7 +422,13 @@ class Connection:
             self.peer = peer or sock.getpeername()
         except OSError:  # pragma: no cover - already-dead socket
             self.peer = peer or ("?", 0)
-        self._rf = sock.makefile("rb")
+        self._rbuf = bytearray()
+        # frame-resumption state: a parsed-but-unsatisfied length prefix
+        # (control) or chunk header survives a mid-payload timeout, so
+        # the next read completes the *same* frame instead of parsing
+        # payload bytes as a fresh header
+        self._ctrl_pending: Optional[int] = None
+        self._chunk_pending: Optional[tuple] = None
         self._coalesce = socket_coalesce_bytes(sock)
         self._wlock = threading.Lock()
 
@@ -428,14 +442,18 @@ class Connection:
             self.sock.sendall(_CTRL.pack(len(body)) + body)
 
     def recv_ctrl(self) -> dict[str, Any]:
-        (n,) = _CTRL.unpack(self._read_exact(_CTRL.size))
-        if n > CTRL_MAX_BYTES:
-            raise ProtocolError(
-                f"control frame declares {n} bytes (max {CTRL_MAX_BYTES}); "
-                "stream is corrupt or the peer speaks a different protocol"
-            )
+        if self._ctrl_pending is None:
+            (n,) = _CTRL.unpack(self._read_exact(_CTRL.size))
+            if n > CTRL_MAX_BYTES:
+                raise ProtocolError(
+                    f"control frame declares {n} bytes (max {CTRL_MAX_BYTES}); "
+                    "stream is corrupt or the peer speaks a different protocol"
+                )
+            self._ctrl_pending = n
+        body = self._read_exact(self._ctrl_pending)
+        self._ctrl_pending = None
         try:
-            return json.loads(self._read_exact(n))
+            return json.loads(body)
         except json.JSONDecodeError as exc:
             raise ProtocolError(f"control frame is not JSON: {exc}") from None
 
@@ -445,13 +463,18 @@ class Connection:
             send_chunk(self.sock, chunk, self._coalesce)
 
     def recv_chunk(self) -> Chunk:
-        hdr = self._read_exact(_HDR.size)
-        sid, seq, plen, flags = _HDR.unpack(hdr)
+        if self._chunk_pending is None:
+            hdr = self._read_exact(_HDR.size)
+            self._chunk_pending = _HDR.unpack(hdr)
+        sid, seq, plen, flags = self._chunk_pending
         tr = obs_trace.ACTIVE
         if tr is None:
-            return Chunk(sid, seq, self._read_exact(plen), flags)
-        with tr.span("tcp.recv", "net", nbytes=plen, seq=seq):
-            return Chunk(sid, seq, self._read_exact(plen), flags)
+            payload = self._read_exact(plen)
+        else:
+            with tr.span("tcp.recv", "net", nbytes=plen, seq=seq):
+                payload = self._read_exact(plen)
+        self._chunk_pending = None
+        return Chunk(sid, seq, payload, flags)
 
     def recv_stream(self, on_chunk: Callable[[Chunk], None]) -> int:
         """Receive chunk frames into ``on_chunk`` until a ``FLAG_EOF``
@@ -473,18 +496,32 @@ class Connection:
                 return total
 
     def _read_exact(self, n: int) -> bytes:
-        buf = self._rf.read(n)
-        if buf is None or len(buf) < n:
-            raise ConnectionError(
-                f"peer {self.peer} closed the connection mid-frame "
-                f"(wanted {n} bytes, got {0 if buf is None else len(buf)})"
-            )
-        return buf
+        # a TimeoutError from recv propagates with every byte received so
+        # far retained in _rbuf — the next call resumes mid-frame
+        buf = self._rbuf
+        while len(buf) < n:
+            try:
+                got = self.sock.recv(max(n - len(buf), 1 << 16))
+            except InterruptedError:  # pragma: no cover - EINTR
+                continue
+            if not got:
+                raise ConnectionError(
+                    f"peer {self.peer} closed the connection mid-frame "
+                    f"(wanted {n} bytes, got {len(buf)})"
+                )
+            buf += got
+        out = bytes(memoryview(buf)[:n])
+        del buf[:n]
+        return out
 
     def close(self) -> None:
+        # shutdown first: close() alone is deferred while another thread
+        # blocks in recv on this socket (CPython keeps the fd referenced),
+        # so dropping a client mid-read would neither wake our reader nor
+        # send the peer a FIN until some timeout fired
         try:
-            self._rf.close()
-        except OSError:  # pragma: no cover - peer already gone
+            self.sock.shutdown(socket.SHUT_RDWR)
+        except OSError:
             pass
         try:
             self.sock.close()
@@ -898,11 +935,65 @@ def _chunk_iter_views(item: ser.ViewsLike, chunk_size: int) -> Iterator[tuple[An
 #: with ``REPRO_WIRE_PREFETCH``.
 DEFAULT_ENCODE_AHEAD = int(os.environ.get("REPRO_WIRE_PREFETCH", "2"))
 
+#: adaptive ceiling: queue memory is ~depth encoded items, so unbounded
+#: growth would trade the container envelope's O(item) peak for latency
+MAX_ENCODE_AHEAD = 8
+
 _EA_DONE = object()
 
 
+class AdaptiveEncodeAhead:
+    """Adaptive depth controller for :func:`iter_encode_ahead`.
+
+    Starts at :data:`DEFAULT_ENCODE_AHEAD` and grows by one — never past
+    ``max_depth``, never below the default — each time a completed
+    transfer's observed sender stall fraction (the ``wire.encode_wait_us``
+    time the send loop spent starved, over the transfer's wall time)
+    exceeds ``grow_threshold``: the encoder, not the socket, is the
+    bottleneck, so a deeper lookahead buys real overlap. When the sender
+    never starves the depth stays put — lookahead memory is ~depth
+    encoded items and there is nothing to win.
+
+    Depth only changes *between* transfers (each ``send_items`` reads it
+    once), and every depth produces bitwise-identical wire bytes, so
+    adaptation is invisible to the receiver. Thread-safe: one controller
+    may be shared by several sender threads.
+    """
+
+    def __init__(self, depth: Optional[int] = None,
+                 max_depth: int = MAX_ENCODE_AHEAD,
+                 grow_threshold: float = 0.10) -> None:
+        self._depth = DEFAULT_ENCODE_AHEAD if depth is None else int(depth)
+        self.max_depth = int(max_depth)
+        self.grow_threshold = float(grow_threshold)
+        self.grown = 0
+        self._lock = threading.Lock()
+
+    @property
+    def depth(self) -> int:
+        with self._lock:
+            return self._depth
+
+    def observe(self, stall_s: float, wall_s: float) -> None:
+        """Feed one completed transfer's total sender stall + wall time."""
+        if wall_s <= 0.0:
+            return
+        with self._lock:
+            if (stall_s / wall_s > self.grow_threshold
+                    and self._depth < self.max_depth):
+                self._depth += 1
+                self.grown += 1
+                depth = self._depth
+            else:
+                return
+        reg = obs_metrics.ACTIVE
+        if reg is not None:
+            reg.gauge("wire.encode_ahead_depth").max(depth)
+
+
 def iter_encode_ahead(
-    items: Iterable[tuple[str, ser.ViewsLike]], depth: int
+    items: Iterable[tuple[str, ser.ViewsLike]], depth: int,
+    stall_sink: Optional[Callable[[float], None]] = None,
 ) -> Iterator[tuple[str, ser.ViewsLike]]:
     """Bounded-depth encode-ahead over a ``(name, item)`` encode iterator.
 
@@ -926,7 +1017,9 @@ def iter_encode_ahead(
     sender stall time per item, a ``wire.encode_ahead_depth`` gauge,
     and ``wire.encode_ahead`` / ``wire.encode_wait`` spans on the
     worker / sender threads so a Perfetto trace shows encode-of-k+1
-    overlapping tcp.send-of-k.
+    overlapping tcp.send-of-k. ``stall_sink`` receives the same
+    per-item sender-stall seconds the histogram observes, with no
+    registry required — :class:`AdaptiveEncodeAhead` feeds on it.
     """
     if depth <= 0:
         yield from items
@@ -984,10 +1077,12 @@ def iter_encode_ahead(
                     got = q.get()
             if got is _EA_DONE:
                 break
+            wait_s = time.perf_counter() - t0
             reg = obs_metrics.ACTIVE
             if reg is not None:
-                reg.histogram("wire.encode_wait_us").observe(
-                    (time.perf_counter() - t0) * 1e6)
+                reg.histogram("wire.encode_wait_us").observe(wait_s * 1e6)
+            if stall_sink is not None:
+                stall_sink(wait_s)
             name, item, nbytes = got
             try:
                 yield name, item
@@ -1044,11 +1139,15 @@ class ContainerStreamer:
     fully-sequential loop — in-process loopback delivery has no IO to
     overlap, so only real-transport senders (the TCP driver, the live
     federation plane) opt in, typically at
-    :data:`DEFAULT_ENCODE_AHEAD`.
+    :data:`DEFAULT_ENCODE_AHEAD`. Passing an
+    :class:`AdaptiveEncodeAhead` controller instead of an int reads the
+    depth per transfer and feeds the observed sender stalls back, so
+    repeated sends (the federation round loop) deepen the lookahead
+    only when the encoder is the measured bottleneck.
     """
 
     def __init__(self, driver: Driver, chunk_size: int = DEFAULT_CHUNK_SIZE,
-                 prefetch: int = 0) -> None:
+                 prefetch: Union[int, "AdaptiveEncodeAhead"] = 0) -> None:
         self.driver = driver
         self.chunk_size = chunk_size
         self.prefetch = prefetch
@@ -1064,8 +1163,17 @@ class ContainerStreamer:
         (:data:`repro.core.serialization.Views`); views flow through to
         the driver unjoined.
         """
-        if self.prefetch > 0:
-            items = iter_encode_ahead(items, self.prefetch)
+        adaptive = (self.prefetch
+                    if isinstance(self.prefetch, AdaptiveEncodeAhead) else None)
+        depth = adaptive.depth if adaptive is not None else self.prefetch
+        stall = [0.0]
+        if depth > 0:
+            sink = None
+            if adaptive is not None:
+                def sink(s: float, _acc=stall) -> None:
+                    _acc[0] += s
+            items = iter_encode_ahead(items, depth, stall_sink=sink)
+        t0 = time.perf_counter() if adaptive is not None else 0.0
         sid = uuid.uuid4().bytes
         seq = 0
         for i, (_name, item) in enumerate(items):
@@ -1078,6 +1186,8 @@ class ContainerStreamer:
                         flags |= FLAG_EOF
                 self.driver.send(Chunk(sid, seq, part, flags))
                 seq += 1
+        if adaptive is not None:
+            adaptive.observe(stall[0], time.perf_counter() - t0)
         return sid
 
     def send_container(self, sd: Mapping[str, Any]) -> bytes:

@@ -119,6 +119,23 @@ DEFAULTS: dict[str, Any] = {
     # (viewable in Perfetto / chrome://tracing). result["telemetry"]
     # carries the metrics snapshot either way.
     "trace": None,
+    # fault tolerance (live plane only; the simulator ignores these).
+    # quorum: fraction of the roster whose uplinks complete a round —
+    # once reached and straggler_grace_s expires, the server folds the
+    # contributors it has and re-invites stragglers next round. None
+    # keeps the all-clients-or-round_timeout_s behavior.
+    "quorum": None,
+    "straggler_grace_s": 30.0,
+    # reconnect budget per client process: transient ConnectionError /
+    # timeout triggers capped exponential backoff + jitter, up to this
+    # many attempts per run
+    "max_reconnects": 5,
+    # checkpoint: directory for atomic per-round server state (epoch +
+    # global weights + roster) — the --resume restart point
+    "checkpoint": None,
+    # chaos: {client_name: fault plan} routed through a ChaosProxy per
+    # afflicted client when spawning subprocesses (test/CI harness)
+    "chaos": None,
     "seed": 0,
 }
 
@@ -295,8 +312,17 @@ def _train_executor(
         )
         opt = adamw_init(p)
         loss = None
-        for _ in range(spec["local_steps"]):
-            batch = {k: jnp.asarray(v) for k, v in data.sample(spec["batch"]).items()}
+        # round-keyed sampling makes the update a pure function of
+        # (params, rnd): a client that reconnects or re-executes a round
+        # after a fault regenerates the identical batches, so chaos and
+        # resume runs stay bitwise-equal to clean ones
+        for step in range(spec["local_steps"]):
+            batch = {
+                k: jnp.asarray(v)
+                for k, v in data.sample_at(
+                    spec["batch"], rnd * spec["local_steps"] + step
+                ).items()
+            }
             p, opt, loss = local_step(p, opt, batch)
         if history is not None:
             history.append(float(loss))

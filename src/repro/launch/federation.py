@@ -40,6 +40,33 @@ Crash/rejoin semantics
     stateless pipelines make the re-encode deterministic). A crashed
     client may reconnect with the server's *current* round epoch and
     participates from the next downlink.
+
+Fault tolerance
+    With ``"quorum"`` set (e.g. ``{"quorum": 0.75,
+    "straggler_grace_s": 30}``) a round no longer waits
+    ``round_timeout_s`` on its slowest client: every uplink gets
+    ``straggler_grace_s``; a client that exceeds it is marked a
+    straggler, its late stream is drained and discarded on a background
+    thread (the timeout-safe reader resumes mid-frame), and the round
+    finishes over the contributors the server has — the streaming
+    aggregators make partial folds natural, the fold just ``finish()``es
+    early. Drained stragglers are re-invited next round. If the fold is
+    still below quorum after the roster is exhausted, the server waits
+    for drains to complete and re-grants (the client's cached round
+    result is still valid), and only gives up when no straggler remains.
+    ``FederationClient`` survives transient connection loss with capped
+    exponential backoff + jitter (``max_reconnects`` budget); a decode /
+    integrity failure (e.g. a corrupted chunk caught by crc32)
+    quarantines the *client* and restarts the fold instead of killing
+    the server. With a checkpoint directory configured the server
+    atomically persists round epoch + global weights + roster after
+    every round, and ``--resume`` restarts at round k+1 with
+    bitwise-identical weights. ``ChaosProxy``
+    (:mod:`repro.core.resilience`) injects seeded stall / blackhole /
+    corrupt / throttle faults between real sockets to test all of it;
+    ``reference_run`` replays the recorded per-round contributor sets
+    sequentially and must match the live weights bitwise
+    (``--verify-chaos``).
 """
 from __future__ import annotations
 
@@ -47,7 +74,9 @@ import argparse
 import contextlib
 import hashlib
 import json
+import math
 import os
+import random
 import socket
 import subprocess
 import sys
@@ -59,9 +88,11 @@ from typing import Any, Mapping, Optional
 
 import numpy as np
 
+from repro.checkpoint import latest_server_state, save_server_state
 from repro.core import streaming as sm
 from repro.core.messages import Message, MessageKind
 from repro.core.pipeline import WirePipeline, registered_stages
+from repro.core.resilience import ChaosProxy
 from repro.fl.aggregator import build_aggregator
 from repro.fl.controller import make_task
 from repro.fl.job import (
@@ -72,6 +103,7 @@ from repro.fl.job import (
     kernel_backend_scope,
     normalize_spec,
 )
+from repro.obs import metrics as obs_metrics
 from repro.obs import trace as obs_trace
 
 PROTO = 1
@@ -141,6 +173,16 @@ def live_spec(spec: Mapping[str, Any], clients: Optional[int] = None,
         )
     if int(out["clients"]) < 1:
         raise ValueError(f'need at least one client, got {out["clients"]}')
+    q = out.get("quorum")
+    if q is not None and not 0.0 < float(q) <= 1.0:
+        raise ValueError(f'"quorum" must be a fraction in (0, 1], got {q!r}')
+    if float(out.get("straggler_grace_s") or 0.0) <= 0.0:
+        raise ValueError(
+            f'"straggler_grace_s" must be positive, got '
+            f'{out.get("straggler_grace_s")!r}')
+    if int(out.get("max_reconnects") or 0) < 0:
+        raise ValueError(
+            f'"max_reconnects" must be >= 0, got {out.get("max_reconnects")!r}')
     pipelines = build_pipelines_from_spec(out)
     for direction, pl in pipelines.items():
         if pl.stateful:
@@ -167,12 +209,46 @@ def weights_bitwise_equal(a: Mapping[str, Any], b: Mapping[str, Any]) -> bool:
 
 
 class _ClientLost(Exception):
-    """One client's connection failed mid-round (carries the name)."""
+    """One client's connection failed mid-round (carries the name).
 
-    def __init__(self, name: str, why: str) -> None:
+    ``poisoned`` says whether any of its items already reached the
+    running aggregation (the fold must then restart); ``quarantine``
+    marks integrity/decode failures — the *client* sent garbage, the
+    link is irrelevant, so the failure is recorded as a quarantine
+    rather than a transport loss."""
+
+    def __init__(self, name: str, why: str, *, poisoned: bool = True,
+                 quarantine: bool = False) -> None:
         super().__init__(f"{name}: {why}")
         self.client = name
         self.why = why
+        self.poisoned = poisoned
+        self.quarantine = quarantine
+
+
+class _Straggled(Exception):
+    """A client exceeded ``straggler_grace_s`` mid-uplink (quorum mode).
+
+    ``stage`` is where the grace expired (``"result"``: the grant went
+    out but no result control frame came back; ``"stream"``: mid chunk
+    stream) — the drain thread needs it to know what is still inbound.
+    ``poisoned`` mirrors :class:`_ClientLost`."""
+
+    def __init__(self, name: str, stage: str, *, poisoned: bool) -> None:
+        super().__init__(f"{name}: straggled at {stage}")
+        self.client = name
+        self.stage = stage
+        self.poisoned = poisoned
+
+
+class _StaleEpoch(Exception):
+    """Handshake reject carrying the server's current round — the
+    client retries immediately at the right epoch (a redirect, not a
+    fault)."""
+
+    def __init__(self, round_: int) -> None:
+        super().__init__(f"server is at round {round_}")
+        self.round = round_
 
 
 class FederationServer:
@@ -190,7 +266,10 @@ class FederationServer:
     def __init__(self, spec: Mapping[str, Any], host: str = "127.0.0.1",
                  port: int = 0, uplink: str = "ordered",
                  join_timeout_s: float = 60.0,
-                 round_timeout_s: float = 600.0) -> None:
+                 round_timeout_s: float = 600.0,
+                 handshake_timeout_s: float = 10.0,
+                 checkpoint_dir: Optional[str] = None,
+                 resume: bool = False) -> None:
         if uplink not in UPLINK_MODES:
             raise ValueError(f"uplink mode {uplink!r}; valid: {UPLINK_MODES}")
         self.spec = live_spec(spec)
@@ -203,12 +282,24 @@ class FederationServer:
         self.uplink = uplink
         self.join_timeout_s = join_timeout_s
         self.round_timeout_s = round_timeout_s
+        self.handshake_timeout_s = handshake_timeout_s
+        q = self.spec.get("quorum")
+        self.quorum = None if q is None else float(q)
+        self.straggler_grace_s = float(self.spec["straggler_grace_s"])
+        self.checkpoint_dir = (checkpoint_dir if checkpoint_dir is not None
+                               else self.spec.get("checkpoint"))
         self._server = sm.TCPServer(host, port)
         self.address = self._server.address
         self._lock = threading.Lock()
         self._join_cv = threading.Condition(self._lock)
+        # drain bookkeeping shares the lock: a straggler whose late
+        # uplink is still being discarded must not be re-granted or
+        # re-rostered until its socket is clean again
+        self._drain_cv = threading.Condition(self._lock)
         self._conns: dict[str, sm.Connection] = {}
         self._lost: set[str] = set()
+        self._draining: dict[str, bool] = {}
+        self._tasked: set[str] = set()
         self._round = 0
         self._roster = tuple(f"site-{i}" for i in range(self.n_clients))
         self.round_log: list[dict[str, Any]] = []
@@ -216,6 +307,30 @@ class FederationServer:
         self.bytes_up = 0
         self.restarts = 0
         self.rejects: list[dict[str, str]] = []
+        self.faults: dict[str, Any] = {
+            "stragglers": {}, "reconnects": {}, "quarantined": {},
+            "lost": {}, "handshake_timeouts": 0,
+        }
+        self.metrics = obs_metrics.MetricsRegistry()
+        # adaptive encode-ahead shared by every downlink sender: grows
+        # from DEFAULT_ENCODE_AHEAD when the wire observes encode stalls
+        # (wire bytes are bitwise-identical at any depth)
+        self.encode_ahead = sm.AdaptiveEncodeAhead()
+        self.resumed_from: Optional[int] = None
+        self._resume_weights: Optional[dict[str, Any]] = None
+        if resume:
+            if not self.checkpoint_dir:
+                raise ValueError(
+                    "resume=True needs a checkpoint directory (the "
+                    '"checkpoint" spec key or --checkpoint-dir)')
+            state = latest_server_state(self.checkpoint_dir)
+            if state is not None:
+                # epoch set before the accept loop starts, so handshakes
+                # see the restart round, not 0
+                self._round = int(state["round"]) + 1
+                self._resume_weights = state["weights"]
+                self.resumed_from = int(state["round"])
+                self.round_log = list(state["meta"].get("round_log", []))
 
     # -- lifecycle ----------------------------------------------------------
     def start(self) -> "FederationServer":
@@ -236,67 +351,103 @@ class FederationServer:
             return self._round
 
     # -- handshake ----------------------------------------------------------
-    def _reject(self, conn: sm.Connection, reason: str) -> None:
+    def _reject(self, conn: sm.Connection, reason: str,
+                code: str = "error", **extra: Any) -> None:
         with self._lock:
-            self.rejects.append({"peer": str(conn.peer), "reason": reason})
+            self.rejects.append({"peer": str(conn.peer), "reason": reason,
+                                 "code": code})
         with contextlib.suppress(OSError):
-            conn.send_ctrl({"type": "reject", "reason": reason})
+            conn.send_ctrl({"type": "reject", "reason": reason,
+                            "code": code, **extra})
         conn.close()
 
     def _on_connection(self, conn: sm.Connection) -> None:
-        conn.settimeout(self.round_timeout_s)
+        # a connected-but-mute socket is shed after handshake_timeout_s,
+        # not round_timeout_s — it must never hold an accept thread (or a
+        # roster slot) while a round is in flight
+        conn.settimeout(self.handshake_timeout_s)
         tr = obs_trace.ACTIVE
         span = (tr.span("fed.handshake", "fed", peer=str(conn.peer))
                 if tr else contextlib.nullcontext())
         with span:
             try:
                 hello = conn.recv_ctrl()
+            except TimeoutError:
+                with self._lock:
+                    self.faults["handshake_timeouts"] += 1
+                self.metrics.counter("fed.handshake_timeout").inc()
+                conn.close()
+                return
             except (OSError, sm.ProtocolError, ConnectionError):
                 conn.close()
                 return
             if hello.get("type") != "hello":
                 return self._reject(
-                    conn, f'expected "hello", got {hello.get("type")!r}')
+                    conn, f'expected "hello", got {hello.get("type")!r}',
+                    code="bad-hello")
             if hello.get("proto") != PROTO:
                 return self._reject(
-                    conn, f"protocol revision {hello.get('proto')} != {PROTO}")
+                    conn, f"protocol revision {hello.get('proto')} != {PROTO}",
+                    code="proto")
             name = str(hello.get("client", ""))
             if name not in self._roster:
                 return self._reject(
                     conn, f"unknown client {name!r}; roster is "
-                          f"site-0..site-{self.n_clients - 1}")
+                          f"site-0..site-{self.n_clients - 1}",
+                    code="unknown-client")
             if hello.get("fingerprint") != self.fingerprint:
                 return self._reject(
                     conn,
                     f"pipeline fingerprint mismatch: server runs "
                     f"{self.fingerprint}, client {hello.get('fingerprint')} — "
                     "stage stacks or aggregator differ; refusing to fold",
+                    code="fingerprint",
                 )
             with self._lock:
                 epoch = int(hello.get("epoch", 0))
-                if epoch != self._round:
-                    reason = (f"stale round epoch {epoch}: server is at round "
-                              f"{self._round}; reconnect with the current epoch")
-                    self.rejects.append({"peer": str(conn.peer),
-                                         "reason": reason})
-                    with contextlib.suppress(OSError):
-                        conn.send_ctrl({"type": "reject", "reason": reason})
-                    conn.close()
-                    return
-                if name in self._conns:
-                    reason = f"duplicate client {name!r}: already connected"
-                    self.rejects.append({"peer": str(conn.peer),
-                                         "reason": reason})
-                    with contextlib.suppress(OSError):
-                        conn.send_ctrl({"type": "reject", "reason": reason})
-                    conn.close()
-                    return
-                self._conns[name] = conn
-                self._lost.discard(name)
-                self._join_cv.notify_all()
-            conn.send_ctrl({"type": "welcome", "round": self._round,
-                            "rounds": self.rounds, "clients": self.n_clients,
-                            "uplink": self.uplink})
+                cur = self._round
+                stale = epoch != cur
+                dup = not stale and name in self._conns
+                rejoined = False
+                if not stale and not dup:
+                    # welcome must be on the wire before the round loop
+                    # can see this client (notify below) — otherwise the
+                    # first task frame could beat the welcome
+                    conn.settimeout(self.round_timeout_s)
+                    try:
+                        conn.send_ctrl({"type": "welcome", "round": cur,
+                                        "rounds": self.rounds,
+                                        "clients": self.n_clients,
+                                        "uplink": self.uplink})
+                    except OSError:
+                        conn.close()
+                        return
+                    self._conns[name] = conn
+                    rejoined = name in self._lost
+                    self._lost.discard(name)
+                    self._join_cv.notify_all()
+            if stale:
+                # structured redirect: the client retries immediately at
+                # the round the server is actually on (resume / rejoin)
+                return self._reject(
+                    conn,
+                    f"stale round epoch {epoch}: server is at round {cur}; "
+                    f"reconnect with the current epoch",
+                    code="stale-epoch", round=cur)
+            if dup:
+                return self._reject(
+                    conn, f"duplicate client {name!r}: already connected",
+                    code="duplicate")
+            attempts = int(hello.get("reconnects", 0))
+            if rejoined or attempts:
+                with self._lock:
+                    self.faults["reconnects"][name] = (
+                        self.faults["reconnects"].get(name, 0) + 1)
+                self.metrics.counter("fed.reconnect", client=name).inc()
+                if tr:
+                    with tr.span("fed.reconnect", "fed", client=name,
+                                 round=cur, attempts=attempts):
+                        pass
 
     def wait_for_clients(self, n: Optional[int] = None) -> None:
         """Block until ``n`` (default: the full roster) clients joined."""
@@ -313,12 +464,98 @@ class FederationServer:
                     )
 
     # -- client failure -----------------------------------------------------
-    def _drop(self, name: str, why: str) -> None:
-        with self._lock:
+    def _drop(self, name: str, why: str, quarantine: bool = False) -> None:
+        with self._drain_cv:
             conn = self._conns.pop(name, None)
             self._lost.add(name)
+            self._tasked.discard(name)
+            self._draining.pop(name, None)
+            self.faults["lost"][name] = why
+            if quarantine:
+                self.faults["quarantined"][name] = why
+            self._drain_cv.notify_all()
         if conn is not None:
             conn.close()
+
+    def _lose(self, exc: _ClientLost) -> None:
+        self._drop(exc.client, exc.why, quarantine=exc.quarantine)
+        kind = "fed.quarantine" if exc.quarantine else "fed.client_lost"
+        self.metrics.counter(kind, client=exc.client).inc()
+
+    # -- stragglers (quorum mode) -------------------------------------------
+    def _mark_straggler(self, exc: _Straggled, rnd: int) -> None:
+        """Record a straggler and start draining its late uplink.
+
+        The connection stays open: the timeout-safe reader kept every
+        byte received so far, so a background thread resumes exactly
+        mid-frame, reads the rest of the late stream, and discards it —
+        the closed round's data never touches a fold, and the socket is
+        clean for the next round's re-invite."""
+        name = exc.client
+        with self._lock:
+            self.faults["stragglers"][name] = (
+                self.faults["stragglers"].get(name, 0) + 1)
+            conn = self._conns.get(name)
+            self._draining[name] = True
+        self.metrics.counter("fed.straggler", client=name).inc()
+        tr = obs_trace.ACTIVE
+        if tr:
+            with tr.span("fed.straggler", "fed", client=name, round=rnd,
+                         stage=exc.stage):
+                pass
+        threading.Thread(
+            target=self._drain_straggler, args=(name, conn, exc.stage),
+            daemon=True, name=f"fed-drain-{name}",
+        ).start()
+
+    def _drain_straggler(self, name: str, conn: Optional[sm.Connection],
+                         stage: str) -> None:
+        try:
+            if conn is None:
+                raise ConnectionError("connection gone before drain")
+            if stage == "result":
+                # the grant went out but the result header hadn't
+                # arrived yet — it (and the stream) are still inbound
+                ctrl = conn.recv_ctrl()
+                if ctrl.get("type") != "result":
+                    raise sm.ProtocolError(
+                        f"draining {name}: expected a late result frame, "
+                        f"got {ctrl}")
+            conn.recv_stream(lambda chunk: None)  # discard, don't decode
+        except (TimeoutError, OSError, ConnectionError, sm.ProtocolError,
+                ValueError, struct_error) as exc:
+            self._drop(name, f"straggler drain failed: {exc}")
+        finally:
+            with self._drain_cv:
+                self._draining.pop(name, None)
+                self._drain_cv.notify_all()
+
+    def _quorum_need(self, roster: list[str]) -> Optional[int]:
+        if self.quorum is None:
+            return None
+        return max(1, math.ceil(self.quorum * len(roster)))
+
+    def _await_rejoin(self, roster: list[str],
+                      contributed: list[str]) -> list[str]:
+        """Below quorum with no one left to grant: wait for a draining
+        straggler to come clean (its cached result for this round is
+        still grantable). Returns newly grantable names, or ``[]`` when
+        no drain is pending / the wait timed out — quorum unreachable."""
+        deadline = time.monotonic() + self.round_timeout_s
+        done = set(contributed)
+        with self._drain_cv:
+            while True:
+                ready = [n for n in roster
+                         if n in self._conns and n in self._tasked
+                         and not self._draining.get(n) and n not in done]
+                if ready:
+                    return ready
+                if not any(self._draining.get(n) for n in roster):
+                    return []
+                left = deadline - time.monotonic()
+                if left <= 0:
+                    return []
+                self._drain_cv.wait(timeout=left)
 
     # -- downlink -----------------------------------------------------------
     def _downlink_one(self, name: str, rnd: int,
@@ -332,19 +569,35 @@ class FederationServer:
         task.headers.setdefault("client", name)
         pipeline = self.pipelines["task_data"]
         try:
-            conn.send_ctrl({"type": "task", "round": rnd})
-            driver = sm.ConnectionDriver(conn)
-            msg, ctx = pipeline.begin_encode(task)
-            # encode-ahead: this is a real socket, so while item k's
-            # segments sit in sendmsg the worker encodes item k+1
-            # (bitwise-identical wire bytes — see iter_encode_ahead)
-            sm.ContainerStreamer(
-                driver, self.chunk_size, prefetch=sm.DEFAULT_ENCODE_AHEAD
-            ).send_items(
-                pipeline.iter_encode_views(msg, ctx), pipeline.n_items(msg)
-            )
+            # in quorum mode a stalled downlink only gets the straggler
+            # grace: a partially-written task stream makes the socket
+            # unusable anyway, so the client is dropped (it reconnects)
+            # rather than allowed to stall the broadcast barrier
+            if self.quorum is not None:
+                conn.settimeout(self.straggler_grace_s)
+            try:
+                conn.send_ctrl({"type": "task", "round": rnd})
+                driver = sm.ConnectionDriver(conn)
+                msg, ctx = pipeline.begin_encode(task)
+                # encode-ahead: this is a real socket, so while item k's
+                # segments sit in sendmsg the worker encodes item k+1
+                # (bitwise-identical wire bytes — see iter_encode_ahead)
+                sm.ContainerStreamer(
+                    driver, self.chunk_size, prefetch=self.encode_ahead
+                ).send_items(
+                    pipeline.iter_encode_views(msg, ctx), pipeline.n_items(msg)
+                )
+            finally:
+                if self.quorum is not None:
+                    with contextlib.suppress(OSError):
+                        conn.settimeout(self.round_timeout_s)
+        except TimeoutError as exc:
+            raise _ClientLost(
+                name, f"downlink stalled past the straggler grace: {exc}",
+                poisoned=False) from exc
         except (OSError, ConnectionError) as exc:
-            raise _ClientLost(name, f"downlink failed: {exc}") from exc
+            raise _ClientLost(name, f"downlink failed: {exc}",
+                              poisoned=False) from exc
         with self._lock:
             self.bytes_down += driver.bytes_sent
 
@@ -378,33 +631,72 @@ class FederationServer:
     def _uplink_one(self, name: str, rnd: int, agg: Any) -> dict[str, Any]:
         """Grant ``name``'s uplink and fold its stream into ``agg``.
 
-        Raises :class:`_ClientLost` on any transport/decode failure — the
-        caller must then treat the whole fold as poisoned (a partial
-        contribution is already in the running sums) and restart it.
+        Failure taxonomy: a transport error raises :class:`_ClientLost`
+        (``quarantine=False``); framed garbage — integrity (crc32),
+        decode, or protocol violations — raises :class:`_ClientLost`
+        with ``quarantine=True`` (the client is bad, not the link); in
+        quorum mode a grace timeout after the grant raises
+        :class:`_Straggled` instead. All three carry ``poisoned``: True
+        iff any decoded item already reached ``agg`` (its ``begin``
+        sample weight or partial items are in the running sums, so the
+        caller must discard the fold and restart).
         """
         conn = self._conns.get(name)
         if conn is None:
-            raise _ClientLost(name, "not connected at uplink")
+            raise _ClientLost(name, "not connected at uplink",
+                              poisoned=False)
+        grace = self.straggler_grace_s if self.quorum is not None else None
         tr = obs_trace.ACTIVE
         span = (tr.span("fed.uplink", "fed", client=name, round=rnd)
                 if tr else contextlib.nullcontext())
+        stage = "grant"
+        folded = [0]
         with span as sp:
             try:
-                conn.send_ctrl({"type": "grant", "round": rnd})
-                ctrl = conn.recv_ctrl()
-                if ctrl.get("type") != "result" or ctrl.get("round") != rnd:
-                    raise _ClientLost(
-                        name, f"expected result/round={rnd}, got {ctrl}")
-                decoder = self.pipelines["task_result"].decoder(sink=agg)
-                recv = sm.ContainerReceiver(consume=decoder.on_item,
-                                            decode_item=decoder.decode_item)
-                nbytes = conn.recv_stream(recv.on_chunk)
-                result = decoder.finish(MessageKind.TASK_RESULT)
+                if grace is not None:
+                    conn.settimeout(grace)
+                try:
+                    conn.send_ctrl({"type": "grant", "round": rnd})
+                    stage = "result"
+                    ctrl = conn.recv_ctrl()
+                    if ctrl.get("type") != "result" or ctrl.get("round") != rnd:
+                        raise _ClientLost(
+                            name, f"expected result/round={rnd}, got {ctrl}",
+                            poisoned=False, quarantine=True)
+                    stage = "stream"
+                    decoder = self.pipelines["task_result"].decoder(sink=agg)
+
+                    def consume(iname: str, value: Any) -> None:
+                        folded[0] += 1  # poison marker: agg was touched
+                        decoder.on_item(iname, value)
+
+                    recv = sm.ContainerReceiver(consume=consume,
+                                                decode_item=decoder.decode_item)
+                    nbytes = conn.recv_stream(recv.on_chunk)
+                    result = decoder.finish(MessageKind.TASK_RESULT)
+                finally:
+                    if grace is not None:
+                        with contextlib.suppress(OSError):
+                            conn.settimeout(self.round_timeout_s)
             except _ClientLost:
                 raise
-            except (OSError, ConnectionError, sm.ProtocolError,
-                    ValueError, KeyError, struct_error) as exc:
-                raise _ClientLost(name, f"uplink failed: {exc}") from exc
+            except TimeoutError as exc:
+                if grace is None or stage == "grant":
+                    raise _ClientLost(
+                        name, f"uplink timed out at {stage}: {exc}",
+                        poisoned=folded[0] > 0) from exc
+                raise _Straggled(name, stage,
+                                 poisoned=folded[0] > 0) from exc
+            except (OSError, ConnectionError) as exc:
+                raise _ClientLost(name, f"uplink failed: {exc}",
+                                  poisoned=folded[0] > 0) from exc
+            except (sm.ProtocolError, ValueError, KeyError,
+                    struct_error) as exc:
+                # includes WireIntegrityError from crc32: corrupted
+                # payload bytes quarantine the sender, never the server
+                raise _ClientLost(name, f"uplink decode failed: {exc}",
+                                  poisoned=folded[0] > 0,
+                                  quarantine=True) from exc
             if sp is not None:
                 sp.args["nbytes"] = nbytes
         with self._lock:
@@ -414,52 +706,97 @@ class FederationServer:
     def _gather(self, roster: list[str],
                 rnd: int) -> tuple[dict[str, Any], list[str]]:
         """One round's aggregation with crash recovery; returns the new
-        global weights and the clients whose contribution is in them.
+        global weights and the clients whose contribution is in them, in
+        fold order.
 
-        Folds every roster client's uplink into a fresh aggregator. If a
-        client dies mid-uplink its partial items (and its ``begin``
-        sample weight) have poisoned the running sums, so the fold is
-        discarded wholesale and restarted over the surviving roster —
-        clients re-encode their cached result on the repeat grant, and
-        the dead client contributes exactly zero weight.
+        Without a quorum this is all-surviving-clients-or-restart: any
+        loss discards the fold (partial items / ``begin`` weight may be
+        in the running sums) and refolds over the survivors. With
+        ``"quorum"`` set, each uplink gets ``straggler_grace_s``; a
+        clean (un-poisoned) straggle just skips that client — the
+        streaming aggregator finishes early over the contributors it
+        has — while a poisoned one restarts the fold. If the roster is
+        exhausted below quorum, the server waits for straggler drains to
+        complete and re-grants them (clients cache the round's result),
+        giving up only when no straggler remains to wait for.
         """
-        survivors = list(roster)
-        while True:
-            if not survivors:
+        need_fixed = self._quorum_need(roster)
+        while True:  # one iteration per fold attempt
+            with self._lock:
+                queue = [n for n in roster
+                         if n in self._conns and n in self._tasked
+                         and not self._draining.get(n)]
+            need = len(queue) if need_fixed is None else need_fixed
+            if need_fixed is None and not queue:
                 raise RuntimeError(
                     f"round {rnd}: every client was lost; nothing to aggregate"
                 )
             agg = build_aggregator(self.agg_spec)
-            lost: dict[str, str] = {}
-            if self.uplink == "ordered":
-                for name in survivors:
-                    try:
-                        self._uplink_one(name, rnd, agg)
-                    except _ClientLost as exc:
-                        lost[name] = exc.why
-                        break  # the fold is poisoned — no point continuing
-            else:
+            contributed: list[str] = []
+            poisoned = False
+
+            if self.uplink == "concurrent":
+                failures: dict[str, Exception] = {}
+
                 def fold(name: str) -> None:
                     try:
                         self._uplink_one(name, rnd, agg)
-                    except _ClientLost as exc:
-                        lost[name] = exc.why
+                        contributed.append(name)
+                    except (_Straggled, _ClientLost) as exc:
+                        failures[name] = exc
 
                 threads = [threading.Thread(target=fold, args=(n,),
                                             daemon=True,
                                             name=f"fed-uplink-{n}")
-                           for n in survivors]
+                           for n in queue]
                 for t in threads:
                     t.start()
                 for t in threads:
                     t.join()
-            if not lost:
-                return agg.finish(), survivors
-            for name, why in lost.items():
-                self._drop(name, why)
-            survivors = [n for n in survivors if n not in lost]
-            with self._lock:
-                self.restarts += 1
+                for exc in failures.values():
+                    if isinstance(exc, _Straggled):
+                        self._mark_straggler(exc, rnd)
+                    else:
+                        self._lose(exc)
+                    # concurrent folds interleave arbitrarily: any
+                    # failure taints the shared sums
+                    poisoned = True
+            else:
+                while queue or len(contributed) < need:
+                    if not queue:
+                        ready = self._await_rejoin(roster, contributed)
+                        if not ready:
+                            break  # quorum unreachable — raise below
+                        queue.extend(ready)
+                        continue
+                    name = queue.pop(0)
+                    try:
+                        self._uplink_one(name, rnd, agg)
+                        contributed.append(name)
+                    except _Straggled as exc:
+                        self._mark_straggler(exc, rnd)
+                        if exc.poisoned:
+                            poisoned = True
+                            break
+                    except _ClientLost as exc:
+                        self._lose(exc)
+                        # without a quorum any loss restarts (the old
+                        # all-or-nothing contract); with one, a clean
+                        # loss just shrinks the contributor set
+                        if exc.poisoned or need_fixed is None:
+                            poisoned = True
+                            break
+
+            if poisoned:
+                with self._lock:
+                    self.restarts += 1
+                continue
+            if len(contributed) >= need:
+                return agg.finish(), contributed
+            raise RuntimeError(
+                f"round {rnd}: quorum unreachable — "
+                f"{len(contributed)}/{need} of {len(roster)} clients"
+            )
 
     # -- the round loop -----------------------------------------------------
     def run(self, init_weights: Mapping[str, Any]) -> dict[str, Any]:
@@ -473,13 +810,23 @@ class FederationServer:
         # the spec's kernel_backend selection applies to the whole run:
         # the server's fold kernels here, each client's quantize in its
         # own process (for_spec plumbs the same key)
-        with ctx, kernel_backend_scope(self.spec):
+        with ctx, obs_metrics.activate(self.metrics), \
+                kernel_backend_scope(self.spec):
+            with self._lock:
+                start = self._round  # > 0 when resuming
+                resume_weights = self._resume_weights
+                self._resume_weights = None
+            weights = (dict(resume_weights) if resume_weights is not None
+                       else dict(init_weights))
             self.wait_for_clients()
-            weights = dict(init_weights)
-            for rnd in range(self.rounds):
+            for rnd in range(start, self.rounds):
                 with self._lock:
                     self._round = rnd
-                    roster = [n for n in self._roster if n in self._conns]
+                    # stragglers still being drained sit this round out;
+                    # they rejoin the roster once their socket is clean
+                    roster = [n for n in self._roster
+                              if n in self._conns
+                              and not self._draining.get(n)]
                 if not roster:
                     raise RuntimeError(f"round {rnd}: no clients connected")
                 tr = obs_trace.ACTIVE
@@ -489,12 +836,23 @@ class FederationServer:
                 t0 = time.monotonic()
                 with span:
                     active = self._downlink(roster, rnd, weights)
+                    with self._lock:
+                        self._tasked = set(active)
                     weights, contributed = self._gather(active, rnd)
                 self.round_log.append({
                     "round": rnd,
                     "clients": contributed,
+                    "stragglers": [n for n in active if n not in contributed],
                     "wall_s": round(time.monotonic() - t0, 6),
                 })
+                if self.checkpoint_dir:
+                    # atomic persist *before* the epoch advances: a crash
+                    # between the two resumes at this round's successor
+                    # with exactly this round's weights
+                    save_server_state(
+                        self.checkpoint_dir, rnd, weights,
+                        meta={"roster": roster, "contributors": contributed,
+                              "round_log": self.round_log})
                 with self._lock:
                     self._round = rnd + 1
             with self._lock:
@@ -523,7 +881,10 @@ class FederationClient:
                  address: tuple[str, int], fingerprint: str,
                  epoch: int = 0, chunk_size: int = 1 << 20,
                  timeout_s: Optional[float] = None,
-                 kernel_backend: Optional[str] = None) -> None:
+                 kernel_backend: Optional[str] = None,
+                 max_reconnects: int = 0,
+                 backoff_base_s: float = 0.25,
+                 backoff_cap_s: float = 10.0) -> None:
         self.name = name
         self.executor = executor
         self.pipelines = dict(pipelines)
@@ -533,7 +894,13 @@ class FederationClient:
         self.chunk_size = chunk_size
         self.timeout_s = timeout_s
         self.kernel_backend = kernel_backend
+        self.max_reconnects = int(max_reconnects)
+        self.backoff_base_s = backoff_base_s
+        self.backoff_cap_s = backoff_cap_s
         self.rounds_done = 0
+        self.faults = {"reconnects": 0}
+        # per-process adaptive uplink encode-ahead (bitwise-stable depth)
+        self.encode_ahead = sm.AdaptiveEncodeAhead()
 
     @classmethod
     def for_spec(cls, spec: Mapping[str, Any], index: int,
@@ -554,13 +921,48 @@ class FederationClient:
             chunk_size=int(spec["chunk_mb"] * (1 << 20)),
             timeout_s=timeout_s,
             kernel_backend=spec.get("kernel_backend"),
+            max_reconnects=int(spec.get("max_reconnects") or 0),
         )
 
     def run(self) -> int:
         """Participate until the server says ``done``; returns the number
-        of rounds this client's results were (last) granted for."""
+        of rounds this client's results were (last) granted for.
+
+        Transient transport failures (connection refused/reset, socket
+        timeout, torn frames) reconnect with capped exponential backoff
+        plus deterministic jitter, up to ``max_reconnects`` attempts per
+        run; a structured ``stale-epoch`` reject is a redirect — retry
+        immediately at the server's round. Either way the client rejoins
+        at the server's current epoch and participates from the next
+        downlink (the executor is a pure function of (params, round), so
+        a re-executed round reproduces its result bitwise)."""
         with kernel_backend_scope({"kernel_backend": self.kernel_backend}):
-            return self._run()
+            attempt = 0
+            redirects = 0
+            # seeded by name: reproducible per-client jitter, decorrelated
+            # across the fleet (str seeding hashes deterministically)
+            rng = random.Random(self.name)
+            while True:
+                try:
+                    return self._run()
+                except _StaleEpoch as exc:
+                    redirects += 1
+                    if redirects > 64:
+                        raise RuntimeError(
+                            f"{self.name}: {redirects} stale-epoch redirects; "
+                            "the server is advancing past every rejoin")
+                    self.epoch = int(exc.round)
+                    time.sleep(0.02)
+                except (ConnectionError, TimeoutError, OSError,
+                        sm.ProtocolError) as exc:
+                    attempt += 1
+                    self.faults["reconnects"] = attempt
+                    if attempt > self.max_reconnects:
+                        raise
+                    delay = min(self.backoff_cap_s,
+                                self.backoff_base_s * 2.0 ** (attempt - 1))
+                    delay *= 0.5 + rng.random() / 2.0
+                    time.sleep(delay)
 
     def _run(self) -> int:
         sock = socket.create_connection(self.address)
@@ -569,9 +971,20 @@ class FederationClient:
         try:
             conn.send_ctrl({"type": "hello", "client": self.name,
                             "epoch": self.epoch, "proto": PROTO,
-                            "fingerprint": self.fingerprint})
+                            "fingerprint": self.fingerprint,
+                            "reconnects": self.faults["reconnects"]})
             resp = conn.recv_ctrl()
             if resp.get("type") != "welcome":
+                code = resp.get("code")
+                if code == "stale-epoch" and "round" in resp:
+                    raise _StaleEpoch(int(resp["round"]))
+                if code == "duplicate":
+                    # our dead predecessor socket still occupies the slot;
+                    # the server sheds it when round traffic next touches
+                    # it — retry through the backoff loop
+                    raise ConnectionError(
+                        f"{self.name}: predecessor connection still "
+                        "registered; retrying")
                 raise RuntimeError(
                     f"{self.name}: server rejected the handshake: "
                     f"{resp.get('reason', resp)}"
@@ -624,15 +1037,102 @@ class FederationClient:
         # overlaps the socket write of item k (same wire bytes)
         sm.ContainerStreamer(
             sm.ConnectionDriver(conn), self.chunk_size,
-            prefetch=sm.DEFAULT_ENCODE_AHEAD,
+            prefetch=self.encode_ahead,
         ).send_items(
             pipeline.iter_encode_views(msg, ctx), pipeline.n_items(msg)
         )
 
 
 # ---------------------------------------------------------------------------
+# Sequential reference over recorded contributor sets
+# ---------------------------------------------------------------------------
+
+def _wire_roundtrip(pipeline: WirePipeline, msg: Message, kind: MessageKind,
+                    chunk_size: int, sink: Optional[Any] = None) -> Message:
+    """Encode → chunk → decode one message through a loopback driver —
+    the exact arithmetic path of a live transfer, minus the socket."""
+    decoder = pipeline.decoder(sink=sink)
+    recv = sm.ContainerReceiver(consume=decoder.on_item,
+                                decode_item=decoder.decode_item)
+    driver = sm.LoopbackDriver()
+    driver.connect(recv.on_chunk)
+    msg, ctx = pipeline.begin_encode(msg)
+    sm.ContainerStreamer(driver, chunk_size).send_items(
+        pipeline.iter_encode_views(msg, ctx), pipeline.n_items(msg))
+    return decoder.finish(kind)
+
+
+def reference_run(spec: Mapping[str, Any], rosters: list[list[str]],
+                  init: Optional[Mapping[str, Any]] = None) -> dict[str, Any]:
+    """Replay a federation sequentially over recorded contributor sets.
+
+    ``rosters[r]`` is round ``r``'s contributor list *in fold order* —
+    exactly what the live server records in ``round_log[r]["clients"]``.
+    Each round downlinks through the task_data pipeline, executes the
+    client's (pure, round-keyed) local training, and folds the uplink
+    through the task_result pipeline into the same streaming aggregator,
+    in the same order — so the result is **bitwise-equal** to a live run
+    whose effective contributor sets matched, whatever chaos (stragglers,
+    reconnects, quarantines, restarts) produced them. ``--verify-chaos``
+    asserts this; ``tests/test_chaos.py`` leans on it throughout."""
+    spec = live_spec(spec)
+    chunk = int(spec["chunk_mb"] * (1 << 20))
+    pipelines = build_pipelines_from_spec(spec)
+    executors = {f"site-{i}": build_client_executor(spec, i)
+                 for i in range(int(spec["clients"]))}
+    weights = dict(initial_weights(spec) if init is None else init)
+    with kernel_backend_scope(spec):
+        for rnd, roster in enumerate(rosters):
+            agg = build_aggregator(aggregator_spec(spec))
+            for name in roster:
+                task = make_task(rnd, weights)
+                task.headers.setdefault("client", name)
+                task = _wire_roundtrip(pipelines["task_data"], task,
+                                       MessageKind.TASK_DATA, chunk)
+                result = executors[name].execute(task)
+                msg = Message(result.kind, dict(result.payload),
+                              dict(result.headers))
+                _wire_roundtrip(pipelines["task_result"], msg,
+                                MessageKind.TASK_RESULT, chunk, sink=agg)
+            weights = agg.finish()
+    return weights
+
+
+# ---------------------------------------------------------------------------
 # Orchestration: spawn subprocess clients + run the server
 # ---------------------------------------------------------------------------
+
+def _reap(procs: list[subprocess.Popen],
+          deadline_s: float) -> list[Optional[int]]:
+    """Reap every subprocess against ONE shared deadline.
+
+    First pass waits (bounded by what's left of the deadline) and
+    escalates to ``terminate()`` on expiry; the second pass gives
+    terminated processes a short window to exit, then ``kill()``s and
+    always reaps — no zombie survives, and a fleet of wedged clients
+    costs one deadline, not one per client."""
+    if not procs:
+        return []
+    codes: list[Optional[int]] = [None] * len(procs)
+    deadline = time.monotonic() + deadline_s
+    for i, p in enumerate(procs):
+        try:
+            codes[i] = p.wait(timeout=max(0.0, deadline - time.monotonic()))
+        except subprocess.TimeoutExpired:
+            with contextlib.suppress(OSError):
+                p.terminate()
+    kill_at = time.monotonic() + 5.0
+    for i, p in enumerate(procs):
+        if codes[i] is not None:
+            continue
+        try:
+            codes[i] = p.wait(timeout=max(0.0, kill_at - time.monotonic()))
+        except subprocess.TimeoutExpired:
+            with contextlib.suppress(OSError):
+                p.kill()
+            codes[i] = p.wait()
+    return codes
+
 
 def _client_cmd(spec_path: str, index: int, address: tuple[str, int]) -> list[str]:
     return [
@@ -663,6 +1163,8 @@ def run_live_federation(
     join_timeout_s: float = 120.0,
     round_timeout_s: float = 600.0,
     spawn: bool = True,
+    checkpoint_dir: Optional[str] = None,
+    resume: bool = False,
 ) -> dict[str, Any]:
     """Run one real federation: server in this process, clients as
     subprocesses (``spawn=True``) or left to the caller (``spawn=False``
@@ -670,40 +1172,49 @@ def run_live_federation(
     which in-process tests also use, running :class:`FederationClient`
     on threads).
 
-    Returns final weights, the per-round log (participants + wall
-    seconds), wire byte totals, and the clients' exit codes.
+    A ``"chaos"`` spec block (``{client_name: fault_plan}``) routes each
+    named client through its own :class:`ChaosProxy` with that plan —
+    the fault-injection harness for tests and the chaos-smoke CI job.
+    The chaos block never reaches the subprocess spec (clients must not
+    know they are being sabotaged).
+
+    Returns final weights, the per-round log (contributors, stragglers,
+    wall seconds), wire byte totals, fault counters, the telemetry
+    snapshot, and the clients' exit codes.
     """
     spec = live_spec(spec, clients=clients, rounds=rounds)
     server = FederationServer(
         spec, host=host, port=port, uplink=uplink,
         join_timeout_s=join_timeout_s, round_timeout_s=round_timeout_s,
+        checkpoint_dir=checkpoint_dir, resume=resume,
     ).start()
     procs: list[subprocess.Popen] = []
+    proxies: dict[str, ChaosProxy] = {}
     spec_path: Optional[str] = None
     t0 = time.monotonic()
     try:
         if spawn:
+            for name, plan in dict(spec.get("chaos") or {}).items():
+                proxies[name] = ChaosProxy(server.address, plan).start()
             # subprocesses must see the *fully resolved* spec (clients /
             # rounds overrides included): the partition is keyed by the
             # client count, so a drifting spec would train on wrong data
             fd, spec_path = tempfile.mkstemp(suffix=".json",
                                              prefix="live_spec_")
             with os.fdopen(fd, "w") as fh:
-                json.dump({k: v for k, v in spec.items() if k != "trace"}, fh)
+                json.dump({k: v for k, v in spec.items()
+                           if k not in ("trace", "chaos")}, fh)
             for i in range(server.n_clients):
+                name = f"site-{i}"
+                addr = (proxies[name].address if name in proxies
+                        else server.address)
                 procs.append(subprocess.Popen(
-                    _client_cmd(spec_path, i, server.address),
+                    _client_cmd(spec_path, i, addr),
                     env=_client_env(),
                 ))
         final = server.run(initial_weights(spec))
         wall_s = time.monotonic() - t0
-        exit_codes = []
-        for p in procs:
-            try:
-                exit_codes.append(p.wait(timeout=60))
-            except subprocess.TimeoutExpired:
-                p.kill()
-                exit_codes.append(p.wait())
+        exit_codes = _reap(procs, 60.0)
         return {
             "final_weights": final,
             "address": server.address,
@@ -712,13 +1223,18 @@ def run_live_federation(
             "bytes_up": server.bytes_up,
             "restarts": server.restarts,
             "rejects": server.rejects,
+            "faults": server.faults,
+            "resumed_from": server.resumed_from,
+            "telemetry": server.metrics.snapshot(),
             "wall_s": round(wall_s, 6),
             "client_exit_codes": exit_codes,
         }
     finally:
-        for p in procs:
-            if p.poll() is None:
-                p.kill()
+        # always-reap: terminate-then-kill with one shared deadline, so
+        # a wedged fleet can't leak zombies or stall shutdown for 60s×N
+        _reap(procs, 5.0)
+        for proxy in proxies.values():
+            proxy.close()
         server.close()
         if spec_path is not None:
             with contextlib.suppress(OSError):
@@ -753,6 +1269,14 @@ def main(argv: Optional[list[str]] = None) -> int:
     ap.add_argument("--round-timeout", type=float, default=600.0)
     ap.add_argument("--no-spawn", action="store_true",
                     help="server only; clients connect from elsewhere")
+    ap.add_argument("--checkpoint-dir", default=None,
+                    help="atomically persist round epoch + global weights "
+                         "+ roster here after every round (overrides the "
+                         'spec\'s "checkpoint" key)')
+    ap.add_argument("--resume", action="store_true",
+                    help="restart from the newest checkpoint in "
+                         "--checkpoint-dir at round k+1 with "
+                         "bitwise-identical weights")
     ap.add_argument("--trace", metavar="OUT_JSON", default=None,
                     help="write the server's Chrome trace-event file "
                          "(open in Perfetto)")
@@ -761,6 +1285,11 @@ def main(argv: Optional[list[str]] = None) -> int:
     ap.add_argument("--verify-sim", action="store_true",
                     help="also run the sequential simulator on the same spec "
                          "and fail unless final weights are bitwise-equal")
+    ap.add_argument("--verify-chaos", action="store_true",
+                    help="replay the run's recorded per-round contributor "
+                         "sets sequentially (reference_run) and fail unless "
+                         "final weights are bitwise-equal — the equivalence "
+                         "check that survives stragglers/reconnects/resume")
     ap.add_argument("--client-index", type=int, default=None,
                     help="client mode: which roster slot this process is")
     ap.add_argument("--connect", metavar="HOST:PORT", default=None,
@@ -789,11 +1318,34 @@ def main(argv: Optional[list[str]] = None) -> int:
         host=args.host, port=args.port, uplink=args.uplink,
         join_timeout_s=args.join_timeout, round_timeout_s=args.round_timeout,
         spawn=not args.no_spawn,
+        checkpoint_dir=args.checkpoint_dir, resume=args.resume,
     )
     final = result.pop("final_weights")
     result["weights_sha256"] = hashlib.sha256(
         b"".join(np.asarray(final[k]).tobytes() for k in sorted(final))
     ).hexdigest()
+
+    if args.verify_chaos:
+        # the recorded contributor sets are the ground truth: replaying
+        # them sequentially must land on the same bits, whatever faults
+        # shaped them (a resumed run's restored round_log covers the
+        # pre-crash rounds too, so one check spans the server restart)
+        ref_spec = {k: v for k, v in live_spec(
+            spec, clients=args.clients, rounds=args.rounds).items()
+            if k not in ("trace", "chaos")}
+        rosters = [list(r["clients"]) for r in result.get("round_log", [])]
+        ref = reference_run(ref_spec, rosters)
+        equal = weights_bitwise_equal(final, ref)
+        result["chaos_ref_equal"] = equal
+        if not equal:
+            out = json.dumps(result, indent=1, default=str)
+            if args.json:
+                with open(args.json, "w") as fh:
+                    fh.write(out + "\n")
+            print(out)
+            print("FAIL: live weights differ from the sequential reference "
+                  "over the recorded contributor sets", file=sys.stderr)
+            return 1
 
     if args.verify_sim:
         from repro.fl.job import run_job

@@ -1,0 +1,505 @@
+"""Fault-tolerant live federation under injected chaos (ISSUE 10).
+
+Every scenario runs the real :class:`FederationServer` over localhost
+TCP with in-process :class:`FederationClient` threads, routing the
+afflicted client through a :class:`ChaosProxy` — real sockets, real
+protocol, deterministic byte-offset faults:
+
+* a **stalled** uplink past ``straggler_grace_s`` closes the round over
+  the contributors the server has (quorum mode), drains the late stream
+  on the side, and re-invites the straggler in a later round;
+* a **blackholed** connection reconnects with exponential backoff and
+  rejoins — the poisoned fold restarts over the survivors first;
+* a **corrupted** chunk (one flipped byte, caught by crc32/decode)
+  quarantines the *client* and restarts the fold — the server survives;
+* the server **checkpoint/resume** path reproduces the uninterrupted
+  run's weights bitwise.
+
+The equivalence oracle throughout: replaying the recorded per-round
+contributor sets sequentially through the same wire pipelines must land
+on the same bits as the live run, whatever faults shaped those sets.
+Satellites: the handshake timeout sheds mute sockets, ``_reap``
+escalates terminate→kill against one shared deadline, and the
+ChaosProxy primitives themselves are pinned.
+"""
+import socket
+import subprocess
+import sys
+import threading
+import time
+
+import numpy as np
+
+from repro.core import streaming as sm
+from repro.core.messages import Message, MessageKind
+from repro.core.resilience import ChaosProxy
+from repro.checkpoint import latest_server_state, save_server_state
+from repro.fl import TrainExecutor
+from repro.fl.aggregator import build_aggregator
+from repro.fl.controller import make_task
+from repro.launch.federation import (
+    FederationClient,
+    FederationServer,
+    _reap,
+    _wire_roundtrip,
+    aggregator_spec,
+    build_pipelines_from_spec,
+    live_spec,
+    weights_bitwise_equal,
+)
+
+STACK = ["quantize:blockwise8", "crc32"]
+
+# a payload big enough (16 KiB) that a fault offset of a few KiB lands
+# mid-uplink-stream — after the hello and the result control frame
+DIM = 4096
+W_TRUE = np.arange(1, DIM + 1, dtype=np.float32) / DIM
+INIT = {"w": np.zeros(DIM, np.float32)}
+
+
+def _executor(name, seed, sleep_s=0.0, dim=DIM):
+    w_true = W_TRUE[:dim]
+    rng = np.random.default_rng(seed)
+    X = rng.standard_normal((64, dim)).astype(np.float32)
+    y = X @ w_true
+
+    def train_fn(params, rnd):
+        if sleep_s:
+            time.sleep(sleep_s)
+        w = np.asarray(params["w"]).copy()
+        for _ in range(2):
+            w = w - 0.3 * (X.T @ (X @ w - y) / 64.0)
+        return {"w": w}, 64, {}
+
+    return TrainExecutor(name, train_fn)
+
+
+def _spec(clients=3, rounds=3, stack=(), **over):
+    spec = {"clients": clients, "rounds": rounds, "chunk_mb": 1,
+            "pipeline": {"task_data": list(stack),
+                         "task_result": list(stack)}}
+    spec.update(over)
+    return spec
+
+
+def _launch(server, executors, addresses=None, **kwargs):
+    """In-process clients on threads; ``addresses`` reroutes named
+    clients (e.g. through a ChaosProxy). Returns (threads, errors)."""
+    pipelines = build_pipelines_from_spec(server.spec)
+    errors, threads = [], []
+    for ex in executors:
+        client = FederationClient(
+            name=ex.name, executor=ex, pipelines=pipelines,
+            address=(addresses or {}).get(ex.name, server.address),
+            fingerprint=server.fingerprint, timeout_s=60.0, **kwargs,
+        )
+
+        def run(c=client):
+            try:
+                c.run()
+            except Exception as exc:  # noqa: BLE001 - surfaced by the test
+                errors.append(exc)
+
+        t = threading.Thread(target=run, daemon=True, name=f"chaos-{ex.name}")
+        t.start()
+        threads.append(t)
+    return threads, errors
+
+
+def _join(threads, timeout=60):
+    for t in threads:
+        t.join(timeout=timeout)
+        assert not t.is_alive(), "client thread wedged"
+
+
+def _replay(spec, make_executors, rosters, init):
+    """Sequential reference over recorded contributor sets: the same
+    wire pipelines, executors, and fold order as the live server — the
+    bitwise oracle for every chaos scenario (`reference_run` is this,
+    for spec-built executors)."""
+    spec = live_spec(spec)
+    chunk = int(spec["chunk_mb"] * (1 << 20))
+    pipelines = build_pipelines_from_spec(spec)
+    executors = {ex.name: ex for ex in make_executors()}
+    weights = dict(init)
+    for rnd, roster in enumerate(rosters):
+        agg = build_aggregator(aggregator_spec(spec))
+        for name in roster:
+            task = make_task(rnd, weights)
+            task.headers.setdefault("client", name)
+            task = _wire_roundtrip(pipelines["task_data"], task,
+                                   MessageKind.TASK_DATA, chunk)
+            result = executors[name].execute(task)
+            msg = Message(result.kind, dict(result.payload),
+                          dict(result.headers))
+            _wire_roundtrip(pipelines["task_result"], msg,
+                            MessageKind.TASK_RESULT, chunk, sink=agg)
+        weights = agg.finish()
+    return weights
+
+
+# ---------------------------------------------------------------------------
+# ChaosProxy primitives
+# ---------------------------------------------------------------------------
+
+def _echo_server():
+    srv = socket.create_server(("127.0.0.1", 0))
+
+    def serve(c):
+        with c:
+            while True:
+                data = c.recv(1 << 16)
+                if not data:
+                    return
+                c.sendall(data)
+
+    def accept():
+        while True:
+            try:
+                c, _ = srv.accept()
+            except OSError:
+                return
+            threading.Thread(target=serve, args=(c,), daemon=True).start()
+
+    threading.Thread(target=accept, daemon=True).start()
+    return srv
+
+
+def _roundtrip(addr, payload, want=None, timeout=10.0):
+    want = len(payload) if want is None else want
+    with socket.create_connection(addr, timeout=timeout) as s:
+        s.settimeout(timeout)
+        s.sendall(payload)
+        got = b""
+        while len(got) < want:
+            data = s.recv(1 << 16)
+            if not data:
+                break
+            got += data
+    return got
+
+
+def test_chaos_proxy_corrupt_flips_exactly_one_byte_then_runs_clean():
+    srv = _echo_server()
+    proxy = ChaosProxy(srv.getsockname(),
+                       {"kind": "corrupt", "after_bytes": 100,
+                        "xor": 0x01}).start()
+    try:
+        payload = bytes(range(256))
+        got = _roundtrip(proxy.address, payload)
+        assert len(got) == 256
+        assert got[100] == payload[100] ^ 0x01
+        assert got[:100] == payload[:100] and got[101:] == payload[101:]
+        # triggers budget spent: the next connection forwards untouched
+        assert _roundtrip(proxy.address, payload) == payload
+        assert proxy.connections == 2 and proxy.triggered == 1
+    finally:
+        proxy.close()
+        srv.close()
+
+
+def test_chaos_proxy_stall_delays_losslessly():
+    srv = _echo_server()
+    proxy = ChaosProxy(srv.getsockname(),
+                       {"kind": "stall", "after_bytes": 50,
+                        "stall_s": 0.5}).start()
+    try:
+        payload = bytes(200)
+        t0 = time.monotonic()
+        got = _roundtrip(proxy.address, payload)
+        assert time.monotonic() - t0 >= 0.4
+        assert got == payload  # a straggler, not data loss
+    finally:
+        proxy.close()
+        srv.close()
+
+
+def test_chaos_proxy_blackhole_drops_the_connection():
+    srv = _echo_server()
+    proxy = ChaosProxy(srv.getsockname(),
+                       {"kind": "blackhole", "after_bytes": 50}).start()
+    try:
+        got = _roundtrip(proxy.address, bytes(200), want=200)
+        assert len(got) <= 50  # stream died mid-flight
+    finally:
+        proxy.close()
+        srv.close()
+
+
+def test_chaos_proxy_throttle_paces_the_stream():
+    srv = _echo_server()
+    proxy = ChaosProxy(srv.getsockname(),
+                       {"kind": "throttle", "after_bytes": 0,
+                        "bps": 200_000}).start()
+    try:
+        # several 64 KiB pump batches, so the per-batch pacing sleep is
+        # felt by every batch after the first
+        payload = bytes(200_000)
+        t0 = time.monotonic()
+        got = _roundtrip(proxy.address, payload)
+        assert got == payload
+        assert time.monotonic() - t0 >= 0.3  # ~200 KB at 200 KB/s
+    finally:
+        proxy.close()
+        srv.close()
+
+
+def test_chaos_proxy_seeded_offset_is_deterministic():
+    a = ChaosProxy(("127.0.0.1", 1), {"kind": "stall", "seed": 7})
+    b = ChaosProxy(("127.0.0.1", 1), {"kind": "stall", "seed": 7})
+    c = ChaosProxy(("127.0.0.1", 1), {"kind": "stall", "seed": 8})
+    try:
+        assert a.plan["after_bytes"] == b.plan["after_bytes"]
+        assert a.plan["after_bytes"] != c.plan["after_bytes"]
+        assert (1 << 10) <= a.plan["after_bytes"] < (1 << 16)
+    finally:
+        a.close(), b.close(), c.close()
+
+
+# ---------------------------------------------------------------------------
+# scenario 1: straggler — quorum closes the round over the survivors
+# ---------------------------------------------------------------------------
+
+def test_straggler_quorum_round_finishes_with_survivors_bitwise():
+    """site-2's uplink stalls past the grace: the round closes over
+    site-0/site-1 (quorum 2 of 3), the late stream is drained and
+    discarded, site-2 is re-invited once its socket is clean, and the
+    final weights bitwise-match the sequential replay of exactly the
+    contributor sets the server recorded."""
+    spec = _spec(rounds=6, quorum=0.6, straggler_grace_s=0.6)
+
+    def executors():
+        return [_executor("site-0", 0, sleep_s=0.2),
+                _executor("site-1", 1, sleep_s=0.2),
+                _executor("site-2", 2)]
+
+    server = FederationServer(spec, join_timeout_s=30).start()
+    proxy = ChaosProxy(server.address,
+                       {"kind": "stall", "after_bytes": 2000,
+                        "stall_s": 1.2, "direction": "up"}).start()
+    try:
+        threads, errors = _launch(server, executors(),
+                                  addresses={"site-2": proxy.address})
+        live = server.run(dict(INIT))
+        _join(threads)
+        assert not errors
+    finally:
+        proxy.close()
+        server.close()
+
+    log = server.round_log
+    assert log[0]["clients"] == ["site-0", "site-1"]
+    assert log[0]["stragglers"] == ["site-2"]
+    assert server.faults["stragglers"].get("site-2", 0) >= 1
+    # drained straggler is re-invited once clean, not dropped for good
+    assert any("site-2" in r["clients"] for r in log[1:])
+    assert "site-2" not in server.faults["lost"]
+    ref = _replay(spec, executors, [r["clients"] for r in log], INIT)
+    assert weights_bitwise_equal(live, ref)
+
+
+# ---------------------------------------------------------------------------
+# scenario 2: blackhole — reconnect with backoff, rejoin, refold
+# ---------------------------------------------------------------------------
+
+def test_blackhole_reconnects_with_backoff_and_rejoins_bitwise():
+    """site-2's socket dies mid-uplink: the poisoned fold restarts over
+    the survivors, the client reconnects through backoff (the proxy's
+    trigger budget is spent, so the retry path is clean), rejoins at the
+    server's epoch, and contributes to later rounds."""
+    spec = _spec(rounds=4)
+
+    def executors():
+        return [_executor(f"site-{i}", i, sleep_s=0.15) for i in range(3)]
+
+    server = FederationServer(spec, join_timeout_s=30).start()
+    proxy = ChaosProxy(server.address,
+                       {"kind": "blackhole", "after_bytes": 2000,
+                        "direction": "up"}).start()
+    try:
+        threads, errors = _launch(server, executors(),
+                                  addresses={"site-2": proxy.address},
+                                  max_reconnects=8, backoff_base_s=0.05)
+        live = server.run(dict(INIT))
+        _join(threads)
+        assert not errors  # the client survived via reconnect
+    finally:
+        proxy.close()
+        server.close()
+
+    log = server.round_log
+    assert log[0]["clients"] == ["site-0", "site-1"]
+    assert server.restarts >= 1  # the poisoned fold was discarded
+    assert server.faults["reconnects"].get("site-2", 0) >= 1
+    assert "site-2" in log[-1]["clients"]
+    ref = _replay(spec, executors, [r["clients"] for r in log], INIT)
+    assert weights_bitwise_equal(live, ref)
+
+
+# ---------------------------------------------------------------------------
+# scenario 3: corrupt — crc32 quarantines the client, not the server
+# ---------------------------------------------------------------------------
+
+def test_corrupt_chunk_quarantines_client_and_the_fold_restarts():
+    """One flipped byte in site-2's uplink payload: the integrity stage
+    (crc32) rejects the item, the server quarantines site-2 and restarts
+    the fold over the survivors — the decode error never kills the
+    server, and the reconnecting client participates again later."""
+    spec = _spec(rounds=4, stack=STACK)
+
+    def executors():
+        return [_executor(f"site-{i}", i, sleep_s=0.15) for i in range(3)]
+
+    server = FederationServer(spec, join_timeout_s=30).start()
+    proxy = ChaosProxy(server.address,
+                       {"kind": "corrupt", "after_bytes": 2600,
+                        "direction": "up"}).start()
+    try:
+        threads, errors = _launch(server, executors(),
+                                  addresses={"site-2": proxy.address},
+                                  max_reconnects=8, backoff_base_s=0.05)
+        live = server.run(dict(INIT))
+        _join(threads)
+        assert not errors
+    finally:
+        proxy.close()
+        server.close()
+
+    log = server.round_log
+    assert log[0]["clients"] == ["site-0", "site-1"]
+    assert "site-2" in server.faults["quarantined"]
+    assert server.restarts >= 1
+    assert "site-2" in log[-1]["clients"]
+    ref = _replay(spec, executors, [r["clients"] for r in log], INIT)
+    assert weights_bitwise_equal(live, ref)
+
+
+# ---------------------------------------------------------------------------
+# scenario 4: checkpoint / resume — bitwise-identical restart
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_resume_reproduces_uninterrupted_weights_bitwise(tmp_path):
+    """Kill-and-resume equals never-killed: run rounds 0..1 with
+    checkpointing, restart a fresh server with ``resume=True`` for the
+    full schedule, and the final weights are bitwise-equal to one
+    uninterrupted run — and to the sequential replay of the stitched
+    round log that spans the restart."""
+    def executors():
+        return [_executor(f"site-{i}", i, dim=256) for i in range(3)]
+
+    init = {"w": np.zeros(256, np.float32)}
+    full = _spec(rounds=4, stack=STACK)
+
+    # the uninterrupted reference
+    ref_server = FederationServer(full, join_timeout_s=30).start()
+    try:
+        threads, errors = _launch(ref_server, executors())
+        uninterrupted = ref_server.run(dict(init))
+        _join(threads)
+        assert not errors
+    finally:
+        ref_server.close()
+
+    # the interrupted run: rounds 0..1, checkpointed...
+    ckpt = str(tmp_path / "ckpt")
+    first = FederationServer(_spec(rounds=2, stack=STACK), join_timeout_s=30,
+                             checkpoint_dir=ckpt).start()
+    try:
+        threads, errors = _launch(first, executors())
+        first.run(dict(init))
+        _join(threads)
+        assert not errors
+    finally:
+        first.close()
+
+    # ...then a fresh server resumes at round 2 (fresh clients present
+    # epoch 0 and are redirected to the restart epoch by the handshake)
+    second = FederationServer(full, join_timeout_s=30,
+                              checkpoint_dir=ckpt, resume=True).start()
+    try:
+        threads, errors = _launch(second, executors())
+        resumed = second.run(dict(init))
+        _join(threads)
+        assert not errors
+    finally:
+        second.close()
+
+    assert second.resumed_from == 1
+    assert [r["round"] for r in second.round_log] == [0, 1, 2, 3]
+    assert weights_bitwise_equal(resumed, uninterrupted)
+    # one replay spans the restart: the restored round_log covers the
+    # pre-crash rounds, so --verify-chaos works on resumed runs too
+    ref = _replay(full, executors,
+                  [r["clients"] for r in second.round_log], init)
+    assert weights_bitwise_equal(resumed, ref)
+
+
+def test_server_state_checkpoints_are_atomic_pruned_and_torn_tolerant(tmp_path):
+    d = str(tmp_path)
+    w = {"a.b": np.arange(6, dtype=np.float32), "c": np.ones(3, np.int32)}
+    for rnd in range(5):
+        save_server_state(d, rnd, w, meta={"roster": ["site-0"]}, keep=3)
+    names = sorted(p.name for p in tmp_path.iterdir())
+    assert names == [  # pruned to the newest three complete pairs
+        "round_000002.ckpt", "round_000002.json",
+        "round_000003.ckpt", "round_000003.json",
+        "round_000004.ckpt", "round_000004.json",
+    ]
+    # torn leftovers from a crash mid-write are skipped, not fatal
+    (tmp_path / "round_000005.json").write_text("{not json")
+    state = latest_server_state(d)
+    assert state["round"] == 4
+    assert state["meta"]["roster"] == ["site-0"]
+    # weights load flat (dotted wire names intact), bitwise
+    assert weights_bitwise_equal(state["weights"], w)
+
+
+# ---------------------------------------------------------------------------
+# satellites: handshake timeout, subprocess reaping
+# ---------------------------------------------------------------------------
+
+def test_mute_connection_is_shed_without_disturbing_the_round():
+    spec = _spec(clients=2, rounds=2)
+    server = FederationServer(spec, join_timeout_s=30,
+                              handshake_timeout_s=0.3).start()
+    try:
+        mute = socket.create_connection(server.address)  # never says hello
+        threads, errors = _launch(
+            server, [_executor(f"site-{i}", i, sleep_s=0.2)
+                     for i in range(2)])
+        live = server.run(dict(INIT))
+        _join(threads)
+        assert not errors
+        # the mute socket was closed by the server, not left holding an
+        # accept thread hostage for round_timeout_s
+        mute.settimeout(10.0)
+        assert mute.recv(1) == b""
+        mute.close()
+    finally:
+        server.close()
+    assert server.faults["handshake_timeouts"] == 1
+    assert [r["clients"] for r in server.round_log] == [
+        ["site-0", "site-1"]] * 2
+    assert live["w"].shape == (DIM,)
+
+
+def test_reap_escalates_terminate_then_kill_against_one_deadline():
+    quick = subprocess.Popen([sys.executable, "-c", "pass"])
+    stuck = subprocess.Popen([
+        sys.executable, "-c",
+        "import signal, time\n"
+        "signal.signal(signal.SIGTERM, signal.SIG_IGN)\n"
+        "print('armed', flush=True)\n"
+        "time.sleep(60)",
+    ], stdout=subprocess.PIPE)
+    stuck.stdout.readline()  # SIGTERM handler installed
+    t0 = time.monotonic()
+    codes = _reap([quick, stuck], 0.5)
+    wall = time.monotonic() - t0
+    stuck.stdout.close()
+    assert codes[0] == 0
+    # terminate() was ignored, so the second pass had to kill(); either
+    # way the zombie is reaped and the exit code is real
+    assert codes[1] is not None and codes[1] != 0
+    assert quick.poll() is not None and stuck.poll() is not None
+    assert wall < 15.0  # one shared deadline + one bounded kill window

@@ -190,6 +190,42 @@ def test_wire_bytes_bitwise_identical_with_prefetch(stack):
                                 prefetch=depth) == baseline
 
 
+def test_adaptive_encode_ahead_grows_only_under_observed_stalls():
+    a = sm.AdaptiveEncodeAhead(depth=2, max_depth=5, grow_threshold=0.10)
+    assert a.depth == 2
+    a.observe(0.05, 1.0)  # 5% stall: the socket is the bottleneck
+    assert a.depth == 2 and a.grown == 0
+    for _ in range(10):
+        a.observe(0.5, 1.0)  # encoder-bound transfers: +1 each, capped
+    assert a.depth == 5 and a.grown == 3
+    a.observe(1.0, 0.0)  # degenerate wall time: ignored
+    assert a.depth == 5
+    assert sm.AdaptiveEncodeAhead().depth == sm.DEFAULT_ENCODE_AHEAD
+
+
+def test_adaptive_encode_ahead_publishes_depth_gauge():
+    reg = MetricsRegistry()
+    a = sm.AdaptiveEncodeAhead(depth=3)
+    with obs_metrics.activate(reg):
+        a.observe(1.0, 1.0)
+    assert a.depth == 4
+    assert reg.gauge("wire.encode_ahead_depth").as_value() == 4
+
+
+def test_adaptive_prefetch_wire_bytes_bitwise_identical():
+    """An AdaptiveEncodeAhead controller re-reads its depth per transfer
+    and feeds stalls back — and whatever depth it lands on, the wire
+    bytes stay bitwise-identical to the sequential loop."""
+    stack = ["quantize:nf4", "zlib", "crc32"]
+    baseline = _container_bytes(pl.build_pipeline(list(stack)), prefetch=0)
+    # threshold 0 forces growth after every transfer, so the rounds in
+    # one capture run at different depths — bytes must not care
+    adaptive = sm.AdaptiveEncodeAhead(depth=1, grow_threshold=0.0)
+    got = _container_bytes(pl.build_pipeline(list(stack)), prefetch=adaptive)
+    assert got == baseline
+    assert adaptive.grown >= 1
+
+
 def test_delta_stage_decodes_correctly_under_lookahead():
     """Two delta rounds (snapshot, then residual) through a prefetching
     streamer decode back to the exact original tensors."""
